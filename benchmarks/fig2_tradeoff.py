@@ -1,0 +1,121 @@
+"""Paper Figure 2: accuracy vs memory-reduction trade-off — Representer
+Sketch against iterative pruning and knowledge distillation baselines.
+
+Baselines (as in the paper §4.2):
+  * One-/multi-time global magnitude pruning of the trained MLP + finetune.
+  * Knowledge distillation into smaller MLPs (Hinton-style, MSE on logits).
+Sketch sweeps L (rows) to move along the memory axis.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DistillConfig, KernelModel, KernelModelConfig,
+                        distill, mlp_memory_params)
+from repro.core.distill import _adam_init, _adam_update
+from repro.core.teacher import MLPConfig, init_mlp, mlp_forward, train_mlp
+from repro.data.tabular import DATASETS, make_dataset
+
+
+def _acc(params, x, y):
+    return float(jnp.mean(jnp.argmax(mlp_forward(params, x), -1) == y))
+
+
+def _prune(params, frac: float):
+    """Global magnitude pruning: zero the lowest-|w| fraction of weights."""
+    flat = jnp.concatenate([p["w"].ravel() for p in params])
+    thresh = jnp.quantile(jnp.abs(flat), frac)
+    return [{"w": jnp.where(jnp.abs(p["w"]) < thresh, 0.0, p["w"]),
+             "b": p["b"]} for p in params]
+
+
+def _finetune(params, x, y, mask, steps=300, lr=1e-3):
+    opt = _adam_init(params)
+
+    def loss_fn(p, xb, yb):
+        logp = jax.nn.log_softmax(mlp_forward(p, xb))
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+    @jax.jit
+    def step(carry, key):
+        p, o = carry
+        idx = jax.random.randint(key, (256,), 0, x.shape[0])
+        _, g = jax.value_and_grad(loss_fn)(p, x[idx], y[idx])
+        g = jax.tree.map(lambda gi, mi: gi * mi, g, mask)  # keep zeros pruned
+        p, o = _adam_update(p, g, o, lr, 0.0)
+        return (p, o), None
+
+    keys = jax.random.split(jax.random.PRNGKey(0), steps)
+    (params, _), _ = jax.lax.scan(step, (params, opt), keys)
+    return params
+
+
+def run(dataset: str = "adult", seed: int = 0) -> List[Dict]:
+    spec = DATASETS[dataset]
+    xtr, ytr, xte, yte = make_dataset(spec, seed=seed)
+    xtr, ytr = jnp.asarray(xtr[:12000]), jnp.asarray(ytr[:12000])
+    xte, yte = jnp.asarray(xte[:3000]), jnp.asarray(yte[:3000])
+
+    mlp_cfg = MLPConfig(spec.n_features, spec.nn_hidden, 2)
+    teacher, _ = train_mlp(jax.random.PRNGKey(seed), mlp_cfg, xtr, ytr,
+                           n_steps=1200)
+    base_mem = mlp_memory_params(mlp_cfg.layer_sizes)
+    rows = [{"method": "NN", "reduction": 1.0, "acc": _acc(teacher, xte, yte)}]
+
+    # --- pruning curve -------------------------------------------------------
+    for frac in (0.5, 0.8, 0.9, 0.95, 0.98, 0.99):
+        pruned = _prune(teacher, frac)
+        mask = [{"w": (p["w"] != 0).astype(jnp.float32),
+                 "b": jnp.ones_like(p["b"])} for p in pruned]
+        tuned = _finetune(pruned, xtr, ytr, mask)
+        rows.append({"method": "prune", "reduction": 1.0 / (1.0 - frac),
+                     "acc": _acc(tuned, xte, yte)})
+
+    # --- KD curve ------------------------------------------------------------
+    for hidden in ((64, 32), (24, 12), (8, 4)):
+        student_cfg = MLPConfig(spec.n_features, hidden, 2)
+        student = init_mlp(jax.random.PRNGKey(seed + 3), student_cfg)
+        opt = _adam_init(student)
+        targets = mlp_forward(teacher, xtr)
+
+        def loss_fn(p, xb, tb):
+            return jnp.mean((mlp_forward(p, xb) - tb) ** 2)
+
+        @jax.jit
+        def step(carry, key):
+            p, o = carry
+            idx = jax.random.randint(key, (256,), 0, xtr.shape[0])
+            _, g = jax.value_and_grad(loss_fn)(p, xtr[idx], targets[idx])
+            p, o = _adam_update(p, g, o, 1e-3, 0.0)
+            return (p, o), None
+
+        keys = jax.random.split(jax.random.PRNGKey(1), 1500)
+        (student, _), _ = jax.lax.scan(step, (student, opt), keys)
+        red = base_mem / mlp_memory_params(student_cfg.layer_sizes)
+        rows.append({"method": "kd", "reduction": red,
+                     "acc": _acc(student, xte, yte)})
+
+    # --- Representer Sketch curve --------------------------------------------
+    model = KernelModel(KernelModelConfig(
+        in_dim=spec.n_features, proj_dim=16, n_points=256, n_outputs=2,
+        bandwidth=2.0, k=spec.rs_K))
+    kparams, _ = distill(jax.random.PRNGKey(seed + 1),
+                         lambda x: mlp_forward(teacher, x), xtr, model,
+                         DistillConfig(n_steps=1500, lr=5e-3))
+    for n_rows in (2000, 800, 300, 100, 40):
+        sk, state = model.freeze(jax.random.PRNGKey(seed + 2), kparams,
+                                 n_rows=n_rows, n_buckets=16)
+        out = sk.query(state, model.transform(kparams, xte))
+        acc = float(jnp.mean(jnp.argmax(out, -1) == yte))
+        red = base_mem / model.sketch_memory_params(n_rows, 16)
+        rows.append({"method": "sketch", "reduction": red, "acc": acc})
+
+    for r in rows:
+        print(f"  {r['method']:7s} reduction {r['reduction']:7.1f}x "
+              f"acc {r['acc']:.3f}")
+    return rows

@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: pure-jnp reference paths, us/call on CPU.
+
+Pallas timings in interpret mode are not TPU-representative and are
+excluded; the TPU-relevant cost model for the kernels is the roofline math
+in sketch_head_bench / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lsh_hash.ref import lsh_hash_ref
+from repro.kernels.race_query.ref import race_query_ref
+from repro.kernels.race_update.ref import race_update_ref
+from repro.kernels.sketch_head.ref import sketch_head_ref
+
+
+def _time(fn, *args, n=30):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    b, d, l, k, r, c, m, v = 128, 64, 400, 2, 16, 2, 1024, 4096
+    x = jax.random.normal(key, (b, d))
+    w = jax.random.normal(key, (l, k, d))
+    bias = jax.random.uniform(key, (l, k))
+    sketch = jax.random.normal(key, (c, l, r))
+    idx = jax.random.randint(key, (b, l), 0, r)
+    alphas = jax.random.normal(key, (m, c))
+    midx = jax.random.randint(key, (m, l), 0, r)
+    hsk = jax.random.normal(key, (l, r, v))
+
+    rows = {
+        "lsh_hash": _time(jax.jit(
+            lambda xx: lsh_hash_ref(xx, w, bias, 1.0, r)), x),
+        "race_query": _time(jax.jit(
+            lambda ss, ii: race_query_ref(ss, ii, 8)), sketch, idx),
+        "race_update": _time(jax.jit(
+            lambda ii, aa: race_update_ref(jnp.zeros((c, l, r)), ii, aa)),
+            midx, alphas),
+        "sketch_head": _time(jax.jit(
+            lambda ss, ii: sketch_head_ref(ss, ii)), hsk, idx),
+    }
+    for name, us in rows.items():
+        print(f"  {name:12s} {us:10.1f} us/call")
+    return rows

@@ -1,0 +1,101 @@
+"""§Roofline: three-term analysis per (arch × shape × mesh) from the dry-run.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and computes,
+per cell, **per-device seconds** for
+
+    compute    = HLO_dot_FLOPs / peak_FLOPs          (197 TF bf16 / chip)
+    memory     = HLO_bytes_accessed / HBM_bw         (819 GB/s / chip)
+    collective = collective_bytes / ICI_bw           (~50 GB/s per link;
+                 a 2D-torus chip drives ~4 links → 200 GB/s injection,
+                 we report the conservative single-link figure too)
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the useful-
+compute ratio MODEL/HLO.  The dominant term is the bottleneck the §Perf
+loop iterates on.  NOTE: the CPU backend upcasts bf16 arithmetic to f32
+before SPMD partitioning, so byte-based terms are ≤2× above their TPU
+deployment values for activation traffic (dtype noted in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.models.config import active_param_count, param_count
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e-class target)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_LINK = 50e9              # bytes/s per link
+ICI_LINKS = 4                # usable links per chip on a 2D torus
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    seq, batch, kind = SHAPES[shape]
+    n = active_param_count(cfg)
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence (+ attention reads, excluded from the
+    # 2·N model since they're memory- not FLOP-dominated)
+    return 2.0 * n * batch
+
+
+def analyze_cell(path: Path) -> dict:
+    r = json.loads(path.read_text())
+    chips = r["n_devices"]
+    comp = r["flops"] / PEAK_FLOPS
+    # bf16-adjusted bytes when available (CPU backend f32-legalizes bf16
+    # before the HLO we parse; raw bytes kept in the JSON for reference).
+    mem = r.get("bytes_bf16adj", r["bytes_accessed"]) / HBM_BW
+    coll = r["collective_bytes"]["total"] / (ICI_LINK * ICI_LINKS)
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+              key=lambda t: t[1])
+    mf = model_flops(r["arch"], r["shape"]) / chips
+    return {
+        **{k: r[k] for k in ("arch", "shape", "mesh", "n_devices")},
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "bottleneck": dom[0], "step_lower_bound_s": dom[1],
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / r["flops"] if r["flops"] else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / dom[1] if dom[1] else 0.0,
+        "temp_bytes": r["memory_analysis"]["temp_size_bytes"],
+    }
+
+
+def run(mesh: str = "single", write_md: bool = True):
+    rows = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        try:
+            rows.append(analyze_cell(p))
+        except Exception as e:  # noqa: BLE001
+            print(f"  skip {p.name}: {e!r}")
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"  {'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'bottleneck':>10s} {'useful':>7s} {'roofl%':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"  {r['arch']:22s} {r['shape']:12s} {r['compute_s']:9.4f} "
+              f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+              f"{r['bottleneck']:>10s} {r['useful_ratio']:7.2f} "
+              f"{100 * r['roofline_fraction']:6.1f}%")
+    if write_md and rows:
+        out = RESULTS.parent / f"roofline_{mesh}.md"
+        lines = ["| arch | shape | compute s | memory s | collective s | "
+                 "bottleneck | useful ratio | roofline % |",
+                 "|---|---|---|---|---|---|---|---|"]
+        for r in rows:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+                f"{100 * r['roofline_fraction']:.1f}% |")
+        out.write_text("\n".join(lines) + "\n")
+        print(f"  wrote {out}")
+    return rows

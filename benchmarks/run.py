@@ -1,0 +1,103 @@
+"""Benchmark harness — one section per paper table/figure + framework perf.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast|--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines at the end for machine
+consumption, with human-readable sections above.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: table1,fig2,thm2,sketch_head,kernels,"
+                         "roofline")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale budgets (slower)")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+    csv_rows = []
+
+    def want(name):
+        return not only or name in only
+
+    if want("table1"):
+        print("== Table 1: accuracy / memory / FLOPs (NN vs Kernel vs RS) ==")
+        from benchmarks import table1_repro
+        budget = dict(table1_repro.FAST)
+        if args.full:
+            budget.update(nn_steps=4000, distill_steps=5000, n_points=512,
+                          rows=2000, train_cap=10**9, test_cap=10**9)
+        t0 = time.time()
+        rows = table1_repro.run(budget)
+        for r in rows:
+            csv_rows.append((f"table1/{r['dataset']}",
+                             r["seconds"] * 1e6,
+                             f"mem_red={r['mem_reduction']:.1f}x;"
+                             f"flop_red={r['flop_reduction']:.1f}x;"
+                             f"nn={r['nn']:.3f};rs={r['rs']:.3f}"))
+        print(f"  [table1 total {time.time() - t0:.0f}s]\n")
+
+    if want("fig2"):
+        print("== Figure 2: accuracy vs memory reduction (vs prune/KD) ==")
+        from benchmarks import fig2_tradeoff
+        rows = fig2_tradeoff.run("adult")
+        for r in rows:
+            csv_rows.append((f"fig2/{r['method']}@{r['reduction']:.0f}x",
+                             0.0, f"acc={r['acc']:.3f}"))
+        print()
+
+    if want("thm2"):
+        print("== Theorem 2: MoM error vs bound, swept over L ==")
+        from benchmarks import thm2_error
+        rows = thm2_error.run()
+        for r in rows:
+            csv_rows.append((f"thm2/L{r['L']}", 0.0,
+                             f"err={r['mean_err']:.4f};"
+                             f"cover={r['within_bound']:.3f}"))
+        print()
+
+    if want("sketch_head"):
+        print("== Sketched LM head vs dense head ==")
+        from benchmarks import sketch_head_bench
+        r = sketch_head_bench.run()
+        csv_rows.append(("sketch_head/dense", r["us_dense"],
+                         f"flops={r['dense_flops']}"))
+        csv_rows.append(("sketch_head/sketch", r["us_sketch"],
+                         f"flops={r['sketch_flops']};"
+                         f"flop_ratio={r['flop_ratio']:.1f}x"))
+        print()
+
+    if want("kernels"):
+        print("== Kernel micro-benchmarks (cpu reference paths) ==")
+        from benchmarks import kernels_bench
+        rows = kernels_bench.run()
+        for name, us in rows.items():
+            csv_rows.append((f"kernels/{name}", us, ""))
+        print()
+
+    if want("roofline"):
+        print("== Roofline (from dry-run artifacts, if present) ==")
+        from benchmarks import roofline
+        rows = roofline.run("single")
+        for r in rows:
+            csv_rows.append(
+                (f"roofline/{r['arch']}/{r['shape']}",
+                 r["step_lower_bound_s"] * 1e6,
+                 f"bottleneck={r['bottleneck']};"
+                 f"roofline={100 * r['roofline_fraction']:.1f}%"))
+        print()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

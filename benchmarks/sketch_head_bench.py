@@ -1,0 +1,59 @@
+"""Sketched LM head vs dense head: wall-clock on CPU + analytic TPU terms.
+
+The analytic terms are the deployment-relevant comparison (CPU interpret-
+mode Pallas timing is not a TPU proxy); wall-clock is still reported for the
+pure-jnp paths.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch_lm_head import apply_head, freeze_head, head_costs
+from repro.models.config import SketchHeadConfig
+
+
+def _time(fn, *args, n=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8):
+    cfg = SketchHeadConfig(n_rows=64, n_buckets=16, k=2, proj_dim=64,
+                           bandwidth=4.0)
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+    hidden = jax.random.normal(key, (batch, d_model))
+
+    # Direct-construction head (distillation quality is covered by
+    # tests/test_system.py; here we measure cost).
+    kparams = {
+        "points": jax.random.normal(key, (512, cfg.proj_dim)),
+        "alphas": jax.random.normal(key, (512, vocab)) * 0.01,
+        "proj": jax.random.normal(key, (d_model, cfg.proj_dim))
+        / np.sqrt(d_model),
+    }
+    head = freeze_head(key, kparams, cfg)
+
+    dense = jax.jit(lambda h: h @ table.T)
+    sketch = jax.jit(lambda h: apply_head(head, h, cfg, use_pallas=False))
+
+    us_dense = _time(dense, hidden)
+    us_sketch = _time(sketch, hidden)
+    costs = head_costs(cfg, d_model, vocab)
+    print(f"  dense head: {us_dense:9.1f} us/call   "
+          f"sketch head: {us_sketch:9.1f} us/call (cpu jnp)")
+    print(f"  params: dense {costs['dense_params']/1e6:.1f}M vs sketch "
+          f"{costs['sketch_params']/1e6:.1f}M  ({costs['param_ratio']:.1f}x)")
+    print(f"  flops/token: dense {costs['dense_flops']/1e6:.2f}M vs sketch "
+          f"{costs['sketch_flops']/1e6:.2f}M  ({costs['flop_ratio']:.1f}x)")
+    return {"us_dense": us_dense, "us_sketch": us_sketch, **costs}

@@ -1,0 +1,103 @@
+"""Paper Table 1 reproduction: accuracy / memory / FLOPs for NN vs Kernel
+vs Representer Sketch on the six (synthetic stand-in) tabular tasks.
+
+Protocol per dataset (paper §3.4/§4):
+  1. Train the Table-2 MLP teacher.
+  2. Distill into the weighted LSH-kernel model (M ≪ N anchors, asymmetric
+     projection A, MSE on teacher outputs).
+  3. Freeze into a Representer Sketch (Table-2 R, K; L set by the error
+     budget) and evaluate with hash+gather+MoM only.
+Memory counts parameters (sketch: C·L·R + d·d' proj, paper §4.3); FLOPs use
+the paper's inference model (2·d·p + p·K·L/3 + L·C vs dense MACs).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DistillConfig, KernelModel, KernelModelConfig,
+                        distill, mlp_flops, mlp_memory_params)
+from repro.core.teacher import MLPConfig, mlp_forward, train_mlp
+from repro.data.tabular import DATASETS, TabularSpec, make_dataset
+
+# Fast-mode budget so `python -m benchmarks.run` completes on one CPU core;
+# paper-scale settings are the spec defaults (scaled by --full in run.py).
+FAST = {"nn_steps": 1200, "distill_steps": 1500, "n_points": 256,
+        "rows": 1200, "train_cap": 12000, "test_cap": 3000}
+
+
+def _metric(task, out, y):
+    if task == "classification":
+        return float(jnp.mean(jnp.argmax(out, -1) == y))
+    return float(jnp.mean(jnp.abs(out[:, 0] - y)))
+
+
+def run_dataset(name: str, budget: Dict = FAST, seed: int = 0) -> Dict:
+    spec = DATASETS[name]
+    xtr, ytr, xte, yte = make_dataset(spec, seed=seed)
+    xtr, ytr = xtr[: budget["train_cap"]], ytr[: budget["train_cap"]]
+    xte, yte = xte[: budget["test_cap"]], yte[: budget["test_cap"]]
+    xtr_j, xte_j = jnp.asarray(xtr), jnp.asarray(xte)
+    ytr_j, yte_j = jnp.asarray(ytr), jnp.asarray(yte)
+    n_out = 2 if spec.task == "classification" else 1
+
+    t0 = time.time()
+    mlp_cfg = MLPConfig(spec.n_features, spec.nn_hidden, n_out)
+    teacher, _ = train_mlp(jax.random.PRNGKey(seed), mlp_cfg, xtr_j, ytr_j,
+                           task=spec.task, n_steps=budget["nn_steps"])
+    nn_metric = _metric(spec.task, mlp_forward(teacher, xte_j), yte_j)
+
+    proj_dim = min(max(spec.n_features // 2, 4), 32)
+    model = KernelModel(KernelModelConfig(
+        in_dim=spec.n_features, proj_dim=proj_dim,
+        n_points=budget["n_points"], n_outputs=n_out, bandwidth=2.0,
+        k=spec.rs_K))
+    # Regression is precision-hungry: the sketch's collision-noise floor
+    # (Σ|α|/√R) must sit below the target MAE, so regression tasks get an
+    # L1-regularized distillation and a wider array (see EXPERIMENTS.md).
+    regression = spec.task == "regression"
+    kparams, _ = distill(
+        jax.random.PRNGKey(seed + 1), lambda x: mlp_forward(teacher, x),
+        xtr_j, model, DistillConfig(n_steps=budget["distill_steps"], lr=5e-3,
+                                    alpha_l1=1e-3 if regression else 0.0))
+    kernel_metric = _metric(spec.task, model.apply(kparams, xte_j), yte_j)
+
+    n_buckets = 64 if regression else max(spec.rs_R // 10, 16)
+    sk, state = model.freeze(jax.random.PRNGKey(seed + 2), kparams,
+                             n_rows=budget["rows"] * (2 if regression else 1),
+                             n_buckets=n_buckets)
+    rs_out = sk.query(state, model.transform(kparams, xte_j))
+    rs_metric = _metric(spec.task, rs_out, yte_j)
+
+    nn_mem = mlp_memory_params(mlp_cfg.layer_sizes) * 8 / 1e6   # 64-bit, MB
+    rs_mem = (model.sketch_memory_params(budget["rows"], n_buckets)
+              * 8 / 1e6)
+    nn_fl = mlp_flops(mlp_cfg.layer_sizes)
+    rs_fl = model.sketch_flops(budget["rows"], n_buckets)
+
+    return {
+        "dataset": name, "task": spec.task,
+        "nn": nn_metric, "kernel": kernel_metric, "rs": rs_metric,
+        "nn_mem_mb": nn_mem, "rs_mem_mb": rs_mem,
+        "mem_reduction": nn_mem / rs_mem,
+        "nn_flops": nn_fl, "rs_flops": rs_fl,
+        "flop_reduction": nn_fl / rs_fl,
+        "seconds": time.time() - t0,
+    }
+
+
+def run(budget: Dict = FAST):
+    rows = []
+    for name in DATASETS:
+        r = run_dataset(name, budget)
+        rows.append(r)
+        print(f"  {r['dataset']:9s} {r['task'][:5]:5s} "
+              f"NN={r['nn']:.3f} K={r['kernel']:.3f} RS={r['rs']:.3f}  "
+              f"mem {r['mem_reduction']:6.1f}x  flops "
+              f"{r['flop_reduction']:6.1f}x  ({r['seconds']:.0f}s)")
+    return rows

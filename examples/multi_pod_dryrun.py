@@ -1,0 +1,35 @@
+"""Programmatic multi-pod dry-run of a single cell.
+
+Shows the launcher API: build the production mesh from placeholder devices,
+lower + compile one (arch × shape), and read the roofline inputs off the
+compiled artifact.  The XLA flag must precede any jax import — run this as
+a script, not inside an initialized process.
+
+  PYTHONPATH=src python examples/multi_pod_dryrun.py --arch gemma2-27b \
+      --shape prefill_32k --mesh multi
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
+    args = ap.parse_args()
+    r = run_cell(args.arch, args.shape, args.mesh, save=False)
+    print(f"\nHLO dot FLOPs / device : {r['flops']:.3e}")
+    print(f"bytes accessed / device: {r['bytes_accessed']:.3e}")
+    print(f"collective bytes       : {r['collective_bytes']}")
+    print(f"temp bytes / device    : "
+          f"{r['memory_analysis']['temp_size_bytes']:,}")
+
+
+if __name__ == "__main__":
+    main()

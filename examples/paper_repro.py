@@ -1,0 +1,39 @@
+"""Paper reproduction driver: one tabular dataset through the whole recipe.
+
+  NN teacher  →  weighted-kernel student (distilled)  →  Representer Sketch
+
+Reports the Table-1 row for the chosen dataset (accuracy parity + memory
+and FLOP reductions).
+
+  PYTHONPATH=src python examples/paper_repro.py --dataset adult
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # for benchmarks/
+
+from benchmarks.table1_repro import FAST, run_dataset
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="adult",
+                    choices=["adult", "phishing", "skin", "susy", "abalone",
+                             "yearmsd"])
+    args = ap.parse_args()
+    r = run_dataset(args.dataset, FAST)
+    metric = "accuracy" if r["task"] == "classification" else "MAE"
+    print(f"\ndataset={r['dataset']}  ({r['task']}, metric={metric})")
+    print(f"  NN     : {r['nn']:.4f}   ({r['nn_mem_mb']:.3f} MB, "
+          f"{r['nn_flops'] / 1e3:.1f}K FLOPs/query)")
+    print(f"  Kernel : {r['kernel']:.4f}")
+    print(f"  Sketch : {r['rs']:.4f}   ({r['rs_mem_mb']:.3f} MB, "
+          f"{r['rs_flops'] / 1e3:.1f}K FLOPs/query)")
+    print(f"  memory reduction {r['mem_reduction']:.1f}x, "
+          f"FLOP reduction {r['flop_reduction']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

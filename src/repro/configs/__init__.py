@@ -1,0 +1,54 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig.
+
+One module per assigned architecture (full + smoke configs), plus the
+paper's own MLP/sketch experiment configs in ``paper.py``.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "granite-8b": "repro.configs.granite_8b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1b6",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "musicgen-large": "repro.configs.musicgen_large",
+}
+
+# (seq_len, global_batch, step kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def arch_names() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {list(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cells(include_skipped: bool = False):
+    """Yield (arch, shape) dry-run cells, honoring the long_500k rule."""
+    for arch in _MODULES:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape == "long_500k" and not cfg.subquadratic and not include_skipped:
+                continue
+            yield arch, shape

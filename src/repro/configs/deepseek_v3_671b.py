@@ -1,0 +1,37 @@
+"""deepseek-v3-671b — MLA + 256-expert MoE (1 shared, top-8) [arXiv:2412.19437].
+
+61L, d_model=7168, 128 heads MLA (q_lora=1536, kv_lora=512, nope=128,
+rope=64, v=128), 3 dense prologue layers (d_ff=18432) then MoE with expert
+d_ff=2048, vocab=129280.  The MLA latent cache (512+64 per position) is a
+57× KV compression → long_500k RUNS on the latent cache (DESIGN.md §5).
+MTP (multi-token prediction) is a training-objective add-on the backbone
+does not require; noted as out of scope in DESIGN.md.
+"""
+
+from repro.models.config import MLAConfig, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    n_layers=61,
+    d_model=7168,
+    d_ff=18432,            # dense prologue FFN width
+    vocab_size=129280,
+    pattern=("mla",),
+    mla=MLAConfig(n_heads=128, q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    # group_size 512: capacity/group = 1.25·512·8/256 = 20; dispatch cost
+    # 2·cf·k·g·d ≈ 10% of the expert FFN math (§Perf iter 2 napkin).
+    moe=MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048,
+                  n_shared_experts=1, group_size=512),
+    moe_every=1,
+    n_dense_prologue=3,
+    subquadratic=True,     # MLA latent cache
+)
+
+SMOKE = CONFIG.scaled(
+    name="deepseek-v3-671b-smoke", n_layers=3, d_model=64, d_ff=128,
+    vocab_size=256, n_dense_prologue=1,
+    mla=MLAConfig(n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                  qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16),
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=64, n_shared_experts=1),
+)

@@ -1,0 +1,29 @@
+"""llama-3.2-vision-11b — dense GQA with cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision].
+
+40L, d_model=4096, 32 heads (GQA kv=8, head_dim=128), d_ff=14336,
+vocab=128256.  Every 5th layer cross-attends to vision-encoder states; the
+vision frontend is a STUB per the brief — ``input_specs`` supplies 1600
+precomputed patch embeddings per sample.  Full attention → long_500k skipped.
+"""
+
+from repro.models.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    n_layers=40,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=128256,
+    pattern=("attn", "attn", "attn", "attn", "xattn"),
+    attention=AttentionConfig(n_heads=32, n_kv_heads=8, head_dim=128,
+                              rope_theta=500000.0),
+    n_encoder_tokens=1600,
+    subquadratic=False,
+)
+
+SMOKE = CONFIG.scaled(
+    name="llama-3.2-vision-11b-smoke", n_layers=5, d_model=64, d_ff=128,
+    vocab_size=256, n_encoder_tokens=16,
+    attention=AttentionConfig(n_heads=4, n_kv_heads=2, head_dim=16),
+)

@@ -1,0 +1,30 @@
+"""musicgen-large — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+48L, d_model=2048, 32 heads (MHA: kv=32, head_dim=64), d_ff=8192,
+vocab=2048 (one EnCodec codebook; the multi-codebook delay pattern is a
+frontend/scheduling detail stubbed per the brief — tokens arrive as a single
+interleaved stream).  Full attention → long_500k skipped.
+
+Note for the sketched-head feature (DESIGN.md §4): with vocab=2048 ≈ d_model
+the dense head is already cheap; the sketch head is selectable but its win
+is small here — measured in benchmarks/sketch_head_bench.py.
+"""
+
+from repro.models.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    n_layers=48,
+    d_model=2048,
+    d_ff=8192,
+    vocab_size=2048,
+    pattern=("attn",),
+    attention=AttentionConfig(n_heads=32, n_kv_heads=32, head_dim=64),
+    subquadratic=False,
+)
+
+SMOKE = CONFIG.scaled(
+    name="musicgen-large-smoke", n_layers=2, d_model=64, d_ff=128,
+    vocab_size=64,
+    attention=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=16),
+)

@@ -1,0 +1,19 @@
+"""Representer Sketch core: LSH families, weighted RACE sketch, distillation."""
+
+from repro.core.lsh import LSHConfig, L2LSH, SRPLSH, AchlioptasL2LSH, make_lsh
+from repro.core.sketch import SketchConfig, RepresenterSketch, mom_estimate
+from repro.core.kernel_model import (
+    KernelModel,
+    KernelModelConfig,
+    mlp_flops,
+    mlp_memory_params,
+)
+from repro.core.distill import DistillConfig, distill
+from repro.core import theory
+
+__all__ = [
+    "LSHConfig", "L2LSH", "SRPLSH", "AchlioptasL2LSH", "make_lsh",
+    "SketchConfig", "RepresenterSketch", "mom_estimate",
+    "KernelModel", "KernelModelConfig", "mlp_flops", "mlp_memory_params",
+    "DistillConfig", "distill", "theory",
+]

@@ -1,0 +1,141 @@
+"""The weighted kernel representation  f_K(q) = Σ_j α_j · K(A^T q, x_j).
+
+This is the paper's §3.3/§3.4 object: a *learnable* weighted LSH-kernel sum.
+Trainable parameters (per §3.4 and the asymmetric-LSH trick of §4.3):
+
+* ``points``  x_j ∈ R^{d'}  — M anchor points living in the *projected* space,
+* ``alphas``  α_j ∈ R^C     — per-point weights (one per output channel),
+* ``proj``    A ∈ R^{d×d'}  — the asymmetric linear transform applied to
+  queries only (Corollary 1 guarantees this preserves universality since a
+  linear map restricted to the data manifold is injective a.s.).
+
+During *training* we evaluate the smooth closed-form L2-LSH collision kernel
+so gradients flow; at *deployment* the function is frozen into a
+RepresenterSketch (hash + gather + MoM only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lsh import LSHConfig, L2LSH
+from repro.core.sketch import RepresenterSketch, SketchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelModelConfig:
+    in_dim: int          # d  — raw feature dimensionality
+    proj_dim: int        # d' — asymmetric projected dimensionality
+    n_points: int        # M  — number of anchor points (M << N)
+    n_outputs: int       # C
+    bandwidth: float = 1.0
+    k: int = 1           # concatenation depth used at sketch time
+
+
+class KernelModel:
+    """Differentiable weighted LSH-kernel sum + its frozen sketch form."""
+
+    def __init__(self, config: KernelModelConfig):
+        self.config = config
+        # A single-row LSH bank is enough to define the kernel shape for
+        # training; the sketch re-draws L independent rows at freeze time.
+        self._kernel_lsh = L2LSH(
+            LSHConfig(n_rows=1, n_buckets=2, k=config.k, dim=config.proj_dim,
+                      bandwidth=config.bandwidth)
+        )
+
+    def init(self, key: jax.Array) -> dict:
+        c = self.config
+        kp, ka, kA = jax.random.split(key, 3)
+        return {
+            "points": 0.1 * jax.random.normal(kp, (c.n_points, c.proj_dim)),
+            "alphas": 0.01 * jax.random.normal(ka, (c.n_points, c.n_outputs)),
+            "proj": jax.random.normal(kA, (c.in_dim, c.proj_dim))
+            / jnp.sqrt(c.in_dim),
+        }
+
+    def transform(self, params: dict, q: jnp.ndarray) -> jnp.ndarray:
+        """Asymmetric query transform  T(q) = A^T q."""
+        return q @ params["proj"]
+
+    def apply(self, params: dict, q: jnp.ndarray) -> jnp.ndarray:
+        """Smooth forward pass: (B, d) → (B, C).
+
+        Uses the closed-form L2-LSH collision probability as the kernel, so
+        this *is* the function the sketch will estimate (Theorem 1 says the
+        sketch is unbiased for exactly this quantity).
+        """
+        tq = self.transform(params, q)  # (B, d')
+        dist = jnp.sqrt(
+            jnp.maximum(
+                jnp.sum(tq * tq, -1)[:, None]
+                - 2.0 * tq @ params["points"].T
+                + jnp.sum(params["points"] ** 2, -1)[None, :],
+                1e-12,
+            )
+        )  # (B, M)
+        kern = self._kernel_lsh.collision_probability(dist)
+        return kern @ params["alphas"]
+
+    # -- freeze into a Representer Sketch -------------------------------------
+
+    def sketch_config(self, n_rows: int, n_buckets: int, n_groups: int = 8) -> SketchConfig:
+        c = self.config
+        return SketchConfig(
+            n_rows=n_rows,
+            n_buckets=n_buckets,
+            k=c.k,
+            dim=c.proj_dim,
+            n_outputs=c.n_outputs,
+            bandwidth=c.bandwidth,
+            lsh_kind="l2",
+            n_groups=n_groups,
+        )
+
+    def freeze(
+        self, key: jax.Array, params: dict, n_rows: int, n_buckets: int,
+        n_groups: int = 8,
+    ) -> Tuple[RepresenterSketch, dict]:
+        """Build the deployment sketch from learned (points, alphas)."""
+        sk = RepresenterSketch(self.sketch_config(n_rows, n_buckets, n_groups))
+        state = sk.init(key)
+        state = sk.build_streaming(state, params["points"], params["alphas"])
+        return sk, state
+
+    # -- cost accounting (paper §4.3 formulas) ---------------------------------
+
+    def sketch_memory_params(self, n_rows: int, n_buckets: int) -> int:
+        """Stored parameter count: array (C·L·R) + projection (d·d')."""
+        c = self.config
+        return c.n_outputs * n_rows * n_buckets + c.in_dim * c.proj_dim
+
+    def sketch_flops(self, n_rows: int, n_buckets: int) -> int:
+        """Paper's FLOP model: 2·d·p + p·K·L/3 + L (per query, per output).
+
+        (The paper writes R where the hash-count is meant; with concatenation
+        depth K and L rows there are K·L hash functions, each a sparse
+        Achlioptas projection touching p/3 nonzeros.)
+        """
+        c = self.config
+        return int(
+            2 * c.in_dim * c.proj_dim
+            + c.proj_dim * c.k * n_rows / 3
+            + n_rows * c.n_outputs
+        )
+
+
+def mlp_memory_params(layer_sizes: Tuple[int, ...]) -> int:
+    """Dense-MLP parameter count (weights + biases) for the NN baseline."""
+    total = 0
+    for a, b in zip(layer_sizes[:-1], layer_sizes[1:]):
+        total += a * b + b
+    return total
+
+
+def mlp_flops(layer_sizes: Tuple[int, ...]) -> int:
+    """Per-query multiply-accumulate FLOPs of the dense MLP baseline."""
+    return int(sum(2 * a * b for a, b in zip(layer_sizes[:-1], layer_sizes[1:])))

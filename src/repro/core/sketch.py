@@ -1,0 +1,170 @@
+"""Weighted RACE sketch (the paper's §3.2) and median-of-means queries.
+
+A sketch is an ``(L, R)`` float array per output channel.  For multi-output
+functions (C classes / regression targets) we store ``(C, L, R)`` — the paper
+notes the linear-in-classes growth as its one limitation (§4.6).
+
+Construction (Algorithm 1)::
+
+    S[l, h_l(x_i)] += alpha_i          for every point, every row
+
+Query (Algorithm 2)::
+
+    z_l = S[l, h_l(q)]                 L row reads
+    means = group-average(z, g)        g groups of L/g
+    f_hat(q) = median(means)           median-of-means
+
+Everything is pure JAX (jit/vmap friendly); the Pallas kernels in
+``repro.kernels.race_query`` / ``race_update`` provide the TPU-tiled fast
+paths and are validated against this module in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lsh import LSHConfig, make_lsh
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchConfig:
+    n_rows: int          # L
+    n_buckets: int       # R
+    k: int               # concatenation depth per row
+    dim: int             # hashed dimensionality (d or d' post-projection)
+    n_outputs: int = 1   # C — number of output channels (classes/targets)
+    bandwidth: float = 1.0
+    lsh_kind: str = "l2"
+    n_groups: int = 8    # g for median-of-means
+
+    @property
+    def lsh_config(self) -> LSHConfig:
+        return LSHConfig(
+            n_rows=self.n_rows,
+            n_buckets=self.n_buckets,
+            k=self.k,
+            dim=self.dim,
+            bandwidth=self.bandwidth,
+        )
+
+    @property
+    def memory_floats(self) -> int:
+        """Number of stored floats — the paper's memory metric (§4.3)."""
+        return self.n_outputs * self.n_rows * self.n_buckets
+
+
+class RepresenterSketch:
+    """Weighted RACE sketch with MoM queries."""
+
+    def __init__(self, config: SketchConfig):
+        self.config = config
+        self.lsh = make_lsh(config.lsh_kind, config.lsh_config)
+
+    # -- parameters ---------------------------------------------------------
+
+    def init(self, key: jax.Array) -> dict:
+        """Hash params + an empty sketch array (+ total inserted mass).
+
+        ``mass`` tracks Σ_i α_i per output channel: the universal rehash
+        that folds K sub-hashes into R buckets collides *unrelated* points
+        with probability 1/R, so E[S[h(q)]] = (1−1/R)·KDE + Σα/R.  Queries
+        subtract the Σα/R floor and rescale — an unbiasedness correction
+        the RACE construction doesn't need (its hashes are range-exact)
+        but the paper's composed hash does (EXPERIMENTS.md §Paper).
+        """
+        return {
+            "hash": self.lsh.params(key),
+            "array": jnp.zeros(
+                (self.config.n_outputs, self.config.n_rows, self.config.n_buckets),
+                dtype=jnp.float32,
+            ),
+            "mass": jnp.zeros((self.config.n_outputs,), jnp.float32),
+        }
+
+    # -- construction (Algorithm 1) -----------------------------------------
+
+    def build(self, state: dict, points: jnp.ndarray, alphas: jnp.ndarray) -> dict:
+        """Insert ``points`` (M, d) with weights ``alphas`` (M, C) into the sketch.
+
+        Implemented as a dense one-hot accumulation so it lowers to matmuls on
+        the MXU rather than serial scatters (DESIGN.md §3).
+        """
+        cfg = self.config
+        idx = self.lsh.hash(state["hash"], points)  # (M, L)
+        onehot = jax.nn.one_hot(idx, cfg.n_buckets, dtype=jnp.float32)  # (M, L, R)
+        if alphas.ndim == 1:
+            alphas = alphas[:, None]
+        # (C, L, R) = sum_m alphas[m, c] * onehot[m, l, r]
+        arr = jnp.einsum("mc,mlr->clr", alphas.astype(jnp.float32), onehot)
+        return {
+            "hash": state["hash"],
+            "array": state["array"] + arr,
+            "mass": state["mass"] + jnp.sum(alphas.astype(jnp.float32), axis=0),
+        }
+
+    def build_streaming(
+        self, state: dict, points: jnp.ndarray, alphas: jnp.ndarray, chunk: int = 4096
+    ) -> dict:
+        """Chunked build for datasets too large for a single one-hot tensor."""
+        m = points.shape[0]
+        out = state
+        for start in range(0, m, chunk):
+            out = self.build(out, points[start : start + chunk], alphas[start : start + chunk])
+        return out
+
+    # -- query (Algorithm 2) --------------------------------------------------
+
+    def row_reads(self, state: dict, queries: jnp.ndarray) -> jnp.ndarray:
+        """Return the raw ``(B, C, L)`` row reads ``S[c, l, h_l(q)]``."""
+        idx = self.lsh.hash(state["hash"], queries)  # (B, L)
+        arr = state["array"]  # (C, L, R)
+        return jnp.take_along_axis(
+            arr[None],  # (1, C, L, R)
+            idx[:, None, :, None],  # (B, 1, L, 1)
+            axis=-1,
+        )[..., 0]
+
+    def query(self, state: dict, queries: jnp.ndarray, mom: bool = True) -> jnp.ndarray:
+        """Estimate the weighted KDE for a batch of queries → (B, C).
+
+        ``mom=True`` uses median-of-means with g groups (the analyzed
+        estimator); ``mom=False`` uses the plain average (the paper notes both
+        perform comparably).
+        """
+        cfg = self.config
+        reads = self.row_reads(state, queries)  # (B, C, L)
+        # Debias the 1/R rehash-collision floor (see init docstring).
+        r = cfg.n_buckets
+        reads = (reads - state["mass"][None, :, None] / r) / (1.0 - 1.0 / r)
+        if not mom:
+            return jnp.mean(reads, axis=-1)
+        g = cfg.n_groups
+        l = cfg.n_rows
+        m = l // g
+        grouped = reads[..., : g * m].reshape(*reads.shape[:-1], g, m)
+        means = jnp.mean(grouped, axis=-1)  # (B, C, g)
+        return jnp.median(means, axis=-1)
+
+    # -- direct (un-sketched) weighted KDE, for validation --------------------
+
+    def exact_weighted_kde(
+        self, points: jnp.ndarray, alphas: jnp.ndarray, queries: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Exact ``Σ_i α_i K(q, x_i)`` using the closed-form collision kernel."""
+        if alphas.ndim == 1:
+            alphas = alphas[:, None]
+        dist = jnp.linalg.norm(queries[:, None, :] - points[None, :, :], axis=-1)
+        kern = self.lsh.collision_probability(dist)  # (B, M)
+        return kern @ alphas.astype(jnp.float32)  # (B, C)
+
+
+def mom_estimate(reads: jnp.ndarray, n_groups: int) -> jnp.ndarray:
+    """Standalone median-of-means over the last axis (used by kernels' ref)."""
+    l = reads.shape[-1]
+    m = l // n_groups
+    grouped = reads[..., : n_groups * m].reshape(*reads.shape[:-1], n_groups, m)
+    return jnp.median(jnp.mean(grouped, axis=-1), axis=-1)

@@ -1,0 +1,101 @@
+"""Representer-Sketch LM head: distill a dense logit head into per-class
+RACE arrays (DESIGN.md §4 — the paper's technique as a serving feature).
+
+The dense head computes ``logits = h · Wᵀ`` (2·d·V FLOPs/token).  We treat
+each vocab class v as one output channel of a weighted kernel function
+
+    f_K(h)[v] = Σ_j α_{j,v} · K(Aᵀh, x_j)
+
+with *shared* anchors x_j and a shared asymmetric projection A (§4.3 of the
+paper), distilled from the dense head's logits by MSE.  Freezing gives one
+(L, R, V) sketch whose decode cost is L·V adds + a d×d' projection —
+replacing 2·d·V multiplies.  The paper's noted limitation (memory linear in
+V) is explicit here: memory = L·R·V vs d·V dense, a win iff L·R < d.
+
+Decode-path kernels: repro.kernels.lsh_hash (projection+hash fused) and
+repro.kernels.sketch_head (shared-index gather as MXU one-hot matvec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distill import DistillConfig, distill
+from repro.core.kernel_model import KernelModel, KernelModelConfig
+from repro.core.lsh import L2LSH, LSHConfig
+from repro.kernels.lsh_hash.ops import lsh_hash
+from repro.kernels.sketch_head.ops import sketch_head_logits
+from repro.models.config import SketchHeadConfig
+
+
+def distill_head(
+    key: jax.Array,
+    head_table: jnp.ndarray,          # (V, d) dense head weights
+    hidden_samples: jnp.ndarray,      # (N, d) representative final hiddens
+    cfg: SketchHeadConfig,
+    *,
+    n_points: int = 512,
+    distill_cfg: DistillConfig = DistillConfig(n_steps=1500, lr=5e-3),
+) -> Tuple[dict, Dict[str, float]]:
+    """Learn (anchors, alphas, proj) matching the dense head's logits."""
+    v, d = head_table.shape
+    model = KernelModel(KernelModelConfig(
+        in_dim=d, proj_dim=cfg.proj_dim, n_points=n_points, n_outputs=v,
+        bandwidth=cfg.bandwidth, k=cfg.k))
+    teacher = lambda h: (h.astype(jnp.float32)
+                         @ head_table.astype(jnp.float32).T)
+    params, metrics = distill(key, teacher, hidden_samples, model, distill_cfg)
+    return params, metrics
+
+
+def freeze_head(key: jax.Array, kernel_params: dict,
+                cfg: SketchHeadConfig) -> dict:
+    """Build the deployable sketch-head params from distilled kernel params."""
+    points = kernel_params["points"]      # (M, d')
+    alphas = kernel_params["alphas"]      # (M, V)
+    lsh = L2LSH(LSHConfig(n_rows=cfg.n_rows, n_buckets=cfg.n_buckets,
+                          k=cfg.k, dim=cfg.proj_dim, bandwidth=cfg.bandwidth))
+    hash_params = lsh.params(key)
+    idx = lsh.hash(hash_params, points)   # (M, L)
+    onehot = jax.nn.one_hot(idx, cfg.n_buckets, dtype=jnp.float32)  # (M,L,R)
+    # (L, R, V) — class-shared layout for the decode kernel.
+    array = jnp.einsum("mlr,mv->lrv", onehot, alphas.astype(jnp.float32))
+    return {
+        "proj": kernel_params["proj"],            # (d, d')
+        "w": hash_params["w"],                    # (L, K, d')
+        "b": hash_params["b"],                    # (L, K)
+        "array": array,                           # (L, R, V)
+    }
+
+
+def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
+               *, use_pallas: bool = True) -> jnp.ndarray:
+    """Sketched logits for (B, d) final hiddens → (B, V)."""
+    q = hidden.astype(jnp.float32) @ head["proj"]
+    idx = lsh_hash(q, head["w"], head["b"], bandwidth=cfg.bandwidth,
+                   n_buckets=cfg.n_buckets, use_pallas=use_pallas)
+    return sketch_head_logits(head["array"], idx, use_pallas=use_pallas)
+
+
+def head_costs(cfg: SketchHeadConfig, d_model: int, vocab: int) -> dict:
+    """Analytic memory/FLOP comparison vs the dense head (paper §4.3 model)."""
+    dense_params = d_model * vocab
+    sketch_params = (cfg.n_rows * cfg.n_buckets * vocab
+                     + d_model * cfg.proj_dim
+                     + cfg.n_rows * cfg.k * cfg.proj_dim)
+    dense_flops = 2 * d_model * vocab
+    sketch_flops = (2 * d_model * cfg.proj_dim            # projection
+                    + 2 * cfg.proj_dim * cfg.k * cfg.n_rows  # hashing
+                    + cfg.n_rows * vocab)                 # gather-mean adds
+    return {
+        "dense_params": dense_params,
+        "sketch_params": sketch_params,
+        "param_ratio": dense_params / sketch_params,
+        "dense_flops": dense_flops,
+        "sketch_flops": sketch_flops,
+        "flop_ratio": dense_flops / sketch_flops,
+    }

@@ -1,0 +1,50 @@
+"""Closed-form error-bound calculators for Theorems 1–2.
+
+These are used by the property tests (empirical error must respect the bound)
+and by the sizing helper that picks (L, R, K, g) for a target error budget —
+the paper's 'relationship concerning the sketch memory and the estimation
+error' (§3.4 Memory Requirement).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def mom_error_bound(sigma: float, n_rows: int, delta: float) -> float:
+    """Lemma 1 / Theorem 2:  |Z − μ| ≤ 6·σ/√L·√log(1/δ)  w.p. 1−δ."""
+    return 6.0 * sigma / math.sqrt(n_rows) * math.sqrt(math.log(1.0 / delta))
+
+
+def variance_bound(alphas: jnp.ndarray, sqrt_kernels: jnp.ndarray) -> jnp.ndarray:
+    """Theorem 1 variance bound:  var ≤ (Σ_i α_i √K(x_i,q))²  per query.
+
+    Args:
+      alphas: (M,) or (M, C) weights.
+      sqrt_kernels: (B, M) values of √K(x_i, q).
+    Returns (B,) or (B, C).
+    """
+    if alphas.ndim == 1:
+        return (sqrt_kernels @ alphas) ** 2
+    return (sqrt_kernels @ alphas) ** 2
+
+
+def rows_for_error(sigma: float, eps: float, delta: float) -> int:
+    """Invert Theorem 2: minimum L so the MoM error ≤ eps w.p. 1−δ."""
+    return int(math.ceil((6.0 * sigma / eps) ** 2 * math.log(1.0 / delta)))
+
+
+def mom_groups(delta: float) -> int:
+    """Lemma 1's group count g = 8·log(1/δ) (rounded up, min 1)."""
+    return max(1, int(math.ceil(8.0 * math.log(1.0 / delta))))
+
+
+def size_sketch(
+    sigma: float, eps: float, delta: float, n_buckets: int, n_outputs: int
+) -> Tuple[int, int]:
+    """Return (L, memory_floats) meeting the (eps, delta) target."""
+    l = rows_for_error(sigma, eps, delta)
+    return l, n_outputs * l * n_buckets

@@ -1,0 +1,31 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU via ``interpret=True`` — the kernel body runs in Python with
+identical semantics.  ``interpret_default()`` flips automatically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interpret_default() -> bool:
+    """Interpret kernels on any non-TPU backend (this container is CPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+def pad_axis(x: jnp.ndarray, axis: int, multiple: int, value=0) -> jnp.ndarray:
+    """Pad ``axis`` of ``x`` up to the next multiple (TPU tile alignment)."""
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)

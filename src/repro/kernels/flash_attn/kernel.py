@@ -1,0 +1,146 @@
+"""Flash-attention Pallas kernel — fused online-softmax causal prefill.
+
+The §Roofline analysis charges the prefill cells for materializing the
+(Sq, Sk) score tensor through HBM; this kernel keeps scores in VMEM,
+computing one (Bq × Bk) tile at a time with the flash-v2 recurrence
+(running row-max m, denominator l, and un-normalized accumulator acc).
+
+Grid & tiling (one head-batch per grid row; MXU-aligned tiles):
+
+  grid = (B·H, Sq / Bq, Sk / Bk)           — Bk innermost: acc stays in VMEM
+  q:   (1, Bq, dh)    VMEM
+  k,v: (1, Bk, dh)    VMEM
+  out: (1, Bq, dh)    VMEM  (revisited across the Bk axis)
+  m,l: (1, Bq)        VMEM scratch carried across Bk steps
+
+Causal + sliding-window masking is applied per tile from the absolute tile
+offsets; fully-masked tiles are skipped with ``pl.when`` (the triangular /
+banded structure is why this beats the XLA-lowered scan in both FLOPs and
+bytes).  Gemma-2-style score softcap is fused.
+
+Validated in interpret mode against ref.py over shape/window/softcap sweeps
+(tests/test_kernels.py::test_flash_attention_*).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default, round_up
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, seq_len: int,
+                  window: Optional[int], softcap: Optional[float]):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Tile-level structure: skip tiles strictly above the causal diagonal
+    # or strictly outside the sliding window band.
+    causal_live = k_start <= q_start + block_q - 1
+    window_live = (True if window is None
+                   else k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(causal_live & window_live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (Bq, dh)
+        k = k_ref[0].astype(jnp.float32)          # (Bk, dh)
+        v = v_ref[0].astype(jnp.float32)          # (Bk, dh)
+        dh = q.shape[-1]
+        s = jax.lax.dot_general(q * (dh ** -0.5), k,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        mask = (q_pos >= k_pos) & (k_pos < seq_len)
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[0]                          # (Bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + jnp.sum(p, axis=-1)
+        acc_ref[0] = (acc_ref[0] * corr[:, None]
+                      + jax.lax.dot_general(
+                          p, v, (((1,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+        m_ref[0] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[0]
+                    / jnp.maximum(l_ref[0], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,          # (B, S, H, dh)
+    k: jnp.ndarray,          # (B, S, H, dh)
+    v: jnp.ndarray,          # (B, S, H, dh)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = interpret_default()
+    b, s, h, dh = q.shape
+    block_q = min(block_q, round_up(s, 8))
+    block_k = min(block_k, round_up(s, 8))
+
+    # (B·H, S, dh) layout; pad S to the tile size.
+    def fold(t):
+        t = jnp.swapaxes(t, 1, 2).reshape(b * h, s, dh)
+        pad = (-s) % max(block_q, block_k)
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        return t
+
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    sp = qf.shape[1]
+    grid = (b * h, sp // block_q, sp // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          seq_len=s, window=window, softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, block_q), jnp.float32),      # m
+            pltpu.VMEM((1, block_q), jnp.float32),      # l
+            pltpu.VMEM((1, block_q, dh), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :s].reshape(b, h, s, dh)
+    return jnp.swapaxes(out, 1, 2)

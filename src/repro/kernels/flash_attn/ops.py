@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the flash-attention prefill kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "block_q", "block_k",
+                                   "use_pallas"))
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Fused causal (+window, +softcap) attention: (B,S,H,dh)³ → (B,S,H,dh)."""
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, window=window, softcap=softcap,
+                                      block_q=block_q, block_k=block_k)
+    return flash_attention_ref(q, k, v, window=window, softcap=softcap)

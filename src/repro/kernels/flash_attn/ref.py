@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-attention prefill kernel: plain masked
+softmax attention (causal + optional sliding window + optional softcap)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,          # (B, S, H, dh)
+    k: jnp.ndarray,          # (B, S, H, dh)  (KV pre-expanded to full heads)
+    v: jnp.ndarray,          # (B, S, H, dh)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:            # (B, S, H, dh)
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if softcap:
+        scores = softcap_fn(scores, softcap)
+    pos = jnp.arange(s)
+    mask = pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def softcap_fn(x, cap):
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,30 @@
+"""Jit'd public wrapper for the fused LSH hash kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lsh_hash.kernel import lsh_hash_pallas
+from repro.kernels.lsh_hash.ref import lsh_hash_ref
+
+
+@partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "block_b", "use_pallas"))
+def lsh_hash(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bandwidth: float,
+    n_buckets: int,
+    block_b: int = 128,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Bucket indices (B, L) for a batch of queries against an L×K LSH bank."""
+    if use_pallas:
+        return lsh_hash_pallas(
+            x, w, b, bandwidth=bandwidth, n_buckets=n_buckets, block_b=block_b
+        )
+    return lsh_hash_ref(x, w, b, bandwidth, n_buckets)

@@ -1,0 +1,78 @@
+"""RACE sketch query Pallas kernel: gather row reads + median-of-means.
+
+TPU mapping (DESIGN.md §3): the whole sketch (C, L, R) stays resident in
+VMEM across the batch grid — for the paper's sizes (L≤2000, R≤32, C small)
+that's ≤ a few hundred KB, far under the ~16 MB VMEM budget.  The per-row
+bucket gather is realized as a one-hot (Bt·L, R) selection contracted on the
+MXU instead of a serial dynamic gather (TPU has no efficient scatter/gather
+on arbitrary lanes), and MoM runs vectorized on the VPU: group means then a
+sorting-network median over the g group axis.
+
+Tiling:
+  grid = (B / Bt,)
+  idx:    (Bt, L)     VMEM
+  sketch: (C, L, R)   VMEM (whole, replicated across grid steps)
+  out:    (Bt, C)     VMEM
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default, pad_axis
+
+
+def _race_query_kernel(idx_ref, sketch_ref, out_ref, *, n_groups: int):
+    idx = idx_ref[...]          # (Bt, L) int32
+    sketch = sketch_ref[...]    # (C, L, R) f32
+    c, l, r = sketch.shape
+    bt = idx.shape[0]
+
+    # One-hot selection: (Bt, L, R) vs iota over R.
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (bt, l, r), 2)
+    onehot = (iota_r == idx[:, :, None]).astype(jnp.float32)
+    # reads[b, c, l] = sum_r sketch[c, l, r] * onehot[b, l, r]
+    reads = jnp.einsum("clr,blr->bcl", sketch, onehot)
+
+    # Median of means over L rows in g groups (vectorized).
+    m = l // n_groups
+    grouped = reads[..., : n_groups * m].reshape(bt, c, n_groups, m)
+    means = jnp.mean(grouped, axis=-1)          # (Bt, C, g)
+    med = jnp.median(means, axis=-1)            # (Bt, C)
+    out_ref[...] = med
+
+
+def race_query_pallas(
+    sketch: jnp.ndarray,     # (C, L, R) f32
+    idx: jnp.ndarray,        # (B, L) int32
+    *,
+    n_groups: int,
+    block_b: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:            # (B, C)
+    if interpret is None:
+        interpret = interpret_default()
+    n_batch, n_rows = idx.shape
+    c, l, r = sketch.shape
+    assert l == n_rows
+
+    idxp = pad_axis(idx, 0, block_b)
+    bp = idxp.shape[0]
+    grid = (bp // block_b,)
+
+    out = pl.pallas_call(
+        functools.partial(_race_query_kernel, n_groups=n_groups),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((c, l, r), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, c), jnp.float32),
+        interpret=interpret,
+    )(idxp, sketch)
+    return out[:n_batch]

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the RACE query kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.race_query.kernel import race_query_pallas
+from repro.kernels.race_query.ref import race_query_ref
+
+
+@partial(jax.jit, static_argnames=("n_groups", "block_b", "use_pallas"))
+def race_query(
+    sketch: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    n_groups: int,
+    block_b: int = 128,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Median-of-means sketch estimate (B, C) from bucket indices (B, L)."""
+    if use_pallas:
+        return race_query_pallas(sketch, idx, n_groups=n_groups, block_b=block_b)
+    return race_query_ref(sketch, idx, n_groups)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RACE sketch query kernel (Algorithm 2).
+
+Given precomputed bucket indices, gathers the L row reads per output channel
+and reduces with median-of-means.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sketch import mom_estimate
+
+
+def race_query_ref(
+    sketch: jnp.ndarray,   # (C, L, R) f32
+    idx: jnp.ndarray,      # (B, L) int32
+    n_groups: int,
+) -> jnp.ndarray:          # (B, C)
+    reads = jnp.take_along_axis(
+        sketch[None],             # (1, C, L, R)
+        idx[:, None, :, None],    # (B, 1, L, 1)
+        axis=-1,
+    )[..., 0]                     # (B, C, L)
+    return mom_estimate(reads, n_groups)

@@ -1,0 +1,74 @@
+"""Sketch-construction Pallas kernel (Algorithm 1) — scatter-add as matmul.
+
+TPU has no efficient atomic scatter; the weighted increments
+``S[l, h_l(x_i)] += α_i`` are instead realized as a dense contraction
+(DESIGN.md §3): a one-hot cube over the bucket axis contracted against the
+weight matrix on the MXU, accumulated across grid steps over the point axis.
+
+Tiling:
+  grid = (M / Mt,)                         — points are streamed
+  idx:    (Mt, L)     VMEM
+  alphas: (Mt, C)     VMEM
+  out:    (C, L, R)   VMEM, accumulated in place across grid iterations
+          (output block index is constant, so Pallas keeps it resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default, pad_axis
+
+
+def _race_update_kernel(idx_ref, alpha_ref, out_ref, *, n_buckets: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]        # (Mt, L)
+    alphas = alpha_ref[...]   # (Mt, C)
+    mt, l = idx.shape
+
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (mt, l, n_buckets), 2)
+    onehot = (iota_r == idx[:, :, None]).astype(jnp.float32)    # (Mt, L, R)
+    # (C, L, R) += alphas^T ⊗ onehot, contracted over the point axis on MXU.
+    delta = jnp.einsum("mc,mlr->clr", alphas, onehot)
+    out_ref[...] += delta
+
+
+def race_update_pallas(
+    idx: jnp.ndarray,        # (M, L) int32
+    alphas: jnp.ndarray,     # (M, C) f32
+    *,
+    n_buckets: int,
+    block_m: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:            # (C, L, R) — the delta to add to an existing sketch
+    if interpret is None:
+        interpret = interpret_default()
+    m, l = idx.shape
+    c = alphas.shape[1]
+
+    # Pad points with zero-weight entries (harmless: they add 0 everywhere).
+    idxp = pad_axis(idx, 0, block_m)
+    alphap = pad_axis(alphas.astype(jnp.float32), 0, block_m)
+    mp = idxp.shape[0]
+    grid = (mp // block_m,)
+
+    return pl.pallas_call(
+        functools.partial(_race_update_kernel, n_buckets=n_buckets),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, l, n_buckets), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, l, n_buckets), jnp.float32),
+        interpret=interpret,
+    )(idxp, alphap)

@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the sketch-construction kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.race_update.kernel import race_update_pallas
+from repro.kernels.race_update.ref import race_update_ref
+
+
+@partial(jax.jit, static_argnames=("block_m", "use_pallas"))
+def race_update(
+    sketch: jnp.ndarray,   # (C, L, R)
+    idx: jnp.ndarray,      # (M, L)
+    alphas: jnp.ndarray,   # (M, C)
+    *,
+    block_m: int = 256,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Accumulate weighted points into the sketch; returns the new sketch."""
+    if use_pallas:
+        delta = race_update_pallas(
+            idx, alphas, n_buckets=sketch.shape[-1], block_m=block_m
+        )
+        return sketch + delta
+    return race_update_ref(sketch, idx, alphas)

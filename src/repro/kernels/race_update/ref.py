@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the sketch-construction kernel (Algorithm 1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def race_update_ref(
+    sketch: jnp.ndarray,   # (C, L, R) f32 — existing sketch to accumulate into
+    idx: jnp.ndarray,      # (M, L) int32  — bucket index of each point per row
+    alphas: jnp.ndarray,   # (M, C) f32    — per-point weights
+) -> jnp.ndarray:          # (C, L, R)
+    n_buckets = sketch.shape[-1]
+    onehot = jax.nn.one_hot(idx, n_buckets, dtype=jnp.float32)  # (M, L, R)
+    return sketch + jnp.einsum("mc,mlr->clr", alphas.astype(jnp.float32), onehot)

@@ -1,0 +1,76 @@
+"""Sketched LM-head Pallas kernel — per-class RACE estimate for decode.
+
+This is the framework integration of the paper's technique (DESIGN.md §4):
+at decode time the dense d_model×V logit matmul (2·d·V FLOPs/token) is
+replaced by an L-row sketch lookup shared across all V classes
+(L·V adds/token; L ≪ 2·d).
+
+The class-sharing layout (L, R, V) turns the per-class gather into a single
+(1, L·R)·(L·R, Vt) one-hot contraction per vocab tile — an MXU matvec whose
+left operand has exactly L nonzeros.  VMEM tiling:
+
+  grid = (B / Bt, V / Vt)
+  idx:    (Bt, L)       VMEM
+  sketch: (L, R, Vt)    VMEM  — vocab-tiled; with L=64, R=16, Vt=2048 this is
+                               64·16·2048·4 B = 8 MB ≤ VMEM; shrink Vt to fit.
+  out:    (Bt, Vt)      VMEM
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default, pad_axis
+
+
+def _sketch_head_kernel(idx_ref, sketch_ref, out_ref):
+    idx = idx_ref[...]          # (Bt, L)
+    sketch = sketch_ref[...]    # (L, R, Vt)
+    l, r, vt = sketch.shape
+    bt = idx.shape[0]
+
+    # One-hot over (L, R) flattened: (Bt, L·R) with exactly L ones per row.
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (bt, l, r), 2)
+    onehot = (iota_r == idx[:, :, None]).astype(jnp.float32).reshape(bt, l * r)
+    flat = sketch.reshape(l * r, vt)
+    # MXU: (Bt, L·R) @ (L·R, Vt) — the row-mean over L reads.
+    out_ref[...] = jax.lax.dot_general(
+        onehot, flat, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * (1.0 / l)
+
+
+def sketch_head_pallas(
+    sketch: jnp.ndarray,     # (L, R, V) f32
+    idx: jnp.ndarray,        # (B, L) int32
+    *,
+    block_b: int = 8,
+    block_v: int = 2048,
+    interpret: bool | None = None,
+) -> jnp.ndarray:            # (B, V)
+    if interpret is None:
+        interpret = interpret_default()
+    l, r, v = sketch.shape
+    n_batch = idx.shape[0]
+
+    idxp = pad_axis(idx, 0, block_b)
+    sketchp = pad_axis(sketch, 2, block_v)
+    bp, vp = idxp.shape[0], sketchp.shape[2]
+    grid = (bp // block_b, vp // block_v)
+
+    out = pl.pallas_call(
+        _sketch_head_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((l, r, block_v), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_v), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, vp), jnp.float32),
+        interpret=interpret,
+    )(idxp, sketchp)
+    return out[:n_batch, :v]

@@ -1,0 +1,47 @@
+"""Jit'd public wrapper for the sketched LM head."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lsh_hash.ops import lsh_hash
+from repro.kernels.sketch_head.kernel import sketch_head_pallas
+from repro.kernels.sketch_head.ref import sketch_head_ref
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_v", "use_pallas"))
+def sketch_head_logits(
+    sketch: jnp.ndarray,   # (L, R, V)
+    idx: jnp.ndarray,      # (B, L)
+    *,
+    block_b: int = 8,
+    block_v: int = 2048,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Estimate (B, V) logits from precomputed bucket indices."""
+    if use_pallas:
+        return sketch_head_pallas(sketch, idx, block_b=block_b, block_v=block_v)
+    return sketch_head_ref(sketch, idx)
+
+
+@partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "use_pallas"))
+def sketch_head_apply(
+    hidden: jnp.ndarray,   # (B, d_model) — final hidden state
+    proj: jnp.ndarray,     # (d_model, d') asymmetric transform A
+    w: jnp.ndarray,        # (L, K, d') hash projections
+    b: jnp.ndarray,        # (L, K) hash offsets
+    sketch: jnp.ndarray,   # (L, R, V) per-class arrays
+    *,
+    bandwidth: float,
+    n_buckets: int,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Full sketched head: transform → hash → per-class RACE estimate."""
+    q = hidden @ proj
+    idx = lsh_hash(
+        q, w, b, bandwidth=bandwidth, n_buckets=n_buckets, use_pallas=use_pallas
+    )
+    return sketch_head_logits(sketch, idx, use_pallas=use_pallas)

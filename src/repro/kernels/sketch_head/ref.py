@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the sketched LM-head decode kernel.
+
+The sketched head stores, per vocab class v, a RACE array column; laid out as
+``S ∈ (L, R, V)`` so all classes share the L row reads of a query (the hash
+indices h_l(q) are class-independent).  The logit estimate is the plain
+row-mean (the paper notes mean ≈ MoM empirically; the mean keeps the head a
+single matvec-like reduction on TPU — see kernel.py):
+
+    logits[b, v] = 1/L · Σ_l  S[l, h_l(q_b), v]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sketch_head_ref(
+    sketch: jnp.ndarray,   # (L, R, V) f32
+    idx: jnp.ndarray,      # (B, L) int32
+) -> jnp.ndarray:          # (B, V)
+    l, r, v = sketch.shape
+    # reads[b, l, v] = sketch[l, idx[b, l], v]
+    reads = jnp.take_along_axis(
+        sketch[None],              # (1, L, R, V)
+        idx[:, :, None, None],     # (B, L, 1, 1)
+        axis=2,
+    )[:, :, 0, :]                  # (B, L, V)
+    return jnp.mean(reads, axis=1)

@@ -1,0 +1,145 @@
+"""Jittable train / prefill / serve steps + abstract input specs per cell.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step that the (arch × shape) cell lowers — weak-type-correct,
+shardable, and allocation-free, so the dry-run can ``.lower().compile()``
+the production mesh without any device memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models.config import ModelConfig
+from repro.models.model import (decode_step, forward, init_decode_cache,
+                                init_model, lm_loss)
+from repro.optim.adamw import AdamWState, OptimizerConfig, adamw_update, init_adamw
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+
+def opt_config_for(cfg: ModelConfig, **kw) -> OptimizerConfig:
+    """Default optimizer config per arch: above ~100B params use lean state
+    (671B-class can't hold f32 master+moments on 16 GB chips) and
+    8-way gradient accumulation (bounds activation transients)."""
+    from repro.models.config import param_count
+    big = param_count(cfg) > 100e9
+    # accum sweep on deepseek-v3 train (§Perf iter 7): temp 307→77 GB going
+    # 1→8, but FSDP expert weights re-gather once per microbatch, so
+    # collective bytes rise 2.06e12→5.55e12 and bytes-accessed 4.5→7.4e13.
+    # accum=2 keeps most of the transient relief at ~1.3× collective cost.
+    kw.setdefault("grad_accum", 2 if big else 1)
+    return OptimizerConfig(lean=big, **kw)
+
+
+def train_step(params, opt_state: AdamWState, batch: Dict[str, jnp.ndarray],
+               cfg: ModelConfig, opt_cfg: OptimizerConfig):
+    """One optimizer step. batch: tokens, labels[, encoder_states].
+
+    With ``opt_cfg.grad_accum > 1`` the batch is split into microbatches
+    along the batch axis and gradients are accumulated in a ``lax.scan`` —
+    activation transients shrink by the accumulation factor while the
+    optimizer sees the same global batch.
+    """
+    accum = opt_cfg.grad_accum
+
+    def loss_fn(p, mb):
+        return lm_loss(p, mb["tokens"], mb["labels"], cfg,
+                       encoder_states=mb.get("encoder_states"))
+
+    if accum == 1:
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+    else:
+        micro = jax.tree.map(
+            lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+            batch)
+
+        def acc_step(carry, mb):
+            gacc, lacc, pacc = carry
+            (l, pr), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            gacc = jax.tree.map(lambda a, b: a + b / accum, gacc, g)
+            pacc = jax.tree.map(lambda a, b: a + b / accum, pacc, pr)
+            return (gacc, lacc + l / accum, pacc), None
+
+        zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params)
+        zeros_p = {"ce": jnp.zeros(()), "aux": jnp.zeros(())}
+        (grads, loss, parts), _ = jax.lax.scan(
+            acc_step, (zeros_g, jnp.zeros(()), zeros_p), micro)
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+
+    new_params, new_opt, opt_metrics = adamw_update(grads, opt_state, opt_cfg,
+                                                    params=params)
+    metrics = {"loss": loss, **parts, **opt_metrics}
+    return new_params, new_opt, metrics
+
+
+def prefill_step(params, tokens, cfg: ModelConfig,
+                 encoder_states=None):
+    """Context ingestion: forward pass returning last-position logits."""
+    logits, _, _ = forward(params, tokens, cfg,
+                           encoder_states=encoder_states, remat=False)
+    return logits[:, -1]
+
+
+def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
+               encoder_states=None):
+    """One decode step (one new token per sequence against the cache)."""
+    return decode_step(params, cache, tokens, pos, cfg,
+                       encoder_states=encoder_states)
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_model, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ModelConfig, lean: bool = False):
+    params = abstract_params(cfg)
+    return jax.eval_shape(functools.partial(init_adamw, lean=lean), params)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        functools.partial(init_decode_cache, cfg, batch, max_seq))
+
+
+def input_specs(arch: str, shape: str, *, smoke: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one (arch × shape) dry-run cell.
+
+    Returns a dict with 'kind' ∈ {train, prefill, decode} and the abstract
+    arrays each step consumes.
+    """
+    cfg = get_config(arch, smoke=smoke)
+    seq, batch, kind = SHAPES[shape]
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    bf16 = lambda *s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
+
+    out: Dict[str, Any] = {"kind": kind, "cfg": cfg, "seq": seq, "batch": batch}
+    enc = (bf16(batch, cfg.n_encoder_tokens, cfg.d_model)
+           if cfg.n_encoder_tokens else None)
+    if kind == "train":
+        out["batch_inputs"] = {"tokens": i32(batch, seq), "labels": i32(batch, seq)}
+        if enc is not None:
+            out["batch_inputs"]["encoder_states"] = enc
+    elif kind == "prefill":
+        out["tokens"] = i32(batch, seq)
+        out["encoder_states"] = enc
+    else:  # decode: one new token against a cache of length seq
+        out["tokens"] = i32(batch, 1)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        out["cache"] = abstract_cache(cfg, batch, seq)
+        out["encoder_states"] = enc
+    return out

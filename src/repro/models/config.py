@@ -1,0 +1,205 @@
+"""Model configuration for the assigned architecture zoo.
+
+A single flexible decoder backbone covers all ten architectures via a
+*periodic block pattern*: the layer stack is ``pattern × n_periods`` where
+``pattern`` is a short tuple of block kinds.  The forward pass scans over
+periods (compile size O(|pattern|), not O(n_layers)) — e.g.
+
+  stablelm-12b:  pattern=("attn",) × 40 periods
+  gemma2-27b:    pattern=("attn_local", "attn_global") × 23 periods
+  jamba-52b:     pattern=("mamba","moe_marker"… ) — see configs/jamba_v01_52b.py
+  rwkv6:         pattern=("rwkv",) × 24
+
+Block kinds:
+  attn          — causal self-attention (GQA/MHA, optional window/softcap)
+  attn_local    — sliding-window attention (window = cfg.attention.window)
+  attn_global   — full-context attention
+  mamba         — Mamba-1 selective SSM block
+  rwkv          — RWKV-6 (Finch) time-mix + channel-mix block
+  xattn         — cross-attention to encoder states (VLM)
+
+Each block kind is followed by its FFN (dense or MoE, per-layer via
+``moe_every``).  Modality frontends (vision patches / EnCodec frames) are
+STUBS per the brief: inputs arrive as precomputed embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    window: Optional[int] = None          # sliding-window size (SWA); None=full
+    logit_softcap: Optional[float] = None  # gemma2-style attn-score softcap
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention dims."""
+    n_heads: int
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    # Routing-group size (tokens compete for capacity within a group).
+    # Bounds the dense dispatch/combine einsums at 2·cf·k·g·d FLOPs/token —
+    # without grouping they are quadratic in sequence length (§Perf iter 2).
+    group_size: int = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None  # default ceil(d_model / 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchHeadConfig:
+    """Representer-Sketch LM head (the paper's technique; DESIGN.md §4)."""
+    n_rows: int = 64       # L
+    n_buckets: int = 16    # R
+    k: int = 2
+    proj_dim: int = 64     # d' of the asymmetric transform
+    bandwidth: float = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[str, ...]                 # block kinds, one period
+    attention: Optional[AttentionConfig] = None
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    moe_every: int = 0                       # every k-th layer uses MoE FFN (0=never,1=all)
+    final_logit_softcap: Optional[float] = None
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # VLM/audio frontend stubs: number of encoder tokens supplied per sample.
+    n_encoder_tokens: int = 0
+    # Representer-Sketch head (serve-time alternative to the dense head).
+    sketch_head: Optional[SketchHeadConfig] = None
+    # Long-context capability: True if decode memory is sub-linear in seq
+    # (bounded window / recurrent state / compressed latent).
+    subquadratic: bool = False
+    # First N layers run unscanned with a dense FFN (DeepSeek-V3's 3 dense
+    # prologue layers before the MoE stack).  Kind = pattern[0].
+    n_dense_prologue: int = 0
+
+    def __post_init__(self):
+        assert (self.n_layers - self.n_dense_prologue) % len(self.pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} minus prologue "
+            f"{self.n_dense_prologue} not divisible by pattern length "
+            f"{len(self.pattern)}"
+        )
+
+    @property
+    def n_periods(self) -> int:
+        return (self.n_layers - self.n_dense_prologue) // len(self.pattern)
+
+    def layer_kind(self, layer_idx: int) -> str:
+        if layer_idx < self.n_dense_prologue:
+            return self.pattern[0]
+        return self.pattern[(layer_idx - self.n_dense_prologue) % len(self.pattern)]
+
+    def ffn_kind(self, layer_idx: int) -> str:
+        """'moe' or 'dense' for the FFN following block ``layer_idx``."""
+        if layer_idx < self.n_dense_prologue:
+            return "dense"
+        if self.moe is None or self.moe_every == 0:
+            return "dense"
+        if self.moe_every == 1:
+            return "moe"
+        return "moe" if (layer_idx % self.moe_every == self.moe_every - 1) else "dense"
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """Return a reduced copy for smoke tests (see configs/smoke.py)."""
+        return dataclasses.replace(self, **overrides)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (embedding + blocks + head)."""
+    d = cfg.d_model
+    total = cfg.vocab_size * d  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * d  # head
+    for j in range(cfg.n_layers):
+        kind = cfg.layer_kind(j)
+        if kind in ("attn", "attn_local", "attn_global", "xattn"):
+            a = cfg.attention
+            total += d * a.n_heads * a.head_dim  # q
+            total += 2 * d * a.n_kv_heads * a.head_dim  # k, v
+            total += a.n_heads * a.head_dim * d  # o
+        elif kind == "mla":
+            m = cfg.mla
+            total += d * m.q_lora_rank + m.q_lora_rank * m.n_heads * m.qk_head_dim
+            total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            total += m.kv_lora_rank * m.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            total += m.n_heads * m.v_head_dim * d
+        elif kind == "mamba":
+            mb = cfg.mamba
+            d_in = mb.expand * d
+            dt_rank = mb.dt_rank or -(-d // 16)
+            total += d * 2 * d_in               # in_proj
+            total += d_in * mb.d_conv           # conv
+            total += d_in * (dt_rank + 2 * mb.d_state)  # x_proj
+            total += dt_rank * d_in + d_in      # dt_proj
+            total += 2 * d_in * mb.d_state      # A (log) and D-ish terms
+            total += d_in * d                   # out_proj
+        elif kind == "rwkv":
+            # time-mix: r,k,v,g,o projections + decay LoRA + mixing vectors;
+            # channel-mix: k (d→ff), v (ff→d), r (d→d).
+            total += 5 * d * d + 2 * 64 * d + 12 * d
+            total += 2 * d * cfg.d_ff + d * d
+        # FFN
+        if kind != "rwkv":  # rwkv block includes its own channel mix
+            if cfg.ffn_kind(j) == "moe":
+                mo = cfg.moe
+                total += d * mo.n_experts  # router
+                total += (mo.n_experts + mo.n_shared_experts) * 3 * d * mo.d_ff_expert
+            else:
+                total += 3 * d * cfg.d_ff  # gate, up, down (SwiGLU)
+        total += 2 * d  # norms
+    total += d  # final norm
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top_k + shared experts only)."""
+    if cfg.moe is None or cfg.moe_every == 0:
+        return param_count(cfg)
+    mo = cfg.moe
+    full = param_count(cfg)
+    n_moe_layers = sum(
+        1 for j in range(cfg.n_layers) if cfg.ffn_kind(j) == "moe"
+    )
+    inactive = n_moe_layers * (mo.n_experts - mo.top_k) * 3 * cfg.d_model * mo.d_ff_expert
+    return full - inactive

@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+K/V are compressed into a shared latent ``c_kv ∈ R^{kv_lora_rank}`` plus a
+decoupled RoPE key ``k_rope ∈ R^{qk_rope_head_dim}``; queries go through a
+low-rank bottleneck ``q_lora_rank``.  The decode cache stores only
+``(c_kv, k_rope)`` per position — (512+64) floats for DeepSeek-V3 instead of
+2·128·128 for vanilla MHA: a 57× KV-memory compression.  That compressed
+cache is why the long_500k cell is runnable for deepseek-v3 (DESIGN.md §5).
+
+Decode uses the standard MLA absorption trick: since
+``k_nope = c_kv · W_uk`` and score = q_nopeᵀk_nope, we fold ``W_uk`` into the
+query (``q̃ = W_ukᵀ q_nope``) and attend directly over the latent cache —
+never materializing per-head K/V for past positions.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MLAConfig
+from repro.models.layers import apply_rope, init_dense
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray    # (B, S_max, kv_lora_rank)
+    k_rope: jnp.ndarray  # (B, S_max, qk_rope_head_dim)
+
+
+def init_mla(key, d_model: int, cfg: MLAConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": init_dense(ks[0], (d_model, cfg.q_lora_rank)),
+        "w_uq": init_dense(ks[1], (cfg.q_lora_rank, cfg.n_heads * cfg.qk_head_dim)),
+        "w_dkv": init_dense(ks[2], (d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim)),
+        "w_uk": init_dense(ks[3], (cfg.kv_lora_rank, cfg.n_heads * cfg.qk_nope_head_dim)),
+        "w_uv": init_dense(ks[4], (cfg.kv_lora_rank, cfg.n_heads * cfg.v_head_dim)),
+        "w_o": init_dense(ks[5], (cfg.n_heads * cfg.v_head_dim, d_model)),
+    }
+
+
+def init_mla_cache(batch: int, max_seq: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    )
+
+
+_NEG_INF = -1e30
+
+
+def mla_attention(
+    params: dict,
+    x: jnp.ndarray,             # (B, S, d)
+    positions: jnp.ndarray,     # (S,)
+    cfg: MLAConfig,
+    *,
+    rope_theta: float = 10000.0,
+    cache: Optional[MLACache] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[MLACache]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+
+    # Query path: low-rank down + up, split nope/rope parts.
+    q = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+    q = jnp.einsum("bsr,re->bse", q, params["w_uq"]).reshape(
+        b, s, h, cfg.qk_head_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    # KV path: shared latent + decoupled rope key.
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0, :]
+
+    if cache is None:
+        # Prefill/train: materialize per-head K/V from the latent (absorption
+        # only wins at decode) and reuse the blockwise online-softmax
+        # attention so 32k-prefill memory stays O(S · chunk).
+        from repro.models.attention import _attend_chunked, _attend_full, _CHUNK_THRESHOLD
+        from repro.models.config import AttentionConfig
+
+        k_nope = jnp.einsum("bsr,re->bse", c_kv, params["w_uk"]).reshape(
+            b, s, h, cfg.qk_nope_head_dim)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, cfg.qk_rope_head_dim))], axis=-1)
+        v = jnp.einsum("bsr,re->bse", c_kv, params["w_uv"]).reshape(
+            b, s, h, cfg.v_head_dim)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # Pad V up to the QK head dim so the flash recurrence is square.
+        pad_v = cfg.qk_head_dim - cfg.v_head_dim
+        if pad_v > 0:
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad_v)))
+        acfg = AttentionConfig(n_heads=h, n_kv_heads=h, head_dim=cfg.qk_head_dim,
+                               use_rope=False)
+        attend = _attend_chunked if s > _CHUNK_THRESHOLD else _attend_full
+        o = attend(q_full, k_full, v, positions, positions, acfg)
+        o = o[..., : cfg.v_head_dim].reshape(b, s, h * cfg.v_head_dim)
+        return jnp.einsum("bse,ed->bsd", o, params["w_o"]), None
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache_pos, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache_pos, 0))
+        new_cache = MLACache(ck, cr)
+        c_all, r_all = ck, cr
+        k_pos = jnp.arange(c_all.shape[1])
+        k_pos = jnp.where(k_pos < cache_pos + s, k_pos, jnp.iinfo(jnp.int32).max)
+    else:
+        c_all, r_all = c_kv, k_rope
+        k_pos = positions
+
+    # Absorption: fold W_uk into the query → attend over the latent directly.
+    w_uk = params["w_uk"].reshape(cfg.kv_lora_rank, h, cfg.qk_nope_head_dim)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))     # (B,S,H,kv_rank)
+    scale = cfg.qk_head_dim ** -0.5
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat, c_all.astype(jnp.float32))
+        + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                     r_all.astype(jnp.float32))
+    ) * scale
+    mask = positions[:, None] >= k_pos[None, :]
+    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    # Attend over the latent, then up-project per head (absorbed W_uv).
+    o_lat = jnp.einsum("bhst,btr->bshr", probs, c_all.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(b, s, h * cfg.v_head_dim).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", o, params["w_o"]), new_cache

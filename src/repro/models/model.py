@@ -1,0 +1,212 @@
+"""Decoder backbone: embedding → (prologue + scanned periods) → head.
+
+Compile-size discipline: the layer stack is executed as ``lax.scan`` over
+*periods* of the block pattern, so the lowered HLO contains one copy of each
+pattern position regardless of depth (61-layer DeepSeek lowers as 1 MLA body
++ 3 prologue layers).  Parameters of the scanned layers carry a leading
+``n_periods`` axis; decode caches are stacked the same way and threaded
+through the scan.
+
+Train mode rematerializes each period body (``jax.checkpoint``) — the
+standard memory/compute trade for long-sequence training.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.models.layers import embed, init_dense, rms_norm, softcap, unembed
+from repro.sharding.ctx import constrain
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
+    ke, kh, kp, ks = jax.random.split(key, 4)
+    params: dict = {
+        "embed": init_dense(ke, (cfg.vocab_size, cfg.d_model), scale=0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(kh, (cfg.vocab_size, cfg.d_model), scale=0.02)
+
+    # Unscanned prologue layers.
+    prologue = []
+    for i in range(cfg.n_dense_prologue):
+        kp, sub = jax.random.split(kp)
+        prologue.append(blocks.init_layer(sub, cfg, cfg.pattern[0], "dense"))
+    if prologue:
+        params["prologue"] = prologue
+
+    # Scanned periods: one stacked tree per pattern position.
+    period_params = {}
+    for j, kind in enumerate(cfg.pattern):
+        ffn = cfg.ffn_kind(cfg.n_dense_prologue + j)
+        ks, sub = jax.random.split(ks)
+        keys = jax.random.split(sub, cfg.n_periods)
+        period_params[f"pos{j}"] = jax.vmap(
+            lambda k: blocks.init_layer(k, cfg, kind, ffn)
+        )(keys)
+    params["periods"] = period_params
+    return params
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    cache: dict = {}
+    if cfg.n_dense_prologue:
+        cache["prologue"] = [
+            blocks.init_layer_cache(cfg, cfg.pattern[0], batch, max_seq)
+            for _ in range(cfg.n_dense_prologue)
+        ]
+    periods = {}
+    for j, kind in enumerate(cfg.pattern):
+        one = blocks.init_layer_cache(cfg, kind, batch, max_seq)
+        periods[f"pos{j}"] = (
+            None if one is None
+            else jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_periods, *x.shape)).copy(), one)
+        )
+    cache["periods"] = periods
+    return cache
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _period_body(cfg: ModelConfig, x, positions, period_params, period_cache,
+                 encoder_states, cache_pos):
+    """Apply one period (all pattern positions). Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    for j, kind in enumerate(cfg.pattern):
+        ffn = cfg.ffn_kind(cfg.n_dense_prologue + j)
+        layer_cache = None if period_cache is None else period_cache.get(f"pos{j}")
+        x, nc, a = blocks.apply_layer(
+            period_params[f"pos{j}"], x, positions, cfg, kind, ffn,
+            encoder_states=encoder_states, cache=layer_cache,
+            cache_pos=cache_pos)
+        new_cache[f"pos{j}"] = nc
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,                     # (B, S) int32
+    cfg: ModelConfig,
+    *,
+    encoder_states: Optional[jnp.ndarray] = None,   # (B, T_enc, d) stub frontend
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    remat: bool = True,
+) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Run the backbone. Returns (logits, new_cache, aux_loss)."""
+    b, s = tokens.shape
+    x = embed(tokens, params["embed"]) * jnp.asarray(
+        cfg.d_model ** 0.5, jnp.bfloat16)
+    x = constrain(x, "dp", None, None)
+    if cache_pos is None:
+        positions = jnp.arange(s)
+        cache_pos_v = jnp.zeros((), jnp.int32)
+    else:
+        positions = cache_pos + jnp.arange(s)
+        cache_pos_v = cache_pos
+
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+
+    # Prologue (unscanned).
+    if "prologue" in params:
+        pcaches = (cache or {}).get("prologue", [None] * cfg.n_dense_prologue)
+        new_p = []
+        for i, lp in enumerate(params["prologue"]):
+            x, nc, a = blocks.apply_layer(
+                lp, x, positions, cfg, cfg.pattern[0], "dense",
+                encoder_states=encoder_states, cache=pcaches[i],
+                cache_pos=cache_pos_v)
+            new_p.append(nc)
+            aux = aux + a
+        if cache is not None:
+            new_cache["prologue"] = new_p
+
+    # Scanned periods.
+    period_cache = (cache or {}).get("periods")
+
+    def body(carry, scanned):
+        xc, auxc = carry
+        pp, pc = scanned
+        xc, nc, a = _period_body(cfg, xc, positions, pp, pc,
+                                 encoder_states, cache_pos_v)
+        return (xc, auxc + a), nc
+
+    if remat and cache is None:
+        body = jax.checkpoint(body)
+
+    (x, aux), scanned_cache = jax.lax.scan(
+        body, (x, aux), (params["periods"], period_cache))
+    if cache is not None:
+        new_cache["periods"] = scanned_cache
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(x, table).astype(jnp.float32)
+    logits = constrain(logits, "dp", None, "tp")  # vocab-parallel logits
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, (new_cache if cache is not None else None), aux
+
+
+# --------------------------------------------------------------------------
+# losses / steps
+# --------------------------------------------------------------------------
+
+def lm_loss(
+    params: dict,
+    tokens: jnp.ndarray,       # (B, S)
+    labels: jnp.ndarray,       # (B, S) — next-token targets, -1 = masked
+    cfg: ModelConfig,
+    *,
+    encoder_states: Optional[jnp.ndarray] = None,
+    aux_coef: float = 0.01,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, _, aux = forward(params, tokens, cfg, encoder_states=encoder_states)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    # Vocab-parallel cross-entropy: never gather the (B, S, V) logits.
+    # logsumexp reduces over the sharded vocab axis (small all-reduce of
+    # (B, S) stats); the label logit is picked with an iota==label mask that
+    # the SPMD partitioner keeps sharded — no 26 GB take_along_axis gather.
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    iota_v = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    label_logit = jnp.sum(
+        jnp.where(iota_v == safe[..., None], logits, 0.0), axis=-1)
+    nll = lse - label_logit
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    ce = jnp.sum(jnp.where(valid, nll, 0.0)) / denom
+    loss = ce + aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    tokens: jnp.ndarray,       # (B, 1) — the newest token
+    pos: jnp.ndarray,          # scalar int32 — number of tokens already cached
+    cfg: ModelConfig,
+    *,
+    encoder_states: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, dict]:
+    """One decode step: returns (logits (B, V), updated cache)."""
+    logits, new_cache, _ = forward(
+        params, tokens, cfg, encoder_states=encoder_states,
+        cache=cache, cache_pos=pos, remat=False)
+    return logits[:, -1], new_cache

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN: top-k router + grouped capacity-based dispatch.
+
+TPU-idiomatic dense-dispatch (Shazeer/Switch style): tokens are routed via
+one-hot dispatch/combine tensors so the expert computation is one batched
+einsum with the expert axis shardable over the ``model`` mesh axis (expert
+parallelism).  Tokens compete for capacity *within their own sequence*
+(group = batch row), which keeps the dispatch tensor at
+``(B, S, E, C)`` with ``E·C ≈ capacity_factor·k·S`` — a ~few-percent FLOP
+overhead relative to the expert FFN itself (see EXPERIMENTS.md §Roofline for
+the measured ratio) and no cross-sequence routing traffic.
+
+Supports shared experts (DeepSeek-V3: 1 shared + 256 routed, top-8), f32
+router, and a Switch-style load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoEConfig
+from repro.models.layers import init_dense
+from repro.sharding.ctx import constrain, logical_axis_size
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig) -> dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    e = cfg.n_experts
+    f = cfg.d_ff_expert
+    keys = jax.random.split(ke, 3)
+    params = {
+        "router": (jax.random.normal(kr, (d_model, e), dtype=jnp.float32)
+                   * (d_model ** -0.5)),
+        "w_gate": init_dense(keys[0], (e, d_model, f), scale=d_model ** -0.5),
+        "w_up": init_dense(keys[1], (e, d_model, f), scale=d_model ** -0.5),
+        "w_down": init_dense(keys[2], (e, f, d_model), scale=f ** -0.5),
+    }
+    if cfg.n_shared_experts:
+        sk = jax.random.split(ks, 3)
+        fs = cfg.d_ff_expert * cfg.n_shared_experts
+        params["shared"] = {
+            "w_gate": init_dense(sk[0], (d_model, fs)),
+            "w_up": init_dense(sk[1], (d_model, fs)),
+            "w_down": init_dense(sk[2], (fs, d_model)),
+        }
+    return params
+
+
+def _topk_mask(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(..., E) → boolean mask of the per-token top-k experts."""
+    thresh = jax.lax.top_k(scores, k)[0][..., -1:]
+    return scores >= thresh
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, cfg: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply the MoE FFN. x: (B, S, d) → (out, aux_loss)."""
+    b0, s0, d = x.shape
+    # Under sequence parallelism the residual stream arrives seq-sharded;
+    # routing needs whole groups, so gather once here (the Megatron-SP
+    # layer-entry AG) rather than letting the partitioner reshard every
+    # dispatch einsum (observed as an all-to-all storm, §Perf iter 6).
+    x = constrain(x, "dp", None, None)
+    # Routing groups: fold sequence chunks of `group_size` into the batch
+    # axis so dispatch/combine cost is linear in S (E·C ≈ cf·k·g per group).
+    gsz = min(s0, cfg.group_size)
+    pad = (-s0) % gsz
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    n_groups = x.shape[1] // gsz
+    x = x.reshape(b0 * n_groups, gsz, d)
+
+    b, s, _ = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    capacity = max(1, int(cfg.capacity_factor * s * k / e))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    mask = _topk_mask(logits, k)  # (B, S, E), k per token
+    gates = jnp.where(mask, probs, 0.0)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each token within its expert's per-sequence buffer.
+    pos_in_expert = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1  # (B, S, E)
+    in_capacity = mask & (pos_in_expert < capacity)
+    pos_clipped = jnp.where(in_capacity, pos_in_expert, 0)
+
+    # dispatch[b, s, e, c] — one-hot over capacity slots.
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (b, s, e, capacity), 3)
+    dispatch = (in_capacity[..., None] & (iota_c == pos_clipped[..., None])
+                ).astype(x.dtype)
+    combine = dispatch * gates.astype(x.dtype)[..., None]
+
+    # Expert compute.  EP when the expert count divides the TP axis, else
+    # TP over the expert-FFN width (mixtral: E=8 < 16 → f-sharding), matching
+    # the weight-spec fallback in sharding/rules.py.
+    ep = e % max(logical_axis_size("tp"), 1) == 0
+    xe = jnp.einsum("bsd,bsec->becd", x, dispatch)      # (B, E, C, d)
+    # EP: expert axis sharded.  f-TP fallback (E < tp): shard the d axis of
+    # the dispatched tokens so the dispatch/combine einsums don't replicate
+    # across model shards (§Perf iter 4 — 16× dispatch work otherwise).
+    xe = constrain(xe, "dp", "tp" if ep else None, None,
+                   None if ep else "tp")
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, params["w_gate"]))
+    u = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    spec_f = ("dp", "tp", None, None) if ep else ("dp", None, None, "tp")
+    g = constrain(g, *spec_f)
+    u = constrain(u, *spec_f)
+    ye = jnp.einsum("becf,efd->becd", g * u, params["w_down"])
+    ye = constrain(ye, "dp", "tp" if ep else None, None,
+                   None if ep else "tp")
+    out = jnp.einsum("becd,bsec->bsd", ye, combine)
+    # f-TP mode: keep the combine output d-sharded (one AG at the residual
+    # boundary beats 16× replicated combine FLOPs).
+    out = constrain(out, "dp", None, None if ep else "tp")
+
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        gs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sh["w_gate"])) * jnp.einsum(
+            "bsd,df->bsf", x, sh["w_up"])
+        gs = constrain(gs, "dp", None, "tp")
+        out = out + jnp.einsum("bsf,fd->bsd", gs, sh["w_down"])
+
+    # Load-balancing auxiliary loss (Switch-style): E · Σ_e f_e · p_e / k.
+    frac_tokens = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs) / k
+
+    out = out.reshape(b0, n_groups * gsz, d)[:, :s0]
+    return out, aux

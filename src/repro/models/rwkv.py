@@ -1,0 +1,188 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+The WKV-6 recurrence per head (state ``S ∈ R^{dk×dv}``)::
+
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+
+with the Finch signature feature: the decay ``w_t = exp(−exp(w0 + LoRA(x_t)))``
+is *data-dependent* per channel per step.
+
+TPU mapping (DESIGN.md §3): the serial recurrence is rewritten in the
+standard *chunked linear-attention* form — within a chunk of ``_CHUNK``
+tokens all terms become dense matmuls against cumulative decay products
+(MXU-friendly), and a ``lax.scan`` carries the (B, H, dk, dv) state across
+chunks.  Cumulative decays are applied in log space in f32 for stability.
+
+Decode carries (prev-token vectors, state) — constant memory ⇒ long_500k.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+_CHUNK = 32
+_HEAD_DIM = 64
+_DECAY_LORA = 64
+
+
+class RWKVCache(NamedTuple):
+    tm_prev: jnp.ndarray  # (B, d) last token entering time-mix
+    cm_prev: jnp.ndarray  # (B, d) last token entering channel-mix
+    state: jnp.ndarray    # (B, H, dk, dv) WKV state
+
+
+def init_rwkv(key, d_model: int, d_ff: int) -> dict:
+    h = d_model // _HEAD_DIM
+    ks = jax.random.split(key, 10)
+    return {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d_model), jnp.float32),  # r,k,v,w,g shift mix
+        "w_r": init_dense(ks[0], (d_model, d_model)),
+        "w_k": init_dense(ks[1], (d_model, d_model)),
+        "w_v": init_dense(ks[2], (d_model, d_model)),
+        "w_g": init_dense(ks[3], (d_model, d_model)),
+        "w_o": init_dense(ks[4], (d_model, d_model)),
+        "w0": -6.0 * jnp.ones((d_model,), jnp.float32),
+        "w_lora_a": init_dense(ks[5], (d_model, _DECAY_LORA)),
+        "w_lora_b": (jax.random.normal(ks[6], (_DECAY_LORA, d_model)) * 0.01
+                     ).astype(jnp.bfloat16),
+        "u_bonus": jnp.zeros((h, _HEAD_DIM), jnp.float32),
+        "ln_x": jnp.zeros((d_model,), jnp.float32),
+        # channel-mix
+        "mu_cm": 0.5 * jnp.ones((2, d_model), jnp.float32),
+        "cm_k": init_dense(ks[7], (d_model, d_ff)),
+        "cm_v": init_dense(ks[8], (d_ff, d_model)),
+        "cm_r": init_dense(ks[9], (d_model, d_model)),
+    }
+
+
+def init_rwkv_cache(batch: int, d_model: int, dtype=jnp.float32) -> RWKVCache:
+    h = d_model // _HEAD_DIM
+    return RWKVCache(
+        jnp.zeros((batch, d_model), dtype),
+        jnp.zeros((batch, d_model), dtype),
+        jnp.zeros((batch, h, _HEAD_DIM, _HEAD_DIM), dtype),
+    )
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Shift sequence right by one; position 0 sees ``prev`` (or zeros)."""
+    first = (prev[:, None, :] if prev is not None
+             else jnp.zeros_like(x[:, :1]))
+    return jnp.concatenate([first.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u, state0):
+    """Chunked WKV-6. r,k,v: (B,S,H,dk); logw: (B,S,H,dk) (≤0); u: (H,dk).
+
+    Returns y: (B,S,H,dv), final state (B,H,dk,dv).
+    """
+    b, s, h, dk = r.shape
+    chunk = min(s, _CHUNK)
+    pad = (-s) % chunk
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = r.shape[1] // chunk
+    resh = lambda t: t.reshape(b, n_chunks, chunk, h, dk).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(logw)
+
+    def step(state, inp):
+        rb, kb, vb, lwb = (t.astype(jnp.float32) for t in inp)  # (B,c,H,dk)
+        # Cumulative log-decay INCLUSIVE of step t: L_t = Σ_{s≤t} logw_s.
+        lcum = jnp.cumsum(lwb, axis=1)
+        l_prev = lcum - lwb                      # exclusive: Σ_{s<t}
+        l_total = lcum[:, -1]                    # (B,H,dk)
+
+        r_dec = rb * jnp.exp(l_prev)             # r̃_t = r_t ⊙ W_{t-1}
+        k_inc = kb * jnp.exp(l_total[:, None] - lcum)  # k̃_s = k_s ⊙ W_c/W_s
+
+        # Inter-chunk: y_inter_t = r̃_t · S_in.
+        y_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, state)
+
+        # Intra-chunk (strictly past): scores_{t,s} = r_t·W_{t-1}/W_s·k_s.
+        k_rel = kb * jnp.exp(-lcum)              # k_s / W_s
+        scores = jnp.einsum("bchk,bshk->bhcs", r_dec, k_rel)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y_intra = jnp.einsum("bhcs,bshv->bchv", scores, vb)
+
+        # Diagonal bonus term: r_t · diag(u) k_tᵀ v_t.
+        bonus = jnp.einsum("bchk,hk,bchk->bch", rb, u, kb)
+        y_diag = bonus[..., None] * vb
+
+        # State update: S_out = diag(W_c) S_in + Σ_s diag(W_c/W_s) k_sᵀ v_s.
+        s_new = (jnp.exp(l_total)[..., None] * state
+                 + jnp.einsum("bshk,bshv->bhkv", k_inc, vb))
+        return s_new, y_inter + y_intra + y_diag
+
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, h, dk)[:, :s]
+    return y, state
+
+
+def rwkv_time_mix(
+    params: dict,
+    x: jnp.ndarray,           # (B, S, d) — pre-normed input
+    *,
+    prev: Optional[jnp.ndarray] = None,       # (B, d) last token (decode)
+    state0: Optional[jnp.ndarray] = None,     # (B, H, dk, dv)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """WKV-6 time-mix. Returns (delta, last_token, new_state)."""
+    b, s, d = x.shape
+    h = d // _HEAD_DIM
+
+    shifted = _token_shift(x, prev)
+    mu = params["mu"][:, None, None, :]  # (5,1,1,d)
+    mix = lambda i: x * mu[i] + shifted * (1.0 - mu[i])
+    xr, xk, xv, xw, xg = (mix(i).astype(x.dtype) for i in range(5))
+
+    to_heads = lambda t: t.reshape(b, s, h, _HEAD_DIM)
+    r = to_heads(jnp.einsum("bsd,de->bse", xr, params["w_r"]))
+    k = to_heads(jnp.einsum("bsd,de->bse", xk, params["w_k"]))
+    v = to_heads(jnp.einsum("bsd,de->bse", xv, params["w_v"]))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["w_g"]))
+
+    # Finch data-dependent decay: logw = −exp(w0 + LoRA(x_w)) ∈ (−∞, 0).
+    lora = jnp.einsum("bsd,dr->bsr", xw, params["w_lora_a"])
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(lora), params["w_lora_b"])
+    logw = -jnp.exp(params["w0"] + lora.astype(jnp.float32))  # (B,S,d)
+    logw = to_heads(logw)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, _HEAD_DIM, _HEAD_DIM), jnp.float32)
+    y, state = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), logw, params["u_bonus"],
+                            state0)
+    y = y.reshape(b, s, d)
+    # GroupNorm over heads (ln_x), then gate and project.
+    yh = y.reshape(b, s, h, _HEAD_DIM)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(b, s, d) * (1.0 + params["ln_x"])).astype(x.dtype)
+    tm_out = jnp.einsum("bse,ed->bsd", y * g, params["w_o"])
+    return tm_out, x[:, -1], state
+
+
+def rwkv_channel_mix(
+    params: dict,
+    x: jnp.ndarray,           # (B, S, d) — pre-normed input
+    *,
+    prev: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV-6 channel-mix. Returns (delta, last_token)."""
+    shifted = _token_shift(x, prev)
+    mu_cm = params["mu_cm"][:, None, None, :]
+    xk = (x * mu_cm[0] + shifted * (1 - mu_cm[0])).astype(x.dtype)
+    xr = (x * mu_cm[1] + shifted * (1 - mu_cm[1])).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, params["cm_k"])))
+    cm = jnp.einsum("bsf,fd->bsd", kk, params["cm_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["cm_r"]))
+    return rr * cm, x[:, -1]

@@ -1,0 +1,86 @@
+"""Activation-sharding context: logical-axis constraints inside model code.
+
+Model code calls ``constrain(x, "dp", None, "tp", ...)`` with *logical* axis
+names; when an activation-sharding context is active (set by the launcher
+around tracing), these map to the physical mesh axes
+
+    "dp" → ("pod", "data")   (whatever data axes the mesh has)
+    "tp" → "model"
+
+and become ``jax.lax.with_sharding_constraint`` calls — the Megatron-style
+pattern that pins the FFN intermediate to TP shards, activations to DP
+shards, etc., so the SPMD partitioner can't pick pathological strategies
+(e.g. contraction-sharded FFN with a d_ff-wide all-reduce, observed in the
+baseline — see EXPERIMENTS.md §Perf iteration 1).
+
+Outside a context (unit tests, single-host smoke) ``constrain`` is a no-op.
+Axes that do not divide the corresponding dimension are dropped per-call, so
+the same model code serves every (arch × shape × mesh) cell.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh):
+    """Enable logical-axis activation constraints while tracing."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    logical = {
+        "dp": dp if len(dp) != 1 else dp[0],
+        "tp": "model" if "model" in axes else None,
+    }
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, axes, logical)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def _axis_size(axes: dict, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return int(np.prod([axes[n] for n in names]))
+
+
+def logical_axis_size(name: str) -> int:
+    """Size of a logical axis ('dp'/'tp') in the active context (1 if none)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return 1
+    _, axes, logical = ctx
+    return _axis_size(axes, logical.get(name))
+
+
+def constrain(x, *logical_spec):
+    """Apply a sharding constraint using logical axis names ('dp'/'tp'/None).
+
+    No-op when no context is active.  Drops any axis whose size does not
+    divide the dimension (so callers never special-case shapes).
+    """
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, axes, logical = ctx
+    entries = []
+    for dim, name in zip(x.shape, logical_spec):
+        phys = logical.get(name) if name else None
+        if phys is None or dim % _axis_size(axes, phys) != 0:
+            entries.append(None)
+        else:
+            entries.append(phys)
+    entries += [None] * (x.ndim - len(entries))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

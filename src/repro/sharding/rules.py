@@ -1,0 +1,272 @@
+"""Parameter / activation / cache sharding rules (DESIGN.md §6).
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod.  Batch shards over (pod×)data; tensor dims over model:
+
+* embedding & head      — vocab over ``model``
+* attention q/k/v/o     — head dim over ``model``
+* dense FFN             — d_ff over ``model``
+* MoE experts           — expert axis over ``model`` (expert parallelism)
+* mamba / rwkv inner    — d_inner / heads over ``model``
+* KV & state caches     — batch over data axes, *sequence* over ``model``
+                          (sequence parallelism: lets 500k-token caches fit)
+
+Rules are path-based regexes over flattened parameter paths; scanned period
+stacks get their leading ``n_periods`` axis automatically skipped.  ZeRO-1
+(`zero1=True`) additionally shards optimizer-state leaves over ``data`` on
+the largest remaining unsharded dimension.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (path regex, spec WITHOUT the scan axis). First match wins.
+_PARAM_RULES: Tuple[Tuple[str, P], ...] = (
+    (r"embed$",                       P("model", None)),
+    (r"head$",                        P("model", None)),
+    (r"final_norm$",                  P(None)),
+    # attention
+    (r"mixer/w[qkv]$",                P(None, "model")),
+    (r"mixer/wo$",                    P("model", None)),
+    # MLA
+    (r"mixer/w_dq$",                  P(None, None)),
+    (r"mixer/w_uq$",                  P(None, "model")),
+    (r"mixer/w_dkv$",                 P(None, None)),
+    (r"mixer/w_u[kv]$",               P(None, "model")),
+    (r"mixer/w_o$",                   P("model", None)),
+    # FFN (dense 2-dim and MoE 3-dim share key names; candidates are
+    # rank-filtered, and among rank matches the first fully-divisible spec
+    # wins — EP on the expert axis with f-TP fallback when E < tp).
+    (r"ffn/router$",                  P(None, None)),
+    (r"ffn/shared/w_(gate|up)$",      P(None, "model")),
+    (r"ffn/shared/w_down$",           P("model", None)),
+    # Expert weights: EP over model + FSDP over data (ZeRO-3: stored
+    # sharded, all-gathered per scan step — DeepSeek's 654B of experts is
+    # 82 GB/device under EP alone, far over HBM; FSDP/16 → 5 GB).
+    (r"ffn/w_(gate|up)$",             (P("model", "data", None),
+                                       P("model", None, None),
+                                       P(None, "data", "model"),
+                                       P(None, None, "model"),
+                                       P(None, "model"))),
+    (r"ffn/w_down$",                  (P("model", "data", None),
+                                       P("model", None, None),
+                                       P(None, "model", "data"),
+                                       P(None, "model", None),
+                                       P("model", None))),
+    # dense FFN
+    (r"ffn/w_(gate|up)$",             P(None, "model")),
+    (r"ffn/w_down$",                  P("model", None)),
+    # mamba
+    (r"mixer/in_proj$",               P(None, "model")),
+    (r"mixer/conv_w$",                P(None, "model")),
+    (r"mixer/conv_b$",                P("model")),
+    (r"mixer/x_proj$",                P("model", None)),
+    (r"mixer/dt_proj$",               P(None, "model")),
+    (r"mixer/dt_bias$",               P("model")),
+    (r"mixer/a_log$",                 P("model", None)),
+    (r"mixer/d_skip$",                P("model")),
+    (r"mixer/out_proj$",              P("model", None)),
+    # rwkv
+    (r"mixer/mu(_cm)?$",              P(None, None)),
+    (r"mixer/w_[rkvg]$",              P(None, "model")),
+    (r"mixer/w0$",                    P("model")),
+    (r"mixer/w_lora_a$",              P(None, None)),
+    (r"mixer/w_lora_b$",              P(None, "model")),
+    (r"mixer/u_bonus$",               P("model", None)),
+    (r"mixer/ln_x$",                  P("model")),
+    (r"mixer/cm_[kr]$",               P(None, "model")),
+    (r"mixer/cm_v$",                  P("model", None)),
+    # norms & anything scalar
+    (r"norm[12]$",                    P(None)),
+    # sketch head (vocab axis last → shard over model)
+    (r"sketch/array$",                P(None, None, "model")),
+    (r"sketch/.*$",                   P(None)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharded axes that don't divide; pad spec rank to the array rank."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([axes[n] for n in names]))
+        out.append(entry if dim % total == 0 else None)
+    return P(*out)
+
+
+def _fully_fits(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> bool:
+    return tuple(_fit_spec(spec, shape, mesh)) == tuple(
+        list(spec) + [None] * (len(shape) - len(spec)))
+
+
+def param_spec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+               scanned: bool) -> P:
+    rank = len(shape) - (1 if scanned else 0)
+    for pattern, specs in _PARAM_RULES:
+        if re.search(pattern, path_str):
+            candidates = (specs,) if isinstance(specs, P) else tuple(specs)
+            ranked = [s for s in candidates if len(s) == rank] or list(candidates)
+            for spec in ranked:
+                base = P(None, *spec) if scanned else spec
+                if _fully_fits(base, shape, mesh):
+                    return base
+            base = P(None, *ranked[0]) if scanned else ranked[0]
+            return _fit_spec(base, shape, mesh)
+    return _fit_spec(P(), shape, mesh)
+
+
+def params_shardings(params, mesh: Mesh):
+    """NamedSharding pytree for a model parameter tree."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        scanned = "periods/" in ps
+        return NamedSharding(mesh, param_spec(ps, leaf.shape, mesh, scanned))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def zero1_shardings(params, mesh: Mesh):
+    """Optimizer-state sharding: param spec + `data` on the largest free dim."""
+    dax = data_axes(mesh)
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = int(np.prod([axes[a] for a in dax]))
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        scanned = "periods/" in ps
+        spec = list(param_spec(ps, leaf.shape, mesh, scanned))
+        spec += [None] * (len(leaf.shape) - len(spec))
+        # FSDP-sharded params already use the data axes — state follows.
+        used = {n for e in spec if e is not None
+                for n in (e if isinstance(e, tuple) else (e,))}
+        if used & set(dax):
+            return NamedSharding(mesh, P(*spec))
+        # Pick the largest unsharded, divisible dim for the data axes.
+        best, best_dim = -1, -1
+        for i, (dim, entry) in enumerate(zip(leaf.shape, spec)):
+            if entry is None and dim % dsize == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best >= 0 and dsize > 1:
+            spec[best] = dax if len(dax) > 1 else dax[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(batch_size: int, mesh: Mesh) -> P:
+    """Spec for a batch axis: (pod, data) if divisible, else what fits."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dax = data_axes(mesh)
+    total = int(np.prod([axes[a] for a in dax]))
+    if batch_size % total == 0:
+        return dax if len(dax) > 1 else dax[0]
+    # try data only (drop pod), then nothing
+    if "data" in axes and batch_size % axes["data"] == 0:
+        return "data"
+    return None
+
+
+def cache_shardings(cache, mesh: Mesh, batch_size: int):
+    """Decode-cache sharding: batch over data axes, *features* over model.
+
+    The sequence axis is deliberately never sharded: the per-step
+    ``dynamic_update_slice`` at a traced position does not partition across
+    a sharded dim.  Instead each cache type shards a feature dim
+    (SP-for-memory via heads / head_dim / latent rank):
+
+      attention KVCache k/v  (B, S, kv, dh) → kv over model if divisible,
+                                              else dh over model
+      MLA c_kv / k_rope      (B, S, r)      → r over model
+      mamba conv             (B, c-1, d_in) → d_in over model
+      mamba ssm              (B, d_in, N)   → d_in over model
+      rwkv prev vectors      (B, d)         → d over model
+      rwkv state             (B, H, dk, dv) → H over model
+
+    Scanned caches carry a leading n_periods axis (skipped).  All specs are
+    divisibility-checked by _fit_spec.
+    """
+    from repro.models.attention import KVCache
+    from repro.models.mamba import MambaCache
+    from repro.models.mla import MLACache
+    from repro.models.rwkv import RWKVCache
+
+    bspec = batch_spec(batch_size, mesh)
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = axes.get("model", 1)
+
+    def leaf_spec(kind_field, shape, scanned):
+        rank = len(shape) - (1 if scanned else 0)
+        dims = shape[1:] if scanned else shape
+        if kind_field == "kv":          # (B, S, kv, dh)
+            if dims[2] % msize == 0:
+                spec = P(bspec, None, "model", None)
+            else:
+                spec = P(bspec, None, None, "model")
+        elif kind_field == "mla":       # (B, S, r)
+            spec = P(bspec, None, "model")
+        elif kind_field == "mamba_conv":
+            spec = P(bspec, None, "model")
+        elif kind_field == "mamba_ssm":  # (B, d_in, N)
+            spec = P(bspec, "model", None)
+        elif kind_field == "rwkv_prev":  # (B, d)
+            spec = P(bspec, "model")
+        elif kind_field == "rwkv_state":  # (B, H, dk, dv)
+            spec = P(bspec, "model", None, None)
+        else:
+            spec = P(bspec, *([None] * (rank - 1)))
+        if scanned:
+            spec = P(None, *spec)
+        return NamedSharding(mesh, _fit_spec(spec, shape, mesh))
+
+    def rec(node, scanned):
+        if node is None:
+            return None
+        if isinstance(node, KVCache):
+            return KVCache(leaf_spec("kv", node.k.shape, scanned),
+                           leaf_spec("kv", node.v.shape, scanned))
+        if isinstance(node, MLACache):
+            return MLACache(leaf_spec("mla", node.c_kv.shape, scanned),
+                            leaf_spec("mla", node.k_rope.shape, scanned))
+        if isinstance(node, MambaCache):
+            return MambaCache(leaf_spec("mamba_conv", node.conv.shape, scanned),
+                              leaf_spec("mamba_ssm", node.ssm.shape, scanned))
+        if isinstance(node, RWKVCache):
+            return RWKVCache(leaf_spec("rwkv_prev", node.tm_prev.shape, scanned),
+                             leaf_spec("rwkv_prev", node.cm_prev.shape, scanned),
+                             leaf_spec("rwkv_state", node.state.shape, scanned))
+        if isinstance(node, dict):
+            return {k: rec(v, scanned or k == "periods") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v, scanned) for v in node)
+        return leaf_spec("other", node.shape, scanned)
+
+    return rec(cache, False)

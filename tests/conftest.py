@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device; the 512-device dry-run has its
+# own subprocess tests (test_dryrun.py) so device count stays 1 here.
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one decode
+step on CPU, shape + NaN assertions, decode-vs-prefill consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import arch_names, get_config
+from repro.models.config import active_param_count, param_count
+from repro.models.model import (decode_step, forward, init_decode_cache,
+                                init_model, lm_loss)
+
+ARCHS = arch_names()
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    key = jax.random.PRNGKey(0)
+    for name in ARCHS:
+        cfg = get_config(name, smoke=True)
+        out[name] = (cfg, init_model(key, cfg))
+    return out
+
+
+def _enc(cfg, b, key):
+    if not cfg.n_encoder_tokens:
+        return None
+    return jax.random.normal(key, (b, cfg.n_encoder_tokens, cfg.d_model),
+                             dtype=jnp.bfloat16)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_no_nan(name, setups):
+    cfg, params = setups[name]
+    b, s = 2, 16
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    logits, _, aux = forward(params, toks, cfg, encoder_states=_enc(cfg, b, key))
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert float(aux) >= 0.0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_loss_finite(name, setups):
+    cfg, params = setups[name]
+    b, s = 2, 16
+    key = jax.random.PRNGKey(2)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    labels = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    loss, parts = lm_loss(params, toks, labels, cfg,
+                          encoder_states=_enc(cfg, b, key))
+    assert np.isfinite(float(loss))
+    # Random labels over V classes: CE should be near log(V).
+    assert abs(float(parts["ce"]) - np.log(cfg.vocab_size)) < 2.0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_matches_forward(name, setups):
+    cfg, params = setups[name]
+    if cfg.moe is not None:
+        # Capacity dropping differs between prefill and decode by design;
+        # disable dropping for the equivalence check.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    b, s = 2, 10
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    enc = _enc(cfg, b, key)
+    full, _, _ = forward(params, toks, cfg, encoder_states=enc, remat=False)
+    cache = init_decode_cache(cfg, b, 16)
+    outs = []
+    for t in range(s):
+        lg, cache = decode_step(params, cache, toks[:, t:t + 1],
+                                jnp.asarray(t, jnp.int32), cfg,
+                                encoder_states=enc)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    err = float(jnp.max(jnp.abs(dec - full))) / scale
+    # Recurrent blocks accumulate in a different order between the chunked
+    # train scan and the single-step decode recurrence; in bf16 that costs
+    # ~1e-1 relative at random-init logit scale (verified 1.8e-3 in f32).
+    tol = 0.2 if any(k in cfg.pattern for k in ("mamba", "rwkv")) else 0.08
+    assert err < tol, f"{name}: rel decode mismatch {err}"
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_param_count_matches_init(name, setups):
+    cfg, params = setups[name]
+    analytic = param_count(cfg)
+    actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    # Analytic model omits tiny per-block extras (biases, mixing vectors);
+    # require agreement within 5%.
+    assert abs(actual - analytic) / actual < 0.05, (name, actual, analytic)
+    assert active_param_count(cfg) <= analytic
+
+
+def test_full_config_param_counts():
+    """Full (non-smoke) configs match their published parameter scales."""
+    expected_b = {   # billions, generous bands (vocab/head variants differ)
+        "stablelm-12b": (10, 14),
+        "gemma2-27b": (24, 30),
+        "granite-8b": (7, 9.5),
+        "command-r-35b": (28, 40),   # 30.3B with the assigned dims (SwiGLU)
+        "mixtral-8x7b": (42, 50),       # total (not active) params
+        "deepseek-v3-671b": (600, 720),
+        "llama-3.2-vision-11b": (8, 12),  # backbone only (frontend stubbed)
+        "rwkv6-1.6b": (1.2, 2.2),
+        "jamba-v0.1-52b": (48, 58),
+        "musicgen-large": (2.6, 3.8),  # 3.3B per hf (decoder incl. head)
+    }
+    for name, (lo, hi) in expected_b.items():
+        n = param_count(get_config(name)) / 1e9
+        assert lo <= n <= hi, f"{name}: {n:.2f}B not in [{lo},{hi}]"

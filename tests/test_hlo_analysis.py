@@ -1,0 +1,65 @@
+"""HLO analyzer: trip-weighted FLOP/byte/collective accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    r = analyze(_hlo(lambda a, b: a @ b, x, w))
+    assert r["flops"] == 2 * 64 * 128 * 32
+
+
+def test_scan_trip_count_multiplies():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def f(a, b):
+        return jax.lax.scan(lambda c, _: (c @ b, None), a, None, length=7)[0]
+
+    r = analyze(_hlo(f, x, w))
+    assert r["flops"] == 7 * 2 * 32**3
+
+
+def test_nested_scan_multiplies():
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def f(a, b):
+        def outer(c, _):
+            inner = jax.lax.scan(lambda ci, _: (ci @ b, None), c, None,
+                                 length=5)[0]
+            return inner, None
+        return jax.lax.scan(outer, a, None, length=3)[0]
+
+    r = analyze(_hlo(f, x, w))
+    assert r["flops"] == 15 * 2 * 16**3
+
+
+def test_batched_dot_counts_batch_dims():
+    x = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 8), jnp.float32)
+    r = analyze(_hlo(lambda a, b: jnp.einsum("bsk,kd->bsd", a, b), x, w))
+    assert r["flops"] == 2 * 4 * 8 * 8 * 16
+
+
+def test_bytes_positive_and_bounded():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    r = analyze(_hlo(lambda a: a * 2.0 + 1.0, x))
+    nbytes = 256 * 256 * 4
+    assert nbytes <= r["bytes_accessed"] <= 6 * nbytes
+
+
+def test_elementwise_flops_counted():
+    x = jax.ShapeDtypeStruct((128,), jnp.float32)
+    r = analyze(_hlo(lambda a: jnp.tanh(a) * a, x))
+    assert r["elementwise_flops"] >= 2 * 128

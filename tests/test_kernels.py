@@ -1,0 +1,129 @@
+"""Per-kernel Pallas (interpret mode) vs pure-jnp oracle, shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.lsh_hash.ops import lsh_hash
+from repro.kernels.lsh_hash.ref import lsh_hash_ref
+from repro.kernels.race_query.ops import race_query
+from repro.kernels.race_query.ref import race_query_ref
+from repro.kernels.race_update.ops import race_update
+from repro.kernels.race_update.ref import race_update_ref
+from repro.kernels.sketch_head.ops import sketch_head_logits
+from repro.kernels.sketch_head.ref import sketch_head_ref
+
+
+@pytest.mark.parametrize("b", [1, 7, 128, 130])
+@pytest.mark.parametrize("d,l,k,r", [(8, 16, 1, 8), (64, 40, 3, 32),
+                                     (17, 5, 2, 100)])
+def test_lsh_hash_matches_ref(b, d, l, k, r):
+    key = jax.random.PRNGKey(b * 1000 + d)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (b, d))
+    w = jax.random.normal(kw, (l, k, d))
+    bias = jax.random.uniform(kb, (l, k))
+    got = lsh_hash(x, w, bias, bandwidth=1.5, n_buckets=r, block_b=32)
+    want = lsh_hash_ref(x, w, bias, 1.5, r)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int32
+    assert bool(jnp.all((got >= 0) & (got < r)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lsh_hash_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (16, 8)).astype(dtype)
+    w = jax.random.normal(key, (4, 2, 8))
+    b = jax.random.uniform(key, (4, 2))
+    got = lsh_hash(x.astype(jnp.float32), w, b, bandwidth=1.0, n_buckets=8)
+    assert got.shape == (16, 4)
+
+
+@pytest.mark.parametrize("b,c,l,r,g", [(4, 1, 8, 4, 2), (33, 5, 40, 16, 8),
+                                       (128, 2, 100, 20, 10)])
+def test_race_query_matches_ref(b, c, l, r, g):
+    key = jax.random.PRNGKey(b + c)
+    sketch = jax.random.normal(key, (c, l, r))
+    idx = jax.random.randint(key, (b, l), 0, r)
+    got = race_query(sketch, idx, n_groups=g, block_b=16)
+    want = race_query_ref(sketch, idx, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,c,l,r", [(10, 1, 8, 4), (300, 5, 40, 16),
+                                     (257, 3, 20, 32)])
+def test_race_update_matches_ref(m, c, l, r):
+    key = jax.random.PRNGKey(m)
+    sketch = jax.random.normal(key, (c, l, r))
+    idx = jax.random.randint(key, (m, l), 0, r)
+    alphas = jax.random.normal(key, (m, c))
+    got = race_update(sketch, idx, alphas, block_m=64)
+    want = race_update_ref(sketch, idx, alphas)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,l,r,v", [(2, 8, 4, 16), (9, 64, 16, 100),
+                                     (16, 32, 8, 2048)])
+def test_sketch_head_matches_ref(b, l, r, v):
+    key = jax.random.PRNGKey(v)
+    sketch = jax.random.normal(key, (l, r, v))
+    idx = jax.random.randint(key, (b, l), 0, r)
+    got = sketch_head_logits(sketch, idx, block_b=4, block_v=64)
+    want = sketch_head_ref(sketch, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernels_jit_and_grad_free():
+    """Kernels are inference-path ops; they must compose under jit."""
+    key = jax.random.PRNGKey(0)
+    sketch = jax.random.normal(key, (3, 16, 8))
+    idx = jax.random.randint(key, (5, 16), 0, 8)
+
+    @jax.jit
+    def f(s, i):
+        return race_query(s, i, n_groups=4)
+
+    out = f(sketch, idx)
+    assert out.shape == (5, 3)
+
+
+@pytest.mark.parametrize("s,win,cap,bq,bk", [
+    (96, None, None, 32, 32),
+    (200, 64, None, 64, 64),     # non-divisible seq + sliding window
+    (128, None, 50.0, 32, 64),   # gemma2-style softcap, rectangular tiles
+    (256, 32, 30.0, 128, 128),   # window + softcap combined
+])
+def test_flash_attention_matches_ref(s, win, cap, bq, bk):
+    from repro.kernels.flash_attn.ops import flash_attention
+    from repro.kernels.flash_attn.ref import flash_attention_ref
+
+    b, h, dh = 2, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, dh))
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, s, h, dh))
+    got = flash_attention(q, k, v, window=win, softcap=cap,
+                          block_q=bq, block_k=bk)
+    want = flash_attention_ref(q, k, v, window=win, softcap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    from repro.kernels.flash_attn.ops import flash_attention
+    from repro.kernels.flash_attn.ref import flash_attention_ref
+
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 32)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 2, 32)).astype(dtype)
+    got = flash_attention(q, k, v, block_q=32, block_k=32)
+    want = flash_attention_ref(q, k, v)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,104 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsh import LSHConfig, L2LSH, SRPLSH, _fold_subhashes
+from repro.core.sketch import mom_estimate
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.runtime.elastic import initial_plan, shrink_plan
+from repro.runtime.failure import Action, decide_recovery
+
+_SMALL = settings(max_examples=25, deadline=None)
+
+
+@_SMALL
+@given(st.integers(1, 64), st.integers(1, 5), st.integers(2, 257),
+       st.integers(0, 2**31 - 1))
+def test_fold_subhashes_in_range(l, k, r, seed):
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (7, l, k),
+                               -(2**20), 2**20)
+    idx = _fold_subhashes(codes, r)
+    assert idx.shape == (7, l)
+    assert bool(jnp.all((idx >= 0) & (idx < r)))
+
+
+@_SMALL
+@given(st.floats(0.01, 50.0), st.floats(0.01, 50.0), st.integers(1, 4))
+def test_l2_collision_prob_monotone(d1, d2, k):
+    lsh = L2LSH(LSHConfig(n_rows=1, n_buckets=2, k=k, dim=4, bandwidth=2.0))
+    lo, hi = sorted([d1, d2])
+    p_lo = float(lsh.collision_probability(jnp.asarray(lo)))
+    p_hi = float(lsh.collision_probability(jnp.asarray(hi)))
+    assert 0.0 <= p_hi <= p_lo <= 1.0
+
+
+@_SMALL
+@given(st.integers(0, 2**31 - 1))
+def test_srp_collision_prob_bounds(seed):
+    lsh = SRPLSH(LSHConfig(n_rows=4, n_buckets=16, k=3, dim=8))
+    cos = jax.random.uniform(jax.random.PRNGKey(seed), (5,), minval=-1.0,
+                             maxval=1.0)
+    p = lsh.collision_probability(cos)
+    assert bool(jnp.all((p >= 0) & (p <= 1)))
+
+
+@_SMALL
+@given(st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_mom_between_min_max(g, seed):
+    reads = jax.random.normal(jax.random.PRNGKey(seed), (3, g * 4))
+    est = mom_estimate(reads, g)
+    assert bool(jnp.all(est >= reads.min(-1) - 1e-6))
+    assert bool(jnp.all(est <= reads.max(-1) + 1e-6))
+
+
+@_SMALL
+@given(st.integers(0, 1000), st.integers(1, 4), st.integers(0, 3))
+def test_synthetic_batch_deterministic_and_sharded(step, n_hosts, host):
+    host = host % n_hosts
+    base = DataConfig(vocab_size=101, seq_len=17, global_batch=8 * n_hosts,
+                      n_hosts=n_hosts, host_id=host)
+    b1 = synthetic_batch(base, step)
+    b2 = synthetic_batch(base, step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 17)
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 101
+    # host slices of one global batch are disjoint deterministic functions:
+    full = DataConfig(vocab_size=101, seq_len=17, global_batch=8 * n_hosts)
+    g = synthetic_batch(full, step)
+    np.testing.assert_array_equal(g["tokens"][host * 8:(host + 1) * 8],
+                                  b1["tokens"])
+
+
+@_SMALL
+@given(st.integers(2, 64), st.integers(1, 8),
+       st.lists(st.integers(0, 63), max_size=8))
+def test_recovery_plan_invariants(n_replicas, hosts_per_replica, dead):
+    n_hosts = n_replicas * hosts_per_replica
+    dead = [d % n_hosts for d in dead]
+    plan = decide_recovery(n_hosts, dead,
+                           hosts_per_replica=hosts_per_replica,
+                           n_replicas=n_replicas)
+    assert not set(plan.healthy_hosts) & set(dead)
+    if plan.action is Action.SHRINK:
+        assert 0 < plan.new_data_parallel < n_replicas or not dead
+    if not dead:
+        assert plan.action is Action.CONTINUE
+
+
+@_SMALL
+@given(st.integers(1, 6), st.integers(2, 16))
+def test_shrink_rebalances_batch(hosts_per_replica, n_replicas):
+    n_hosts = hosts_per_replica * n_replicas
+    gb = n_replicas * 4
+    plan = initial_plan(n_hosts, hosts_per_replica, gb)
+    new = shrink_plan(plan, [0], gb)   # kill replica 0
+    assert new.data == n_replicas - 1
+    # Batch invariant: the new global batch divides evenly over survivors.
+    assert new.global_batch % new.data == 0
+    assert new.grad_accum >= 1
+    # When divisibility allows, the global batch is preserved exactly.
+    if gb % new.data == 0:
+        assert new.global_batch == gb

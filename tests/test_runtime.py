@@ -1,0 +1,108 @@
+"""Fault-tolerance: supervisor restart/shrink behavior under scripted faults."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import initial_plan, reassign_shards, shrink_plan
+from repro.runtime.failure import (Action, HeartbeatRegistry, StragglerTracker,
+                                   decide_recovery)
+from repro.runtime.supervisor import Supervisor, SupervisorConfig
+
+
+def test_heartbeat_detects_missing():
+    reg = HeartbeatRegistry([0, 1, 2], timeout_s=10)
+    reg.beat(0, now=100.0)
+    reg.beat(1, now=100.0)
+    reg.beat(2, now=85.0)          # stale
+    assert reg.missing(now=100.0) == [2]
+    assert reg.healthy(now=100.0) == [0, 1]
+
+
+def test_decide_recovery_modes():
+    # no failures
+    assert decide_recovery(8, [], hosts_per_replica=2,
+                           n_replicas=4).action is Action.CONTINUE
+    # one replica lost of 8 → shrink
+    p = decide_recovery(16, [3], hosts_per_replica=2, n_replicas=8)
+    assert p.action is Action.SHRINK and p.new_data_parallel == 7
+    # half the fleet → restart
+    p = decide_recovery(8, [0, 2, 4, 6], hosts_per_replica=2, n_replicas=4)
+    assert p.action is Action.RESTART
+
+
+def test_straggler_flag_and_evict():
+    t = StragglerTracker(threshold=1.5, evict_after=2)
+    for step in range(4):
+        t.record(0, 1.0)
+        t.record(1, 1.0)
+        t.record(2, 3.0)           # persistent straggler
+        t.stragglers()
+    assert t.to_evict() == [2]
+
+
+def test_reassign_shards_covers_all():
+    plan = initial_plan(8, 2, 16)
+    owners = reassign_shards(plan, 16)
+    got = sorted(s for shards in owners.values() for s in shards)
+    assert got == list(range(16))
+    plan2 = shrink_plan(plan, [0], 16)
+    owners2 = reassign_shards(plan2, 16)
+    assert 0 not in owners2           # dead replica owns nothing
+    assert sorted(s for v in owners2.values() for s in v) == list(range(16))
+
+
+def _make_supervisor(tmp_path, total_steps, fault_hook=None):
+    def init_state():
+        return {"w": jnp.zeros((4,)), "step_count": jnp.zeros((), jnp.int32)}
+
+    def step_fn(state, batch):
+        return {"w": state["w"] + batch["g"],
+                "step_count": state["step_count"] + 1}
+
+    def batch_fn(step):
+        return {"g": jnp.ones((4,)) * 0.1}
+
+    return Supervisor(
+        SupervisorConfig(total_steps=total_steps, ckpt_every=5,
+                         ckpt_dir=str(tmp_path), n_hosts=4,
+                         hosts_per_replica=1),
+        init_state=init_state, step_fn=step_fn, batch_fn=batch_fn,
+        fault_hook=fault_hook)
+
+
+def test_supervisor_clean_run(tmp_path):
+    sup = _make_supervisor(tmp_path, 12)
+    state = sup.run()
+    assert int(state["step_count"]) == 12
+    assert ("done", 12, 0) in sup.events
+
+
+def test_supervisor_restart_from_checkpoint(tmp_path):
+    deaths = {8: [0, 1, 2]}   # 3/4 replicas at step 8 → RESTART policy
+    sup = _make_supervisor(tmp_path, 12,
+                           fault_hook=lambda s: deaths.pop(s, []))
+    state = sup.run()
+    kinds = [e[0] for e in sup.events]
+    assert "restarted" in kinds
+    # Restart replayed from the step-5 checkpoint; final count still 12.
+    assert int(state["step_count"]) == 12
+
+
+def test_supervisor_shrinks_on_small_failure(tmp_path):
+    deaths = {7: [3]}
+    sup = _make_supervisor(tmp_path, 12,
+                           fault_hook=lambda s: deaths.pop(s, []))
+    sup.run()
+    shrunk = [e for e in sup.events if e[0] == "shrunk"]
+    assert shrunk and shrunk[0][2] == 3
+
+
+def test_supervisor_resumes_across_runs(tmp_path):
+    sup1 = _make_supervisor(tmp_path, 11)
+    sup1.run()
+    # New process, same ckpt dir: resumes past the last saved step (10).
+    sup2 = _make_supervisor(tmp_path, 20)
+    state = sup2.run()
+    assert ("restored", 10) in sup2.events
+    assert int(state["step_count"]) <= 20 - 10 + 1 + 10  # sanity

@@ -1,0 +1,90 @@
+"""Sharding rules: spec selection, divisibility fallbacks, cache layouts.
+
+Uses abstract meshes (jax.sharding.Mesh over a numpy device array is only
+constructible from real devices, so specs are checked through param_spec /
+_fit_spec with a fake mesh object exposing axis_names + devices.shape)."""
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import (_fit_spec, batch_spec, param_spec)
+
+
+class FakeMesh:
+    def __init__(self, shape, axes):
+        self.axis_names = axes
+        self.devices = np.empty(shape, dtype=object)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+POD = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_fit_spec_drops_nondivisible():
+    assert tuple(_fit_spec(P("model", None), (100, 8), MESH)) == (None, None)
+    assert tuple(_fit_spec(P("model", None), (1600, 8), MESH)) == ("model", None)
+
+
+def test_dense_ffn_specs():
+    s = param_spec("periods/pos0/ffn/w_gate", (40, 5120, 13824), MESH, True)
+    assert tuple(s) == (None, None, "model")
+    s = param_spec("periods/pos0/ffn/w_down", (40, 13824, 5120), MESH, True)
+    assert tuple(s) == (None, "model", None)
+
+
+def test_moe_expert_specs_ep_vs_tp():
+    # deepseek: 256 experts → EP over model + FSDP(d) over data
+    s = param_spec("periods/pos0/ffn/w_gate", (58, 256, 7168, 2048), MESH, True)
+    assert tuple(s) == (None, "model", "data", None)
+    # mixtral: 8 experts < 16 → f-TP fallback + FSDP(d) over data
+    s = param_spec("periods/pos0/ffn/w_gate", (32, 8, 4096, 14336), MESH, True)
+    assert tuple(s) == (None, None, "data", "model")
+    s = param_spec("periods/pos0/ffn/w_down", (32, 8, 14336, 4096), MESH, True)
+    assert tuple(s) == (None, None, "model", "data")
+
+
+def test_attention_specs():
+    s = param_spec("periods/pos0/mixer/wq", (40, 5120, 5120), MESH, True)
+    assert tuple(s) == (None, None, "model")
+    s = param_spec("periods/pos0/mixer/wo", (40, 5120, 5120), MESH, True)
+    assert tuple(s) == (None, "model", None)
+
+
+def test_embed_head_specs():
+    assert tuple(param_spec("embed", (100352, 5120), MESH, False)) == (
+        "model", None)
+    assert tuple(param_spec("head", (100352, 5120), MESH, False)) == (
+        "model", None)
+
+
+def test_norms_replicated():
+    assert tuple(param_spec("periods/pos0/norm1", (40, 5120), MESH, True)
+                 ) in ((None,), (None, None))
+
+
+def test_batch_spec_divisibility():
+    assert batch_spec(256, MESH) == "data"
+    assert batch_spec(256, POD) == ("pod", "data")
+    assert batch_spec(1, MESH) is None
+    # 32 divides pod×data=32 on the pod mesh
+    assert batch_spec(32, POD) == ("pod", "data")
+    # 16 doesn't divide 32 → falls back to data(16)
+    assert batch_spec(16, POD) == "data"
+
+
+def test_cache_shardings_types():
+    from repro.configs import get_config
+    from repro.models.model import init_decode_cache
+    from repro.sharding.rules import cache_shardings
+    import jax.numpy as jnp
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("stablelm-12b", "deepseek-v3-671b", "rwkv6-1.6b",
+                 "jamba-v0.1-52b"):
+        cfg = get_config(arch, smoke=True)
+        cache = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 8))
+        shardings = cache_shardings(cache, mesh, 2)
+        # same tree structure, every leaf a NamedSharding
+        jax.tree.map(lambda c, s: None, cache, shardings)

@@ -1,0 +1,113 @@
+"""Statistical properties of the weighted RACE sketch (Theorems 1–2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RepresenterSketch, SketchConfig, theory
+
+
+def _setup(l=600, r=16, k=1, dim=6, c=1, bw=2.0, m=300, seed=0):
+    cfg = SketchConfig(n_rows=l, n_buckets=r, k=k, dim=dim, n_outputs=c,
+                       bandwidth=bw, n_groups=8)
+    sk = RepresenterSketch(cfg)
+    kp, kd, kq = jax.random.split(jax.random.PRNGKey(seed), 3)
+    pts = jax.random.normal(kd, (m, dim))
+    alphas = jax.random.normal(kp, (m, c))
+    queries = jax.random.normal(kq, (8, dim))
+    return sk, pts, alphas, queries
+
+
+def test_unbiasedness_row_estimator():
+    """E[S[h(q)]] == weighted KDE: average row reads over many rows."""
+    sk, pts, alphas, queries = _setup(l=4000)
+    state = sk.init(jax.random.PRNGKey(1))
+    state = sk.build(state, pts, alphas)
+    mean_est = sk.query(state, queries, mom=False)  # debiased plain mean
+    exact = sk.exact_weighted_kde(pts, alphas, queries)
+    # With L=4000 i.i.d. unbiased rows, the mean is within a few σ/√L.
+    err = np.abs(np.asarray(mean_est - exact))
+    scale = np.abs(np.asarray(exact)).mean() + 1.0
+    assert err.mean() / scale < 0.15, (err.mean(), scale)
+
+
+def test_theorem2_error_bound_holds():
+    """MoM error ≤ 6·σ̃/√L·√log(1/δ) for ≥ (1−δ) of queries."""
+    delta = 0.05
+    sk, pts, alphas, _ = _setup(l=800)
+    queries = jax.random.normal(jax.random.PRNGKey(7), (100, 6))
+    state = sk.init(jax.random.PRNGKey(2))
+    state = sk.build(state, pts, alphas)
+    est = sk.query(state, queries)                  # MoM
+    exact = sk.exact_weighted_kde(pts, alphas, queries)
+    # σ bound from Theorem 1: Σ|α|·√K  (use |α| for a valid bound with
+    # signed weights — Cauchy–Schwarz is agnostic to sign).
+    dist = jnp.linalg.norm(queries[:, None] - pts[None], axis=-1)
+    sqrt_k = jnp.sqrt(sk.lsh.collision_probability(dist))
+    sigma = sqrt_k @ jnp.abs(alphas)
+    bound = 6.0 * sigma / np.sqrt(sk.config.n_rows) * np.sqrt(np.log(1 / delta))
+    violations = np.mean(np.abs(np.asarray(est - exact)) > np.asarray(bound))
+    assert violations <= delta + 0.02, violations
+
+
+def test_build_streaming_equals_build():
+    sk, pts, alphas, queries = _setup()
+    s1 = sk.build(sk.init(jax.random.PRNGKey(3)), pts, alphas)
+    s2 = sk.build_streaming(sk.init(jax.random.PRNGKey(3)), pts, alphas,
+                            chunk=37)
+    np.testing.assert_allclose(np.asarray(s1["array"]),
+                               np.asarray(s2["array"]), rtol=1e-5, atol=1e-5)
+
+
+def test_sketch_linearity():
+    """Sketching is linear in the weights (it is a sum of increments)."""
+    sk, pts, alphas, _ = _setup(c=2)
+    a1 = alphas
+    a2 = jnp.flip(alphas, axis=0)
+    init = sk.init(jax.random.PRNGKey(4))
+    s12 = sk.build(init, pts, a1 + a2)
+    s1 = sk.build(init, pts, a1)
+    s2 = sk.build(init, pts, a2)
+    np.testing.assert_allclose(
+        np.asarray(s12["array"]),
+        np.asarray(s1["array"] + s2["array"] - init["array"]),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_mom_equals_mean_for_uniform_rows():
+    """If all rows agree, MoM == mean == debiased row value."""
+    cfg = SketchConfig(n_rows=16, n_buckets=4, k=1, dim=3, n_outputs=1)
+    sk = RepresenterSketch(cfg)
+    state = sk.init(jax.random.PRNGKey(0))
+    state["array"] = jnp.ones_like(state["array"]) * 2.5
+    q = jax.random.normal(jax.random.PRNGKey(1), (4, 3))
+    out = sk.query(state, q)
+    # zero inserted mass → debias = x / (1 − 1/R)
+    np.testing.assert_allclose(np.asarray(out), 2.5 / (1 - 0.25), rtol=1e-6)
+
+
+def test_rehash_floor_debiasing():
+    """Signed-weight sketches: the Σα/R floor is removed by the query."""
+    sk, pts, alphas, queries = _setup(l=1500, r=8, seed=3)
+    alphas = alphas + 0.5   # nonzero total mass → visible floor if unbiased
+    state = sk.build(sk.init(jax.random.PRNGKey(9)), pts, alphas)
+    # Plain-mean query: exactly unbiased after the floor correction (MoM's
+    # median has its own small skew bias, irrelevant here).
+    est = sk.query(state, queries, mom=False)
+    exact = sk.exact_weighted_kde(pts, alphas, queries)
+    bias = float(jnp.mean(est - exact))
+    floor = float(jnp.sum(alphas)) / sk.config.n_buckets
+    # Without debiasing the mean offset would be ≈ floor·(1−p̄) ≫ tolerance.
+    assert abs(bias) < 0.15 * abs(floor), (bias, floor)
+
+
+def test_theory_helpers_roundtrip():
+    l = theory.rows_for_error(sigma=2.0, eps=0.5, delta=0.05)
+    assert theory.mom_error_bound(2.0, l, 0.05) <= 0.5 + 1e-9
+    assert theory.mom_groups(0.05) == int(np.ceil(8 * np.log(20)))
+
+
+def test_memory_accounting():
+    cfg = SketchConfig(n_rows=100, n_buckets=10, k=2, dim=5, n_outputs=3)
+    assert cfg.memory_floats == 3 * 100 * 10
