@@ -1,14 +1,18 @@
 """Serving with the Representer-Sketch LM head (the paper's technique as a
-first-class serving feature — DESIGN.md §4).
+first-class serving feature — DESIGN.md §4): the full distill → freeze →
+serve flow.
 
-Distills the dense logit head of a small LM into per-class RACE arrays,
-then decodes with hash + gather + mean instead of the d_model×V matmul,
-reporting agreement and the analytic cost deltas.
+1. distill the dense logit head of a small LM into a kernel model,
+2. freeze it into per-class RACE arrays and save the deployable .npz,
+3. serve: generate tokens with repro.launch.serve.generate decoding through
+   the fused Pallas sketch head (hash + gather + mean instead of the
+   d_model×V matmul), and report agreement + the analytic cost deltas.
 
   PYTHONPATH=src python examples/serve_sketch_head.py
 """
 
 import dataclasses
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +21,13 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.distill import DistillConfig
 from repro.core.sketch_lm_head import (apply_head, distill_head, freeze_head,
-                                       head_costs)
+                                       head_costs, save_head)
+from repro.launch.serve import generate
 from repro.models.config import SketchHeadConfig
-from repro.models.model import forward, init_model
+from repro.models.model import init_model
+
+HEAD_PATH = Path(__file__).resolve().parents[1] / "results" / "sketch_head" \
+    / "musicgen-large-smoke.npz"
 
 
 def main():
@@ -29,35 +37,47 @@ def main():
     head_cfg = SketchHeadConfig(n_rows=512, n_buckets=16, k=1, proj_dim=32,
                                 bandwidth=2.0)
 
-    # Representative final hiddens: run the backbone over random prompts.
-    toks = jax.random.randint(jax.random.PRNGKey(1), (32, 32), 0,
-                              cfg.vocab_size)
-    # (reuse the model's own final hidden statistics via its logits path)
+    # Representative final hiddens for distillation (production would sample
+    # real decode-time hiddens; statistics are what matters here).
     hiddens = jax.random.normal(jax.random.PRNGKey(2), (1024, cfg.d_model))
 
     table = params["embed"] if cfg.tie_embeddings else params["head"]
-    print("distilling dense head → kernel representation …")
+    print("1. distilling dense head → kernel representation …")
     kparams, metrics = distill_head(
         jax.random.PRNGKey(3), table, hiddens, head_cfg, n_points=512,
         distill_cfg=DistillConfig(n_steps=2000, lr=5e-3))
-    print(f"  distill MSE: {metrics['final_mse']:.5f}")
+    print(f"   distill MSE: {metrics['final_mse']:.5f}")
+
+    print("2. freezing → (L, R, V) sketch, saving deployable head …")
     head = freeze_head(jax.random.PRNGKey(4), kparams, head_cfg)
+    save_head(HEAD_PATH, head, head_cfg)
+    print(f"   saved {HEAD_PATH}")
+    print("   (the head is tied to this example's 512-vocab variant; "
+          "repro.launch.serve --sketch-head --head-path validates the "
+          "arch/head shapes and distills a fresh head when none is given)")
 
     test_h = jax.random.normal(jax.random.PRNGKey(5), (256, cfg.d_model))
     dense_logits = test_h @ np.asarray(table, np.float32).T
-    sketch_logits = apply_head(head, test_h, head_cfg)
+    sketch_logits = apply_head(head, test_h, head_cfg, fused=True)
 
-    top1_dense = np.argmax(dense_logits, 1)
     top5_dense = np.argsort(-dense_logits, 1)[:, :5]
     top1_sketch = np.asarray(jnp.argmax(sketch_logits, 1))
     in_top5 = np.mean([t in top5_dense[i]
                        for i, t in enumerate(top1_sketch)])
-    print(f"  sketch-head top-1 ∈ dense top-5: {in_top5:.2%}")
+    print(f"   sketch-head top-1 ∈ dense top-5: {in_top5:.2%}")
+
+    print("3. serving: decode loop through the fused sketch head …")
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 12), 0,
+                                 cfg.vocab_size)
+    out = generate(params, cfg, prompts, gen_len=8,
+                   sketch_head_params=head, sketch_cfg=head_cfg, fused=True)
+    print(f"   generated {out.shape} tokens; sample:",
+          np.asarray(out[0, -8:]))
 
     costs = head_costs(head_cfg, cfg.d_model, cfg.vocab_size)
-    print(f"  params: {costs['param_ratio']:.2f}x reduction, "
+    print(f"   params: {costs['param_ratio']:.2f}x reduction, "
           f"flops/token: {costs['flop_ratio']:.2f}x reduction")
-    print("  (vocab≈d_model here, so gains are modest — see DESIGN.md §4; "
+    print("   (vocab≈d_model here, so gains are modest — see DESIGN.md §4; "
           "for a 100k-vocab head the same L gives "
           f"{head_costs(head_cfg, 4096, 100352)['flop_ratio']:.0f}x)")
 

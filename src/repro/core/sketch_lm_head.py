@@ -12,21 +12,26 @@ paper), distilled from the dense head's logits by MSE.  Freezing gives one
 replacing 2·d·V multiplies.  The paper's noted limitation (memory linear in
 V) is explicit here: memory = L·R·V vs d·V dense, a win iff L·R < d.
 
-Decode-path kernels: repro.kernels.lsh_hash (projection+hash fused) and
-repro.kernels.sketch_head (shared-index gather as MXU one-hot matvec).
+Decode-path kernels: repro.kernels.fused_decode (transform → hash → gather in
+one pallas_call — the serving default), or the two-kernel composition of
+repro.kernels.lsh_hash (projection+hash) and repro.kernels.sketch_head
+(shared-index gather as MXU one-hot matvec), kept as the unfused baseline.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from pathlib import Path
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.distill import DistillConfig, distill
 from repro.core.kernel_model import KernelModel, KernelModelConfig
 from repro.core.lsh import L2LSH, LSHConfig
+from repro.kernels.fused_decode.ops import fused_decode_logits
 from repro.kernels.lsh_hash.ops import lsh_hash
 from repro.kernels.sketch_head.ops import sketch_head_logits
 from repro.models.config import SketchHeadConfig
@@ -73,12 +78,42 @@ def freeze_head(key: jax.Array, kernel_params: dict,
 
 
 def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
-               *, use_pallas: bool = True) -> jnp.ndarray:
-    """Sketched logits for (B, d) final hiddens → (B, V)."""
+               *, use_pallas: bool = True, fused: bool = False) -> jnp.ndarray:
+    """Sketched logits for (B, d) final hiddens → (B, V).
+
+    ``fused=True`` runs the whole head in one pallas_call (the serving hot
+    path — no HBM round trip on the (B, L) index tensor); ``fused=False``
+    keeps the two-kernel composition used as the verification baseline.
+    """
+    if fused:
+        return fused_decode_logits(
+            hidden.astype(jnp.float32), head["proj"], head["w"], head["b"],
+            head["array"], bandwidth=cfg.bandwidth, n_buckets=cfg.n_buckets,
+            use_pallas=use_pallas)
     q = hidden.astype(jnp.float32) @ head["proj"]
     idx = lsh_hash(q, head["w"], head["b"], bandwidth=cfg.bandwidth,
                    n_buckets=cfg.n_buckets, use_pallas=use_pallas)
     return sketch_head_logits(head["array"], idx, use_pallas=use_pallas)
+
+
+def save_head(path, head: dict, cfg: SketchHeadConfig) -> None:
+    """Persist a frozen head (+ its static config) as an .npz archive."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in head.items()},
+             **{f"cfg_{f.name}": getattr(cfg, f.name)
+                for f in dataclasses.fields(cfg)})
+
+
+def load_head(path) -> Tuple[dict, SketchHeadConfig]:
+    """Load a frozen head saved by :func:`save_head`."""
+    data = np.load(Path(path))
+    head = {k: jnp.asarray(data[k]) for k in ("proj", "w", "b", "array")}
+    fields = {f.name: f.type for f in dataclasses.fields(SketchHeadConfig)}
+    cfg = SketchHeadConfig(**{
+        name: (float if "float" in str(typ) else int)(data[f"cfg_{name}"])
+        for name, typ in fields.items()})
+    return head, cfg
 
 
 def head_costs(cfg: SketchHeadConfig, d_model: int, vocab: int) -> dict:

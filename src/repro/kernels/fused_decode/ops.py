@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the fused sketched-decode kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_decode.kernel import fused_decode_pallas
+from repro.kernels.fused_decode.ref import fused_decode_ref
+
+
+@partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "block_b",
+                                   "block_v", "use_pallas"))
+def fused_decode_logits(
+    hidden: jnp.ndarray,     # (B, d_model) — final backbone hiddens
+    proj: jnp.ndarray,       # (d_model, d') asymmetric transform A
+    w: jnp.ndarray,          # (L, K, d') hash projections
+    b: jnp.ndarray,          # (L, K) hash offsets
+    sketch: jnp.ndarray,     # (L, R, V) per-class arrays
+    *,
+    bandwidth: float,
+    n_buckets: int,
+    block_b: int = 8,
+    block_v: int = 2048,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Sketched (B, V) logits in one kernel: transform → hash → gather."""
+    if use_pallas:
+        return fused_decode_pallas(
+            hidden, proj, w, b, sketch, bandwidth=bandwidth,
+            n_buckets=n_buckets, block_b=block_b, block_v=block_v)
+    return fused_decode_ref(hidden, proj, w, b, sketch, bandwidth, n_buckets)

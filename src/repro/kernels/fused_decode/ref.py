@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused sketched-decode kernel.
+
+Composes the two existing oracles around the asymmetric transform:
+
+    q      = hidden @ proj                      # (B, d')
+    idx    = lsh_hash_ref(q, w, b)              # (B, L)
+    logits = sketch_head_ref(sketch, idx)       # (B, V)
+
+The fused kernel must match this composition exactly on the indices (same
+integer mix) and within float tolerance on the logits.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.lsh_hash.ref import lsh_hash_ref
+from repro.kernels.sketch_head.ref import sketch_head_ref
+
+
+def fused_decode_ref(
+    hidden: jnp.ndarray,     # (B, d) f32
+    proj: jnp.ndarray,       # (d, d') f32
+    w: jnp.ndarray,          # (L, K, d') f32
+    b: jnp.ndarray,          # (L, K) f32
+    sketch: jnp.ndarray,     # (L, R, V) f32
+    bandwidth: float,
+    n_buckets: int,
+) -> jnp.ndarray:            # (B, V)
+    q = hidden.astype(jnp.float32) @ proj
+    idx = lsh_hash_ref(q, w, b, bandwidth, n_buckets)
+    return sketch_head_ref(sketch, idx)

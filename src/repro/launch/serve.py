@@ -1,14 +1,17 @@
-"""Batched serving launcher: prefill + decode loop, optional sketched head.
+"""Batched serving launcher: bulk prefill + decode loop, optional sketched head.
 
-Serves a (smoke-scale on CPU) model over synthetic request batches:
-prefill ingests each request's prompt, then the decode loop emits tokens
-step by step from the KV/state cache.  ``--sketch-head`` swaps the dense
+Serves a (smoke-scale on CPU) model over synthetic request batches: a single
+bulk prefill pass ingests each request's prompt into the decode cache, then
+the decode loop emits tokens step by step.  ``--sketch-head`` swaps the dense
 logit matmul for the Representer-Sketch head (the paper's technique as a
-first-class serving feature — see DESIGN.md §4): the head is distilled
-offline by examples/serve_sketch_head.py and loaded here.
+first-class serving feature — see DESIGN.md §4): the backbone returns the
+final hidden and the frozen (L, R, V) sketch produces the logits in one
+fused Pallas call (repro.kernels.fused_decode).  The head is distilled
+offline by examples/serve_sketch_head.py and loaded via ``--head-path``;
+without a saved head a quick in-process distillation builds one.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 [--sketch-head] [--no-fused]
 """
 
 from __future__ import annotations
@@ -16,6 +19,7 @@ from __future__ import annotations
 import argparse
 import functools
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -23,42 +27,87 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.steps import prefill_step, serve_step
-from repro.models.model import forward, init_decode_cache, init_model
+from repro.models.config import SketchHeadConfig
+from repro.models.model import init_decode_cache, init_model
 
 
 def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
              encoder_states=None, sketch_head_params=None,
-             greedy: bool = True):
-    """Prefill + decode. prompts: (B, P) → tokens (B, P+gen_len)."""
+             sketch_cfg: SketchHeadConfig | None = None,
+             fused: bool = True, greedy: bool = True):
+    """Bulk prefill + decode. prompts: (B, P) → tokens (B, P+gen_len)."""
     b, p = prompts.shape
     max_seq = p + gen_len
     cache = init_decode_cache(cfg, b, max_seq)
 
-    # Prefill via per-token decode steps keeps one compiled step function
-    # (production would lower a bulk prefill; steps.prefill_step covers that
-    # path and the 32k dry-run cells exercise it at scale).
-    step = jax.jit(functools.partial(serve_step, cfg=cfg))
+    # Bulk prefill: the whole prompt runs in one forward pass that fills the
+    # decode cache, replacing the P per-token decode steps of the old loop.
+    # Long prompts stay memory-bounded: cached attention switches to the
+    # online-softmax chunked path above the same thresholds as training.
+    prefill = jax.jit(functools.partial(prefill_step, cfg=cfg))
+    logits, cache = prefill(params, prompts, encoder_states=encoder_states,
+                            cache=cache)
 
-    toks = prompts
-    logits = None
-    for t in range(p):
-        logits, cache = step(params, cache, toks[:, t:t + 1],
-                             jnp.asarray(t, jnp.int32),
-                             encoder_states=encoder_states)
+    # Decode: with a sketch head the step skips the dense unembed and
+    # produces logits from the frozen sketch (fused kernel by default).
+    step = jax.jit(functools.partial(
+        serve_step, cfg=cfg, sketch_cfg=sketch_cfg, fused=fused))
 
-    out = [toks]
+    out = [prompts]
     for t in range(gen_len):
-        if sketch_head_params is not None:
-            # logits from the sketched head are produced inside serve path
-            pass
         nxt = (jnp.argmax(logits, -1) if greedy
                else jax.random.categorical(jax.random.PRNGKey(t), logits))
         nxt = nxt[:, None].astype(jnp.int32)
         out.append(nxt)
         logits, cache = step(params, cache, nxt,
                              jnp.asarray(p + t, jnp.int32),
-                             encoder_states=encoder_states)
+                             encoder_states=encoder_states,
+                             sketch_head=sketch_head_params)
     return jnp.concatenate(out, axis=1)
+
+
+def build_or_load_head(params, cfg, head_path: str | None,
+                       distill_steps: int = 300):
+    """Load a frozen sketch head, or distill one from the dense head now.
+
+    The offline path (examples/serve_sketch_head.py) distills at a real
+    budget and saves with ``save_head``; this fallback runs a short
+    distillation so ``--sketch-head`` is self-contained at smoke scale.
+    """
+    from repro.core.distill import DistillConfig
+    from repro.core.sketch_lm_head import (distill_head, freeze_head,
+                                           load_head)
+
+    if head_path:
+        if not Path(head_path).exists():
+            raise FileNotFoundError(
+                f"--head-path {head_path} does not exist; run "
+                f"examples/serve_sketch_head.py to distill and save a head, "
+                f"or drop --head-path to distill one in-process")
+        head, head_cfg = load_head(head_path)
+        l, r, v = head["array"].shape
+        d = head["proj"].shape[0]
+        if v != cfg.vocab_size or d != cfg.d_model:
+            raise ValueError(
+                f"sketch head {head_path} was frozen for (d_model={d}, "
+                f"vocab={v}) but --arch {cfg.name} has "
+                f"(d_model={cfg.d_model}, vocab={cfg.vocab_size})")
+        print(f"loaded sketch head from {head_path} "
+              f"(L={head_cfg.n_rows}, R={head_cfg.n_buckets})")
+        return head, head_cfg
+
+    head_cfg = cfg.sketch_head or SketchHeadConfig(
+        n_rows=128, n_buckets=16, k=1, proj_dim=32, bandwidth=2.0)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    hiddens = jax.random.normal(jax.random.PRNGKey(11),
+                                (1024, cfg.d_model))
+    print(f"distilling sketch head (L={head_cfg.n_rows}, "
+          f"R={head_cfg.n_buckets}, {distill_steps} steps) …")
+    kparams, metrics = distill_head(
+        jax.random.PRNGKey(12), table, hiddens, head_cfg, n_points=256,
+        distill_cfg=DistillConfig(n_steps=distill_steps, lr=5e-3))
+    print(f"  distill MSE: {metrics['final_mse']:.5f}")
+    return freeze_head(jax.random.PRNGKey(13), kparams, head_cfg), head_cfg
 
 
 def main() -> None:
@@ -68,6 +117,14 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sketch-head", action="store_true",
+                    help="decode with the Representer-Sketch head instead "
+                         "of the dense logit matmul")
+    ap.add_argument("--head-path", default=None,
+                    help="frozen head .npz from examples/serve_sketch_head.py")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="use the two-kernel (lsh_hash + sketch_head) decode "
+                         "path instead of the fused kernel")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -81,11 +138,21 @@ def main() -> None:
             jax.random.PRNGKey(2),
             (args.batch, cfg.n_encoder_tokens, cfg.d_model), jnp.bfloat16)
 
+    sketch_head = sketch_cfg = None
+    if args.sketch_head:
+        sketch_head, sketch_cfg = build_or_load_head(params, cfg,
+                                                     args.head_path)
+
     t0 = time.time()
-    out = generate(params, cfg, prompts, args.gen, encoder_states=enc)
+    out = generate(params, cfg, prompts, args.gen, encoder_states=enc,
+                   sketch_head_params=sketch_head, sketch_cfg=sketch_cfg,
+                   fused=not args.no_fused)
     dur = time.time() - t0
     total_tokens = args.batch * (args.prompt_len + args.gen)
-    print(f"arch={cfg.name} served {args.batch} seqs, "
+    head_kind = ("sketch/fused" if sketch_head is not None and not args.no_fused
+                 else "sketch/2-kernel" if sketch_head is not None
+                 else "dense")
+    print(f"arch={cfg.name} head={head_kind} served {args.batch} seqs, "
           f"{total_tokens} tokens in {dur:.1f}s "
           f"({total_tokens / dur:.1f} tok/s incl. compile)")
     print("sample token ids:", np.asarray(out[0, :24]))

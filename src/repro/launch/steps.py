@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
-from repro.models.config import ModelConfig
+from repro.models.config import ModelConfig, SketchHeadConfig
 from repro.models.model import (decode_step, forward, init_decode_cache,
                                 init_model, lm_loss)
 from repro.optim.adamw import AdamWState, OptimizerConfig, adamw_update, init_adamw
@@ -83,18 +83,52 @@ def train_step(params, opt_state: AdamWState, batch: Dict[str, jnp.ndarray],
 
 
 def prefill_step(params, tokens, cfg: ModelConfig,
-                 encoder_states=None):
-    """Context ingestion: forward pass returning last-position logits."""
-    logits, _, _ = forward(params, tokens, cfg,
-                           encoder_states=encoder_states, remat=False)
-    return logits[:, -1]
+                 encoder_states=None, cache=None):
+    """Context ingestion: forward pass returning last-position logits.
+
+    Without a cache this is the abstract dry-run shape (logits only).  With
+    ``cache`` it is the serving bulk prefill: the whole (B, P) prompt runs in
+    one forward pass that fills the decode cache, and ``(last_logits,
+    new_cache)`` is returned — replacing P per-token decode steps.
+    """
+    if cache is None:
+        logits, _, _ = forward(params, tokens, cfg,
+                               encoder_states=encoder_states, remat=False)
+        return logits[:, -1]
+    logits, new_cache, _ = forward(
+        params, tokens, cfg, encoder_states=encoder_states,
+        cache=cache, cache_pos=jnp.zeros((), jnp.int32), remat=False)
+    return logits[:, -1], new_cache
 
 
 def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
-               encoder_states=None):
-    """One decode step (one new token per sequence against the cache)."""
-    return decode_step(params, cache, tokens, pos, cfg,
-                       encoder_states=encoder_states)
+               encoder_states=None, sketch_head=None,
+               sketch_cfg: Optional[SketchHeadConfig] = None,
+               fused: bool = True):
+    """One decode step (one new token per sequence against the cache).
+
+    With ``sketch_head`` (frozen params from
+    ``repro.core.sketch_lm_head.freeze_head``) the dense h·Wᵀ logit matmul is
+    skipped entirely: the backbone returns the final hidden and the
+    Representer-Sketch head produces the (B, V) logits — fused into a single
+    Pallas call (repro.kernels.fused_decode) unless ``fused=False`` selects
+    the two-kernel lsh_hash → sketch_head baseline.  ``sketch_cfg`` must be
+    the head's static SketchHeadConfig (hashable; close over it via
+    functools.partial before jit).
+    """
+    if sketch_head is None:
+        return decode_step(params, cache, tokens, pos, cfg,
+                           encoder_states=encoder_states)
+    from repro.core.sketch_lm_head import apply_head
+    from repro.models.layers import softcap
+
+    hidden, new_cache = decode_step(params, cache, tokens, pos, cfg,
+                                    encoder_states=encoder_states,
+                                    return_hidden=True)
+    logits = apply_head(sketch_head, hidden, sketch_cfg, fused=fused)
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, new_cache
 
 
 # --------------------------------------------------------------------------

@@ -206,6 +206,43 @@ def attention(
         k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
+    if (cache is not None and s > 1 and cfg.window
+            and cfg.window <= cache.k.shape[1]):
+        # Bulk prefill into a rolling SWA cache.  A single dynamic_update_slice
+        # can neither wrap around the ring nor exceed its length, and early
+        # query tokens must attend to keys that later tokens will overwrite —
+        # so attend over (old ring ∪ new tokens), then rebuild the ring with
+        # the last `size` absolute positions via a gather.
+        size = cache.k.shape[1]
+        j = jnp.arange(size)
+        # Absolute position held by slot j before the write: the largest
+        # t ≡ j (mod size) with t < cache_pos (negative ⇒ never written).
+        t_old = cache_pos - 1 - ((cache_pos - 1 - j) % size)
+        k_pos = jnp.concatenate(
+            [jnp.where(t_old >= 0, t_old, jnp.iinfo(jnp.int32).max),
+             positions])
+        k_cat = jnp.concatenate([cache.k.astype(k.dtype), k], axis=1)
+        v_cat = jnp.concatenate([cache.v.astype(v.dtype), v], axis=1)
+        # Long prompts: online-softmax over KV chunks — never materialize
+        # the (Sq, size+Sq) score rectangle (same thresholds as cacheless).
+        attend = (_attend_chunked if s > min(_CHUNK_THRESHOLD,
+                                             cfg.window + _KV_CHUNK)
+                  else _attend_full)
+        out = attend(q, k_cat, v_cat, positions, k_pos, cfg)
+        # After the write, slot j holds the largest t ≡ j (mod size) with
+        # t < cache_pos + s; keep the old value where that t predates the
+        # new tokens.
+        t_new = cache_pos + s - 1 - ((cache_pos + s - 1 - j) % size)
+        rel = jnp.clip(t_new - cache_pos, 0, s - 1)
+        is_new = (t_new >= cache_pos)[None, :, None, None]
+        new_cache = KVCache(
+            jnp.where(is_new, jnp.take(k, rel, axis=1).astype(cache.k.dtype),
+                      cache.k),
+            jnp.where(is_new, jnp.take(v, rel, axis=1).astype(cache.v.dtype),
+                      cache.v))
+        out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+        out = constrain(out, "dp", None, "tp")
+        return jnp.einsum("bse,ed->bsd", out, params["wo"]), new_cache
     if cache is not None:
         # Decode: append the s new tokens into the (possibly rolling) cache.
         size = cache.k.shape[1]
@@ -232,7 +269,10 @@ def attention(
             k_pos = jnp.arange(k_all.shape[1])
             k_pos = jnp.where(k_pos < cache_pos + s, k_pos,
                               jnp.iinfo(jnp.int32).max)
-        out = _attend_full(q, k_all, v_all, positions, k_pos, cfg)
+        # Decode (s=1) attends densely; a bulk prefill over a long prompt
+        # switches to the online-softmax chunked path (cacheless threshold).
+        attend = _attend_chunked if s > _CHUNK_THRESHOLD else _attend_full
+        out = attend(q, k_all, v_all, positions, k_pos, cfg)
     else:
         k_pos = positions
         # Train/prefill: expand GQA KV to full heads ONLY when the KV head

@@ -120,12 +120,21 @@ def mamba_block(
         n_chunks = xc.shape[1] // chunk
         # (n_chunks, B, chunk, d_in) — scan over the leading chunk axis.
         xc = xc.reshape(b, n_chunks, chunk, d_in).transpose(1, 0, 2, 3)
+        # Padded positions must be state-identity: x=0 kills the increment
+        # but dt=softplus(conv_b-path)>0 would still *decay* the carried
+        # state once per pad step — corrupting the cache a bulk prefill
+        # saves.  (Within a chunk, pad < chunk, so position 0 is real.)
+        valid = (jnp.arange(n_chunks * chunk) < s).reshape(n_chunks, chunk)
 
-        def chunk_step(h, x_chunk):
+        def chunk_step(h, scanned):
+            x_chunk, v_chunk = scanned
             dt, b_sel, c_sel = _selective_params(params, x_chunk, cfg.d_state, r)
             decay = jnp.exp(dt[..., None] * a)                  # (B,c,d_in,N)
             inc = (dt[..., None] * b_sel[:, :, None, :]
                    * x_chunk.astype(jnp.float32)[..., None])
+            m = v_chunk[None, :, None, None]
+            decay = jnp.where(m, decay, 1.0)
+            inc = jnp.where(m, inc, 0.0)
             inc = inc.at[:, 0].add(h * decay[:, 0])
 
             def combine(left, right):
@@ -137,7 +146,7 @@ def mamba_block(
             y_chunk = jnp.einsum("bsin,bsn->bsi", states, c_sel)
             return states[:, -1], y_chunk.astype(x.dtype)
 
-        new_ssm, ys = jax.lax.scan(chunk_step, init_h, xc)
+        new_ssm, ys = jax.lax.scan(chunk_step, init_h, (xc, valid))
         y = ys.transpose(1, 0, 2, 3).reshape(b, n_chunks * chunk, d_in)[:, :s]
         y = y.astype(jnp.float32)
 

@@ -108,8 +108,15 @@ def forward(
     cache: Optional[dict] = None,
     cache_pos: Optional[jnp.ndarray] = None,
     remat: bool = True,
+    return_hidden: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
-    """Run the backbone. Returns (logits, new_cache, aux_loss)."""
+    """Run the backbone. Returns (logits, new_cache, aux_loss).
+
+    ``return_hidden=True`` stops after the final norm and returns the
+    (B, S, d_model) f32 hidden states in place of logits — the input the
+    Representer-Sketch head consumes instead of the dense unembed
+    (repro.core.sketch_lm_head / repro.kernels.fused_decode).
+    """
     b, s = tokens.shape
     x = embed(tokens, params["embed"]) * jnp.asarray(
         cfg.d_model ** 0.5, jnp.bfloat16)
@@ -157,6 +164,9 @@ def forward(
         new_cache["periods"] = scanned_cache
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return (x.astype(jnp.float32),
+                (new_cache if cache is not None else None), aux)
     table = params["embed"] if cfg.tie_embeddings else params["head"]
     logits = unembed(x, table).astype(jnp.float32)
     logits = constrain(logits, "dp", None, "tp")  # vocab-parallel logits
@@ -204,9 +214,16 @@ def decode_step(
     cfg: ModelConfig,
     *,
     encoder_states: Optional[jnp.ndarray] = None,
+    return_hidden: bool = False,
 ) -> Tuple[jnp.ndarray, dict]:
-    """One decode step: returns (logits (B, V), updated cache)."""
-    logits, new_cache, _ = forward(
+    """One decode step: returns (logits (B, V), updated cache).
+
+    ``return_hidden=True`` returns the (B, d_model) final hidden instead of
+    logits — the dense unembed is skipped entirely so a sketched head can
+    replace it (the paper's serving hot path).
+    """
+    out, new_cache, _ = forward(
         params, tokens, cfg, encoder_states=encoder_states,
-        cache=cache, cache_pos=pos, remat=False)
-    return logits[:, -1], new_cache
+        cache=cache, cache_pos=pos, remat=False,
+        return_hidden=return_hidden)
+    return out[:, -1], new_cache

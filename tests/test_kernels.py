@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.fused_decode.ops import fused_decode_logits
+from repro.kernels.fused_decode.ref import fused_decode_ref
 from repro.kernels.lsh_hash.ops import lsh_hash
 from repro.kernels.lsh_hash.ref import lsh_hash_ref
 from repro.kernels.race_query.ops import race_query
@@ -76,6 +78,44 @@ def test_sketch_head_matches_ref(b, l, r, v):
     want = sketch_head_ref(sketch, idx)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b", [1, 7, 16])
+@pytest.mark.parametrize("d,dp,l,k,r,v", [(16, 8, 8, 1, 4, 32),
+                                          (64, 32, 40, 3, 16, 100),
+                                          (24, 16, 5, 2, 100, 2048)])
+def test_fused_decode_matches_ref(b, d, dp, l, k, r, v):
+    key = jax.random.PRNGKey(b * 1000 + v)
+    kh, kp, kw, kb, ks = jax.random.split(key, 5)
+    hidden = jax.random.normal(kh, (b, d))
+    proj = jax.random.normal(kp, (d, dp)) / np.sqrt(d)
+    w = jax.random.normal(kw, (l, k, dp))
+    bias = jax.random.uniform(kb, (l, k))
+    sketch = jax.random.normal(ks, (l, r, v))
+    got = fused_decode_logits(hidden, proj, w, bias, sketch, bandwidth=1.5,
+                              n_buckets=r, block_b=4, block_v=64)
+    want = fused_decode_ref(hidden, proj, w, bias, sketch, 1.5, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_decode_matches_two_kernel_composition():
+    """The fused kernel must agree with lsh_hash → sketch_head exactly on
+    indices (same integer mix), hence near-exactly on logits."""
+    key = jax.random.PRNGKey(42)
+    kh, kp, kw, kb, ks = jax.random.split(key, 5)
+    b, d, dp, l, k, r, v = 9, 32, 16, 24, 2, 8, 128
+    hidden = jax.random.normal(kh, (b, d))
+    proj = jax.random.normal(kp, (d, dp)) / np.sqrt(d)
+    w = jax.random.normal(kw, (l, k, dp))
+    bias = jax.random.uniform(kb, (l, k))
+    sketch = jax.random.normal(ks, (l, r, v))
+    fused = fused_decode_logits(hidden, proj, w, bias, sketch, bandwidth=2.0,
+                                n_buckets=r, block_b=4, block_v=64)
+    idx = lsh_hash(hidden @ proj, w, bias, bandwidth=2.0, n_buckets=r)
+    two = sketch_head_logits(sketch, idx, block_b=4, block_v=64)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_kernels_jit_and_grad_free():

@@ -3,6 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: property tests are skipped without hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lsh import LSHConfig, L2LSH, SRPLSH, _fold_subhashes

@@ -113,6 +113,10 @@ def test_sketch_lm_head_approximates_dense(trained):
     corr = np.corrcoef(dense.ravel(), sk.ravel())[0, 1]
     assert hits > 0.45, hits
     assert corr > 0.6, corr
+    # The fused serving kernel must reproduce the two-kernel logits on the
+    # distilled head (same hash indices bit-for-bit).
+    sk_fused = np.asarray(apply_head(head, test_h, head_cfg, fused=True))
+    np.testing.assert_allclose(sk_fused, sk, rtol=1e-5, atol=1e-5)
     costs = head_costs(head_cfg, cfg.d_model, cfg.vocab_size)
     assert costs["flop_ratio"] > 0   # accounting sanity
 
