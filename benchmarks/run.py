@@ -16,8 +16,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: table1,fig2,thm2,sketch_head,kernels,"
-                         "roofline")
+                    help="comma list: table1,fig2,thm2,sketch_head,engine,"
+                         "kernels,roofline")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale budgets (slower)")
     args = ap.parse_args()
@@ -72,6 +72,19 @@ def main() -> None:
         csv_rows.append(("sketch_head/sketch", r["us_sketch"],
                          f"flops={r['sketch_flops']};"
                          f"flop_ratio={r['flop_ratio']:.1f}x"))
+        print()
+
+    if want("engine"):
+        print("== Continuous-batching engine vs static batching ==")
+        from benchmarks import engine_bench
+        r = engine_bench.run()
+        csv_rows.append(("engine/static", 0.0,
+                         f"tok_s={r['static']['tok_s']:.1f};"
+                         f"util={r['static']['slot_utilization']:.2f}"))
+        csv_rows.append(("engine/continuous", 0.0,
+                         f"tok_s={r['engine']['tok_s']:.1f};"
+                         f"util={r['engine']['slot_utilization']:.2f};"
+                         f"speedup={r['tok_s_speedup']:.2f}x"))
         print()
 
     if want("kernels"):

@@ -74,6 +74,23 @@ def main():
     print(f"   generated {out.shape} tokens; sample:",
           np.asarray(out[0, -8:]))
 
+    print("4. engine: continuous-batching serve of a staggered request "
+          "stream through the saved head …")
+    from repro.core.sketch_lm_head import load_head
+    from repro.launch.engine import make_engine
+
+    loaded, loaded_cfg = load_head(HEAD_PATH)
+    engine = make_engine(params, cfg, n_slots=2, max_seq=20,
+                         sketch_head=loaded, sketch_cfg=loaded_cfg)
+    rng = np.random.default_rng(7)
+    for i in range(5):
+        engine.submit(rng.integers(0, cfg.vocab_size, 12, dtype=np.int32),
+                      max_new_tokens=int(rng.integers(2, 9)), arrival=2 * i)
+    finished = engine.run()
+    print(f"   {len(finished)} requests retired over 2 recycled slots, "
+          f"slot utilization {engine.slot_utilization:.2f}; "
+          f"lengths: {sorted(len(v) for v in finished.values())}")
+
     costs = head_costs(head_cfg, cfg.d_model, cfg.vocab_size)
     print(f"   params: {costs['param_ratio']:.2f}x reduction, "
           f"flops/token: {costs['flop_ratio']:.2f}x reduction")

@@ -1,0 +1,310 @@
+"""Continuous-batching serve engine: slotted decode cache + FIFO admission.
+
+The static path (``launch.serve.generate``) runs one fixed batch from prefill
+to the last token — a request that finishes early pads the batch until the
+slowest one is done, and nothing can join mid-decode.  This engine owns a
+pool of ``n_slots`` decode-cache rows and a FIFO request queue instead:
+
+* **admit** — whenever a slot is free and a request has arrived, its prompt
+  is bulk-prefilled into a *fresh* cache (the exact prefill path the static
+  server uses) and the filled rows are copied into the pool via
+  ``cache_slot_insert``; simultaneous arrivals with equal prompt lengths
+  prefill as one batch.
+* **decode** — one ``serve_step`` per engine tick advances every occupied
+  slot, with per-slot position counters (each sequence is at its own depth)
+  and an active-slot mask so free slots keep their cache bitwise unchanged.
+* **retire** — a sequence leaves individually on EOS or its own
+  ``max_new_tokens``; the slot is ``cache_slot_reset`` to a fresh (bitwise
+  zero) row and immediately reusable on the next tick.
+
+The engine is head-agnostic: dense unembed, fused sketch head, and the
+two-kernel sketch path all run through the same ``serve_step``
+(DESIGN.md §7).  Scheduling bookkeeping lives in the pure-Python
+``SlotScheduler`` and the model compute behind the small ``EngineBackend``
+seam, so scheduler invariants are property-testable without JAX in the loop
+(tests/test_engine_properties.py).
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import jitted_serve_fns
+from repro.models.config import ModelConfig, SketchHeadConfig
+from repro.models.model import init_decode_cache
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: prompt tokens + generation budget."""
+    rid: int
+    prompt: np.ndarray          # (P,) int32
+    max_new_tokens: int
+    arrival: int = 0            # engine tick at which the request is visible
+
+
+class SlotScheduler:
+    """Slot-pool bookkeeping: admission and retirement, no model compute.
+
+    Invariants (property-tested): a slot is never double-assigned, every
+    admitted request retires exactly once, and ``n_free + n_active ==
+    n_slots`` at all times.  Free slots are handed out lowest-index first so
+    runs are deterministic.
+    """
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots))
+        self.owner: Dict[int, int] = {}       # slot -> rid
+        self.retired: Dict[int, int] = {}     # rid -> retire count
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.owner)
+
+    def active_slots(self) -> List[int]:
+        return sorted(self.owner)
+
+    def admit(self, rid: int) -> int:
+        if not self._free:
+            raise RuntimeError("no free slot")
+        if rid in self.owner.values() or rid in self.retired:
+            raise RuntimeError(f"request {rid} already admitted")
+        slot = min(self._free)
+        self._free.remove(slot)
+        self.owner[slot] = rid
+        return slot
+
+    def retire(self, slot: int) -> int:
+        rid = self.owner.pop(slot)
+        self.retired[rid] = self.retired.get(rid, 0) + 1
+        self._free.append(slot)
+        return rid
+
+
+class EngineBackend:
+    """Model compute behind the engine: prefill / insert / decode / reset.
+
+    One instance per (model, head) pair; the jitted callables are memoized
+    per config (``jitted_serve_fns``), so many engines over the same model
+    share compiles.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, sketch_head=None,
+                 sketch_cfg: Optional[SketchHeadConfig] = None,
+                 fused: bool = True):
+        if cfg.n_encoder_tokens:
+            raise NotImplementedError(
+                "engine serving of encoder-conditioned archs needs "
+                "per-request encoder states; use launch.serve.generate")
+        self.params = params
+        self.cfg = cfg
+        self.sketch_head = sketch_head
+        self.vocab_size = cfg.vocab_size
+        (self._prefill, self._decode,
+         self._insert, self._reset) = jitted_serve_fns(cfg, sketch_cfg, fused)
+
+    def init_pool(self, n_slots: int, max_seq: int):
+        return init_decode_cache(self.cfg, n_slots, max_seq)
+
+    def prefill(self, prompts: jnp.ndarray, max_seq: int):
+        """Bulk-prefill (G, P) prompts into a fresh cache → (logits, cache)."""
+        fresh = init_decode_cache(self.cfg, prompts.shape[0], max_seq)
+        logits, filled = self._prefill(self.params, prompts, cache=fresh)
+        return np.asarray(logits), filled
+
+    def insert(self, pool, filled, slots: np.ndarray):
+        return self._insert(pool, filled, jnp.asarray(slots, jnp.int32))
+
+    def reset(self, pool, slots: np.ndarray):
+        return self._reset(pool, jnp.asarray(slots, jnp.int32))
+
+    def decode(self, pool, tokens: np.ndarray, pos: np.ndarray,
+               active: np.ndarray):
+        logits, pool = self._decode(
+            self.params, pool, jnp.asarray(tokens[:, None], jnp.int32),
+            jnp.asarray(pos, jnp.int32), sketch_head=self.sketch_head,
+            active=jnp.asarray(active))
+        return np.asarray(logits), pool
+
+
+class ServeEngine:
+    """Continuous-batching engine over a ``backend`` and ``n_slots`` cache rows.
+
+    ``submit()`` requests, then ``run()`` (or ``step()`` tick by tick);
+    finished sequences land in ``finished[rid]`` as the generated token list
+    (prompt excluded).  Greedy by default; ``greedy=False`` samples from a
+    key chain seeded once with ``seed`` (reproducible per seed).
+    """
+
+    def __init__(self, backend, n_slots: int, max_seq: int, *,
+                 eos_id: Optional[int] = None, greedy: bool = True,
+                 seed: int = 0):
+        self.backend = backend
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.pool = backend.init_pool(n_slots, max_seq)
+        self.sched = SlotScheduler(n_slots)
+        self.pos = np.zeros(n_slots, np.int32)         # tokens cached per slot
+        self.last_tok = np.zeros(n_slots, np.int32)    # sampled, not yet cached
+        self.remaining = np.zeros(n_slots, np.int32)   # tokens still to emit
+        self.queue: List[Request] = []     # sorted by arrival, FIFO on ties
+        self.outputs: Dict[int, List[int]] = {}
+        self.finished: Dict[int, List[int]] = {}
+        self.now = 0                                   # engine tick clock
+        self._next_rid = 0
+        self._rids: set[int] = set()                   # every rid ever submitted
+        self._pending_reset: List[int] = []            # slots retired this tick
+        self._key = jax.random.PRNGKey(seed)
+        self.stats = {"decode_steps": 0, "active_slot_steps": 0,
+                      "admitted": 0, "retired": 0, "prefill_batches": 0}
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int, *, arrival: int = 0,
+               rid: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            raise ValueError("prompt must be non-empty")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(prompt) + max_new_tokens > self.max_seq + 1:
+            # The last sampled token is never written back to the cache.
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds the engine's max_seq ({self.max_seq})")
+        if rid is None:
+            rid = self._next_rid
+        if rid in self._rids:
+            raise ValueError(f"request id {rid} already submitted")
+        self._rids.add(rid)
+        self._next_rid = max(self._next_rid, rid) + 1
+        bisect.insort(self.queue, Request(rid, prompt, max_new_tokens, arrival),
+                      key=lambda r: r.arrival)
+        return rid
+
+    # -- scheduling --------------------------------------------------------
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.greedy:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(sub, jnp.asarray(logits)),
+                          np.int32)
+
+    def _admit(self) -> None:
+        """FIFO head-of-line admission into free slots; equal-length prompts
+        arriving together prefill as one batch (the bulk-prefill path)."""
+        batch: List[Request] = []
+        while (self.queue and self.queue[0].arrival <= self.now
+               and self.sched.n_free > len(batch)):
+            batch.append(self.queue.pop(0))
+        if not batch:
+            return
+        by_len: Dict[int, List[Request]] = {}
+        for r in batch:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        for plen, group in by_len.items():
+            prompts = jnp.asarray(np.stack([r.prompt for r in group]))
+            logits, filled = self.backend.prefill(prompts, self.max_seq)
+            first = self._sample(logits)
+            slots = np.asarray([self.sched.admit(r.rid) for r in group])
+            # A slot freed by an immediate retirement earlier in this same
+            # admission round may be handed out again here; drop its pending
+            # reset — the insert fully overwrites the row, and a deferred
+            # reset would clobber the new request's cache at end of tick.
+            self._pending_reset = [s for s in self._pending_reset
+                                   if s not in slots]
+            self.pool = self.backend.insert(self.pool, filled, slots)
+            self.stats["prefill_batches"] += 1
+            self.stats["admitted"] += len(group)
+            for i, r in enumerate(group):
+                s = int(slots[i])
+                self.pos[s] = plen
+                self.last_tok[s] = first[i]
+                self.remaining[s] = r.max_new_tokens - 1
+                self.outputs[r.rid] = [int(first[i])]
+                if (self.remaining[s] == 0
+                        or (self.eos_id is not None
+                            and int(first[i]) == self.eos_id)):
+                    self._retire(s)
+
+    def _retire(self, slot: int) -> None:
+        rid = self.sched.retire(slot)
+        self.finished[rid] = self.outputs[rid]
+        # Resets are batched per tick (one jitted call for all retirements
+        # this step) — a freed row is never read while inactive, and
+        # ``slot_insert`` fully overwrites it on re-admission.
+        self._pending_reset.append(slot)
+        self.stats["retired"] += 1
+
+    # -- the engine tick ---------------------------------------------------
+
+    def step(self) -> None:
+        """One tick: admit into free slots, then decode every occupied slot."""
+        self._admit()
+        active_slots = self.sched.active_slots()
+        if active_slots:
+            active = np.zeros(self.n_slots, bool)
+            active[active_slots] = True
+            logits, self.pool = self.backend.decode(
+                self.pool, self.last_tok, self.pos, active)
+            nxt = self._sample(logits)
+            self.stats["decode_steps"] += 1
+            self.stats["active_slot_steps"] += len(active_slots)
+            for s in active_slots:
+                tok = int(nxt[s])
+                self.outputs[self.sched.owner[s]].append(tok)
+                self.pos[s] += 1
+                self.last_tok[s] = tok
+                self.remaining[s] -= 1
+                if (self.remaining[s] == 0
+                        or (self.eos_id is not None and tok == self.eos_id)):
+                    self._retire(s)
+        if self._pending_reset:
+            # Pad to a fixed (n_slots,) shape so the jitted reset compiles
+            # once; duplicate indices write the same zeros, so padding with
+            # the first slot is a no-op.
+            slots = self._pending_reset + [self._pending_reset[0]] * (
+                self.n_slots - len(self._pending_reset))
+            self.pool = self.backend.reset(self.pool, np.asarray(slots))
+            self._pending_reset.clear()
+        self.now += 1
+
+    def run(self) -> Dict[int, List[int]]:
+        """Tick until the queue drains and every slot retires."""
+        while self.queue or self.sched.n_active:
+            if not self.sched.n_active and self.queue[0].arrival > self.now:
+                self.now = self.queue[0].arrival  # idle: jump to next arrival
+            self.step()
+        return self.finished
+
+    @property
+    def slot_utilization(self) -> float:
+        """Mean fraction of slots doing useful work per decode step."""
+        steps = self.stats["decode_steps"]
+        return (self.stats["active_slot_steps"] / (steps * self.n_slots)
+                if steps else 0.0)
+
+
+def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
+                sketch_head=None, sketch_cfg: Optional[SketchHeadConfig] = None,
+                fused: bool = True, eos_id: Optional[int] = None,
+                greedy: bool = True, seed: int = 0) -> ServeEngine:
+    """Engine over a real model: the serving entry point (see launch.serve)."""
+    backend = EngineBackend(params, cfg, sketch_head=sketch_head,
+                            sketch_cfg=sketch_cfg, fused=fused)
+    return ServeEngine(backend, n_slots, max_seq, eos_id=eos_id,
+                       greedy=greedy, seed=seed)

@@ -1,23 +1,33 @@
-"""Batched serving launcher: bulk prefill + decode loop, optional sketched head.
+"""Serving launcher: static batch or continuous-batching engine, optional
+sketched head.
 
-Serves a (smoke-scale on CPU) model over synthetic request batches: a single
-bulk prefill pass ingests each request's prompt into the decode cache, then
-the decode loop emits tokens step by step.  ``--sketch-head`` swaps the dense
-logit matmul for the Representer-Sketch head (the paper's technique as a
-first-class serving feature — see DESIGN.md §4): the backbone returns the
-final hidden and the frozen (L, R, V) sketch produces the logits in one
-fused Pallas call (repro.kernels.fused_decode).  The head is distilled
-offline by examples/serve_sketch_head.py and loaded via ``--head-path``;
-without a saved head a quick in-process distillation builds one.
+Two serving modes over a (smoke-scale on CPU) model:
+
+* **static** (default) — one synthetic request batch: a single bulk prefill
+  ingests every prompt into the decode cache, then the decode loop emits
+  tokens step by step until the *slowest* request is done.
+* **``--engine``** — the continuous-batching engine (repro.launch.engine,
+  DESIGN.md §7): a pool of ``--batch`` cache slots served from a FIFO queue
+  with staggered arrivals and skewed per-request generation lengths;
+  finished sequences retire individually and their slots are recycled
+  mid-decode.
+
+``--sketch-head`` swaps the dense logit matmul for the Representer-Sketch
+head (the paper's technique as a first-class serving feature — DESIGN.md §4)
+in either mode: the backbone returns the final hidden and the frozen
+(L, R, V) sketch produces the logits in one fused Pallas call
+(repro.kernels.fused_decode).  The head is distilled offline by
+examples/serve_sketch_head.py and loaded via ``--head-path``; without a
+saved head a quick in-process distillation builds one.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
-      --batch 4 --prompt-len 32 --gen 16 [--sketch-head] [--no-fused]
+      --batch 4 --prompt-len 32 --gen 16 [--sketch-head] [--no-fused] \
+      [--engine --requests 8 --arrival-every 2]
 """
 
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 from pathlib import Path
 
@@ -26,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.steps import prefill_step, serve_step
+from repro.launch.steps import jitted_serve_fns
 from repro.models.config import SketchHeadConfig
 from repro.models.model import init_decode_cache, init_model
 
@@ -34,31 +44,43 @@ from repro.models.model import init_decode_cache, init_model
 def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
              encoder_states=None, sketch_head_params=None,
              sketch_cfg: SketchHeadConfig | None = None,
-             fused: bool = True, greedy: bool = True):
-    """Bulk prefill + decode. prompts: (B, P) → tokens (B, P+gen_len)."""
+             fused: bool = True, greedy: bool = True, seed: int = 0):
+    """Bulk prefill + decode. prompts: (B, P) → tokens (B, P+gen_len).
+
+    Sampling (``greedy=False``) threads a split key chain from a single
+    ``seed``: runs with the same seed reproduce exactly, different seeds
+    give independent streams.  (Rebuilding ``PRNGKey(t)`` from the step
+    index — the old behavior — reused one fixed stream for every run.)
+    """
     b, p = prompts.shape
     max_seq = p + gen_len
     cache = init_decode_cache(cfg, b, max_seq)
+
+    # Jitted steps are memoized per (cfg, head, fused) — repeated generate()
+    # calls (static-batch chunking, benchmarks) reuse one compile cache.
+    prefill, step, _, _ = jitted_serve_fns(cfg, sketch_cfg, fused)
 
     # Bulk prefill: the whole prompt runs in one forward pass that fills the
     # decode cache, replacing the P per-token decode steps of the old loop.
     # Long prompts stay memory-bounded: cached attention switches to the
     # online-softmax chunked path above the same thresholds as training.
-    prefill = jax.jit(functools.partial(prefill_step, cfg=cfg))
     logits, cache = prefill(params, prompts, encoder_states=encoder_states,
                             cache=cache)
 
     # Decode: with a sketch head the step skips the dense unembed and
     # produces logits from the frozen sketch (fused kernel by default).
-    step = jax.jit(functools.partial(
-        serve_step, cfg=cfg, sketch_cfg=sketch_cfg, fused=fused))
-
+    key = jax.random.PRNGKey(seed)
     out = [prompts]
     for t in range(gen_len):
-        nxt = (jnp.argmax(logits, -1) if greedy
-               else jax.random.categorical(jax.random.PRNGKey(t), logits))
+        if greedy:
+            nxt = jnp.argmax(logits, -1)
+        else:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits)
         nxt = nxt[:, None].astype(jnp.int32)
         out.append(nxt)
+        if t == gen_len - 1:
+            break  # the last token needs no forward — its logits are unused
         logits, cache = step(params, cache, nxt,
                              jnp.asarray(p + t, jnp.int32),
                              encoder_states=encoder_states,
@@ -110,13 +132,51 @@ def build_or_load_head(params, cfg, head_path: str | None,
     return freeze_head(jax.random.PRNGKey(13), kparams, head_cfg), head_cfg
 
 
+def run_engine(params, cfg, args, sketch_head, sketch_cfg) -> None:
+    """Serve a synthetic request stream through the continuous-batching
+    engine: staggered arrivals, skewed generation lengths, recycled slots."""
+    from repro.launch.engine import make_engine
+
+    n_requests = args.requests or 2 * args.batch
+    max_seq = args.prompt_len + args.gen
+    engine = make_engine(params, cfg, n_slots=args.batch, max_seq=max_seq,
+                         sketch_head=sketch_head, sketch_cfg=sketch_cfg,
+                         fused=not args.no_fused, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    for i in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size, args.prompt_len,
+                              dtype=np.int32)
+        # Skewed length mix: even requests are short, odd run the full --gen.
+        gen = args.gen if i % 2 else max(1, args.gen // 4)
+        engine.submit(prompt, gen, arrival=i * args.arrival_every)
+
+    t0 = time.time()
+    finished = engine.run()
+    dur = time.time() - t0
+    n_generated = sum(len(v) for v in finished.values())
+    head_kind = ("sketch/fused" if sketch_head is not None and not args.no_fused
+                 else "sketch/2-kernel" if sketch_head is not None
+                 else "dense")
+    print(f"arch={cfg.name} head={head_kind} engine served "
+          f"{len(finished)} requests over {args.batch} slots: "
+          f"{n_generated} tokens in {dur:.1f}s "
+          f"({n_generated / dur:.1f} tok/s incl. compile), "
+          f"{engine.stats['decode_steps']} decode steps, "
+          f"slot utilization {engine.slot_utilization:.2f}")
+    first = finished[min(finished)]
+    print("sample token ids:", np.asarray(first[:24]))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-1.6b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch size / engine slot count")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16,
+                    help="generation length (engine: per-request max; the "
+                         "synthetic mix skews between gen//4 and gen)")
     ap.add_argument("--sketch-head", action="store_true",
                     help="decode with the Representer-Sketch head instead "
                          "of the dense logit matmul")
@@ -125,10 +185,29 @@ def main() -> None:
     ap.add_argument("--no-fused", action="store_true",
                     help="use the two-kernel (lsh_hash + sketch_head) decode "
                          "path instead of the fused kernel")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve a request stream through the "
+                         "continuous-batching engine instead of one static "
+                         "batch")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="engine mode: number of requests (default 2×batch)")
+    ap.add_argument("--arrival-every", type=int, default=1,
+                    help="engine mode: ticks between request arrivals")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling / request-stream seed")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_model(jax.random.PRNGKey(0), cfg)
+    sketch_head = sketch_cfg = None
+    if args.sketch_head:
+        sketch_head, sketch_cfg = build_or_load_head(params, cfg,
+                                                     args.head_path)
+
+    if args.engine:
+        run_engine(params, cfg, args, sketch_head, sketch_cfg)
+        return
+
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
@@ -138,15 +217,10 @@ def main() -> None:
             jax.random.PRNGKey(2),
             (args.batch, cfg.n_encoder_tokens, cfg.d_model), jnp.bfloat16)
 
-    sketch_head = sketch_cfg = None
-    if args.sketch_head:
-        sketch_head, sketch_cfg = build_or_load_head(params, cfg,
-                                                     args.head_path)
-
     t0 = time.time()
     out = generate(params, cfg, prompts, args.gen, encoder_states=enc,
                    sketch_head_params=sketch_head, sketch_cfg=sketch_cfg,
-                   fused=not args.no_fused)
+                   fused=not args.no_fused, seed=args.seed)
     dur = time.time() - t0
     total_tokens = args.batch * (args.prompt_len + args.gen)
     head_kind = ("sketch/fused" if sketch_head is not None and not args.no_fused

@@ -104,7 +104,7 @@ def prefill_step(params, tokens, cfg: ModelConfig,
 def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
                encoder_states=None, sketch_head=None,
                sketch_cfg: Optional[SketchHeadConfig] = None,
-               fused: bool = True):
+               fused: bool = True, active=None):
     """One decode step (one new token per sequence against the cache).
 
     With ``sketch_head`` (frozen params from
@@ -115,20 +115,49 @@ def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
     the two-kernel lsh_hash → sketch_head baseline.  ``sketch_cfg`` must be
     the head's static SketchHeadConfig (hashable; close over it via
     functools.partial before jit).
-    """
-    if sketch_head is None:
-        return decode_step(params, cache, tokens, pos, cfg,
-                           encoder_states=encoder_states)
-    from repro.core.sketch_lm_head import apply_head
-    from repro.models.layers import softcap
 
-    hidden, new_cache = decode_step(params, cache, tokens, pos, cfg,
-                                    encoder_states=encoder_states,
-                                    return_hidden=True)
-    logits = apply_head(sketch_head, hidden, sketch_cfg, fused=fused)
-    if cfg.final_logit_softcap:
-        logits = softcap(logits, cfg.final_logit_softcap)
+    Continuous batching: ``pos`` may be per-slot (B,) counters, and
+    ``active`` a (B,) bool mask — cache rows of inactive (free/padded) slots
+    are kept bitwise unchanged, so a parked slot neither attends nor decays
+    state while it waits for a new request.
+    """
+    from repro.models.model import mask_cache_update
+
+    if sketch_head is None:
+        logits, new_cache = decode_step(params, cache, tokens, pos, cfg,
+                                        encoder_states=encoder_states)
+    else:
+        from repro.core.sketch_lm_head import apply_head
+        from repro.models.layers import softcap
+
+        hidden, new_cache = decode_step(params, cache, tokens, pos, cfg,
+                                        encoder_states=encoder_states,
+                                        return_hidden=True)
+        logits = apply_head(sketch_head, hidden, sketch_cfg, fused=fused)
+        if cfg.final_logit_softcap:
+            logits = softcap(logits, cfg.final_logit_softcap)
+    if active is not None:
+        new_cache = mask_cache_update(cfg, cache, new_cache, active)
     return logits, new_cache
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_serve_fns(cfg: ModelConfig,
+                     sketch_cfg: Optional[SketchHeadConfig] = None,
+                     fused: bool = True):
+    """Jitted (prefill, decode, slot_insert, slot_reset) for one serving
+    config.  Memoized on the (hashable) configs so every ``generate()`` call
+    and every engine instance for the same model reuses one compile cache —
+    a fresh ``jax.jit(partial(...))`` per call would recompile each time.
+    """
+    from repro.models.model import cache_slot_insert, cache_slot_reset
+
+    prefill = jax.jit(functools.partial(prefill_step, cfg=cfg))
+    decode = jax.jit(functools.partial(serve_step, cfg=cfg,
+                                       sketch_cfg=sketch_cfg, fused=fused))
+    insert = jax.jit(functools.partial(cache_slot_insert, cfg))
+    reset = jax.jit(functools.partial(cache_slot_reset, cfg))
+    return prefill, decode, insert, reset
 
 
 # --------------------------------------------------------------------------

@@ -54,9 +54,39 @@ def init_cache(batch: int, max_seq: int, cfg: AttentionConfig,
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
 
 
+def slot_insert(cache: KVCache, src: KVCache, slots: jnp.ndarray) -> KVCache:
+    """Copy batch rows of ``src`` into rows ``slots`` of the pooled cache.
+
+    ``src`` is a freshly prefilled cache (same ``max_seq``/ring size as the
+    pool) holding one row per admitted request; the per-slot position
+    counter the engine keeps equals the request's own token count, so a
+    rolling SWA ring inserted this way stays phase-consistent.
+    """
+    return KVCache(cache.k.at[slots].set(src.k.astype(cache.k.dtype)),
+                   cache.v.at[slots].set(src.v.astype(cache.v.dtype)))
+
+
+def slot_reset(cache: KVCache, slots: jnp.ndarray) -> KVCache:
+    """Zero rows ``slots`` — bitwise identical to a fresh ``init_cache`` row."""
+    return KVCache(cache.k.at[slots].set(0), cache.v.at[slots].set(0))
+
+
 def _scores_mask(scores: jnp.ndarray, q_pos: jnp.ndarray, k_pos: jnp.ndarray,
                  window: Optional[int]) -> jnp.ndarray:
-    """Apply causal (+ optional sliding-window) mask to (..., Sq, Sk) scores."""
+    """Apply causal (+ optional sliding-window) mask to (..., Sq, Sk) scores.
+
+    Positions are either shared across the batch (``(Sq,)`` / ``(Sk,)``) or
+    per-sequence (``(B, Sq)`` / ``(B, Sk)`` — continuous-batching decode,
+    where every cache slot carries its own position counter).
+    """
+    if q_pos.ndim == 2 or k_pos.ndim == 2:
+        q2 = q_pos if q_pos.ndim == 2 else q_pos[None]
+        k2 = k_pos if k_pos.ndim == 2 else k_pos[None]
+        causal = q2[:, :, None] >= k2[:, None, :]
+        if window is not None:
+            causal &= (q2[:, :, None] - k2[:, None, :]) < window
+        # scores: (B, n_kv, groups, Sq, Sk) — broadcast over the head axes.
+        return jnp.where(causal[:, None, None], scores, _NEG_INF)
     causal = q_pos[:, None] >= k_pos[None, :]
     if window is not None:
         causal &= (q_pos[:, None] - k_pos[None, :]) < window
@@ -243,7 +273,34 @@ def attention(
         out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
         out = constrain(out, "dp", None, "tp")
         return jnp.einsum("bse,ed->bsd", out, params["wo"]), new_cache
-    if cache is not None:
+    if cache is not None and jnp.ndim(cache_pos) == 1:
+        # Per-slot decode (continuous-batching engine): every sequence owns
+        # one cache row and its own position counter, so the write index and
+        # the key positions are per-batch.  Single-token steps only — bulk
+        # prefill of a new request runs with a scalar cache_pos into a fresh
+        # cache and is copied in via ``slot_insert``.
+        if s != 1:
+            raise NotImplementedError(
+                "per-slot cache_pos supports single-token decode only; "
+                "prefill into a fresh cache and slot_insert it instead")
+        size = cache.k.shape[1]
+        ring = bool(cfg.window) and cfg.window <= size
+        slot = cache_pos % size if ring else cache_pos      # (B,)
+        bi = jnp.arange(b)
+        ck = cache.k.at[bi, slot].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[bi, slot].set(v[:, 0].astype(cache.v.dtype))
+        new_cache = KVCache(ck, cv)
+        i = jnp.arange(size)[None, :]
+        if ring:
+            # Ring buffer: same pointer arithmetic as the scalar path, per row.
+            base = (cache_pos - slot)[:, None]
+            k_pos = jnp.where(i <= slot[:, None], i + base, i + base - size)
+            k_pos = jnp.where(k_pos >= 0, k_pos, jnp.iinfo(jnp.int32).max)
+        else:
+            k_pos = jnp.where(i < cache_pos[:, None] + 1, i,
+                              jnp.iinfo(jnp.int32).max)
+        out = _attend_full(q, ck, cv, positions, k_pos, cfg)
+    elif cache is not None:
         # Decode: append the s new tokens into the (possibly rolling) cache.
         size = cache.k.shape[1]
         if cfg.window and cfg.window <= size:

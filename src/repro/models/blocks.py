@@ -86,6 +86,36 @@ def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
     raise ValueError(kind)
 
 
+def slot_insert_cache(kind: str, cache, src, slots):
+    """Slot-wise insert for one layer's cache (dispatch on block kind)."""
+    if cache is None:
+        return None
+    if kind in ATTN_KINDS:
+        return attn_mod.slot_insert(cache, src, slots)
+    if kind == "mla":
+        return mla_mod.slot_insert(cache, src, slots)
+    if kind == "mamba":
+        return mamba_mod.slot_insert(cache, src, slots)
+    if kind == "rwkv":
+        return rwkv_mod.slot_insert(cache, src, slots)
+    raise ValueError(kind)
+
+
+def slot_reset_cache(kind: str, cache, slots):
+    """Slot-wise reset for one layer's cache (dispatch on block kind)."""
+    if cache is None:
+        return None
+    if kind in ATTN_KINDS:
+        return attn_mod.slot_reset(cache, slots)
+    if kind == "mla":
+        return mla_mod.slot_reset(cache, slots)
+    if kind == "mamba":
+        return mamba_mod.slot_reset(cache, slots)
+    if kind == "rwkv":
+        return rwkv_mod.slot_reset(cache, slots)
+    raise ValueError(kind)
+
+
 def apply_layer(
     params: dict,
     x: jnp.ndarray,

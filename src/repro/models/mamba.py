@@ -65,6 +65,22 @@ def init_mamba_cache(batch: int, d_model: int, cfg: MambaConfig,
     )
 
 
+def slot_insert(cache: MambaCache, src: MambaCache,
+                slots: jnp.ndarray) -> MambaCache:
+    """Copy batch rows (rolling conv inputs + SSM state) into pool ``slots``.
+
+    The SSM state is position-free — a row prefilled in a fresh batch-1 cache
+    is exactly the state the request would have in any slot.
+    """
+    return MambaCache(cache.conv.at[slots].set(src.conv.astype(cache.conv.dtype)),
+                      cache.ssm.at[slots].set(src.ssm.astype(cache.ssm.dtype)))
+
+
+def slot_reset(cache: MambaCache, slots: jnp.ndarray) -> MambaCache:
+    """Zero rows ``slots`` — bitwise identical to fresh ``init_mamba_cache``."""
+    return MambaCache(cache.conv.at[slots].set(0), cache.ssm.at[slots].set(0))
+
+
 def _selective_params(params: dict, x_conv: jnp.ndarray, d_state: int, r: int):
     """Project conv output → (Δ, B_t, C_t) selective parameters (f32)."""
     proj = jnp.einsum("...i,ie->...e", x_conv, params["x_proj"]).astype(jnp.float32)

@@ -49,6 +49,18 @@ def init_mla_cache(batch: int, max_seq: int, cfg: MLAConfig,
     )
 
 
+def slot_insert(cache: MLACache, src: MLACache, slots: jnp.ndarray) -> MLACache:
+    """Copy batch rows of a freshly prefilled latent cache into pool ``slots``."""
+    return MLACache(
+        cache.c_kv.at[slots].set(src.c_kv.astype(cache.c_kv.dtype)),
+        cache.k_rope.at[slots].set(src.k_rope.astype(cache.k_rope.dtype)))
+
+
+def slot_reset(cache: MLACache, slots: jnp.ndarray) -> MLACache:
+    """Zero rows ``slots`` — bitwise identical to fresh ``init_mla_cache`` rows."""
+    return MLACache(cache.c_kv.at[slots].set(0), cache.k_rope.at[slots].set(0))
+
+
 _NEG_INF = -1e30
 
 
@@ -104,7 +116,24 @@ def mla_attention(
         return jnp.einsum("bse,ed->bsd", o, params["w_o"]), None
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and jnp.ndim(cache_pos) == 1:
+        # Per-slot decode (continuous-batching engine): each sequence owns a
+        # cache row with its own position counter; single-token steps only.
+        if s != 1:
+            raise NotImplementedError(
+                "per-slot cache_pos supports single-token decode only; "
+                "prefill into a fresh cache and slot_insert it instead")
+        bi = jnp.arange(b)
+        ck = cache.c_kv.at[bi, cache_pos].set(
+            c_kv[:, 0].astype(cache.c_kv.dtype))
+        cr = cache.k_rope.at[bi, cache_pos].set(
+            k_rope[:, 0].astype(cache.k_rope.dtype))
+        new_cache = MLACache(ck, cr)
+        c_all, r_all = ck, cr
+        k_pos = jnp.arange(c_all.shape[1])[None, :]          # (1, T)
+        k_pos = jnp.where(k_pos < cache_pos[:, None] + 1, k_pos,
+                          jnp.iinfo(jnp.int32).max)          # (B, T)
+    elif cache is not None:
         ck = jax.lax.dynamic_update_slice(
             cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache_pos, 0))
         cr = jax.lax.dynamic_update_slice(
@@ -127,8 +156,14 @@ def mla_attention(
         + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
                      r_all.astype(jnp.float32))
     ) * scale
-    mask = positions[:, None] >= k_pos[None, :]
-    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    if positions.ndim == 2 or k_pos.ndim == 2:
+        # Per-sequence positions: (B, S) vs (B, T) → (B, 1, S, T) mask.
+        p2 = positions if positions.ndim == 2 else positions[None]
+        k2 = k_pos if k_pos.ndim == 2 else k_pos[None]
+        mask = (p2[:, :, None] >= k2[:, None, :])[:, None]
+    else:
+        mask = (positions[:, None] >= k_pos[None, :])[None, None]
+    scores = jnp.where(mask, scores, _NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
 
     # Attend over the latent, then up-project per head (absorbed W_uv).

@@ -78,6 +78,66 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
     return cache
 
 
+def _map_layer_caches(cfg: ModelConfig, fn, *caches):
+    """Apply ``fn(kind, *layer_caches)`` over every layer cache of the trees.
+
+    Prologue caches have their natural (B, ...) layout; scanned-period caches
+    carry a leading ``n_periods`` axis, handled by vmapping ``fn`` over it.
+    Walks the same structure ``init_decode_cache`` builds.
+    """
+    out: dict = {}
+    if "prologue" in caches[0]:
+        kind = cfg.pattern[0]
+        out["prologue"] = [
+            fn(kind, *(c["prologue"][i] for c in caches))
+            for i in range(cfg.n_dense_prologue)
+        ]
+    periods = {}
+    for j, kind in enumerate(cfg.pattern):
+        layer = tuple(c["periods"][f"pos{j}"] for c in caches)
+        periods[f"pos{j}"] = (
+            None if layer[0] is None
+            else jax.vmap(functools.partial(fn, kind))(*layer))
+    out["periods"] = periods
+    return out
+
+
+def cache_slot_insert(cfg: ModelConfig, pool: dict, src: dict,
+                      slots: jnp.ndarray) -> dict:
+    """Insert the batch rows of a freshly prefilled cache into pool ``slots``.
+
+    ``src`` comes from ``init_decode_cache(cfg, G, max_seq)`` + a bulk
+    prefill of G admitted prompts (same ``max_seq`` as the pool); row i goes
+    into pool slot ``slots[i]``.  Rows of other slots are untouched
+    (bitwise), which is what makes mid-decode admission safe.
+    """
+    return _map_layer_caches(
+        cfg, lambda kind, c, s: blocks.slot_insert_cache(kind, c, s, slots),
+        pool, src)
+
+
+def cache_slot_reset(cfg: ModelConfig, pool: dict, slots: jnp.ndarray) -> dict:
+    """Zero pool ``slots`` — bitwise identical to freshly initialized rows."""
+    return _map_layer_caches(
+        cfg, lambda kind, c: blocks.slot_reset_cache(kind, c, slots), pool)
+
+
+def mask_cache_update(cfg: ModelConfig, old: dict, new: dict,
+                      active: jnp.ndarray) -> dict:
+    """Keep ``new`` cache rows where ``active`` (B,) bool, else ``old``.
+
+    Free/padded slots of a continuous-batching decode step keep their cache
+    bitwise unchanged — a parked SWA ring doesn't advance, a parked SSM/WKV
+    state doesn't decay.
+    """
+    def merge(kind, o, n):
+        sel = lambda a, b: jnp.where(
+            active.reshape((-1,) + (1,) * (a.ndim - 1)), b, a)
+        return jax.tree.map(sel, o, n)
+
+    return _map_layer_caches(cfg, merge, old, new)
+
+
 # --------------------------------------------------------------------------
 # forward
 # --------------------------------------------------------------------------
@@ -124,6 +184,12 @@ def forward(
     if cache_pos is None:
         positions = jnp.arange(s)
         cache_pos_v = jnp.zeros((), jnp.int32)
+    elif jnp.ndim(cache_pos) == 1:
+        # Per-slot position counters (continuous-batching decode): every
+        # sequence is at its own depth, so RoPE angles and attention masks
+        # become (B, S)-shaped.
+        positions = cache_pos[:, None] + jnp.arange(s)[None, :]
+        cache_pos_v = cache_pos
     else:
         positions = cache_pos + jnp.arange(s)
         cache_pos_v = cache_pos
@@ -210,7 +276,8 @@ def decode_step(
     params: dict,
     cache: dict,
     tokens: jnp.ndarray,       # (B, 1) — the newest token
-    pos: jnp.ndarray,          # scalar int32 — number of tokens already cached
+    pos: jnp.ndarray,          # int32 tokens-already-cached: scalar, or (B,)
+                               # per-slot counters (continuous batching)
     cfg: ModelConfig,
     *,
     encoder_states: Optional[jnp.ndarray] = None,

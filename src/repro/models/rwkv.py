@@ -71,6 +71,22 @@ def init_rwkv_cache(batch: int, d_model: int, dtype=jnp.float32) -> RWKVCache:
     )
 
 
+def slot_insert(cache: RWKVCache, src: RWKVCache,
+                slots: jnp.ndarray) -> RWKVCache:
+    """Copy batch rows (prev-token vectors + WKV state) into pool ``slots``."""
+    return RWKVCache(
+        cache.tm_prev.at[slots].set(src.tm_prev.astype(cache.tm_prev.dtype)),
+        cache.cm_prev.at[slots].set(src.cm_prev.astype(cache.cm_prev.dtype)),
+        cache.state.at[slots].set(src.state.astype(cache.state.dtype)))
+
+
+def slot_reset(cache: RWKVCache, slots: jnp.ndarray) -> RWKVCache:
+    """Zero rows ``slots`` — bitwise identical to fresh ``init_rwkv_cache``."""
+    return RWKVCache(cache.tm_prev.at[slots].set(0),
+                     cache.cm_prev.at[slots].set(0),
+                     cache.state.at[slots].set(0))
+
+
 def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
     """Shift sequence right by one; position 0 sees ``prev`` (or zeros)."""
     first = (prev[:, None, :] if prev is not None
