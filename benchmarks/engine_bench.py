@@ -27,17 +27,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SketchHead, SketchHeadConfig
 from repro.configs import get_config
 from repro.core.sketch_lm_head import freeze_head
 from repro.launch.engine import make_engine
 from repro.launch.serve import generate
-from repro.models.config import SketchHeadConfig
 from repro.models.model import init_model
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
 
 
-def _make_head(cfg):
+def _make_head(cfg, backend: str = "fused") -> SketchHead:
     head_cfg = SketchHeadConfig(n_rows=32, n_buckets=8, k=1, proj_dim=16,
                                 bandwidth=2.0)
     key = jax.random.PRNGKey(0)
@@ -47,7 +47,8 @@ def _make_head(cfg):
         "proj": jax.random.normal(key, (cfg.d_model, head_cfg.proj_dim))
         / np.sqrt(cfg.d_model),
     }
-    return freeze_head(key, kparams, head_cfg), head_cfg
+    return SketchHead(cfg=head_cfg, backend=backend,
+                      params=freeze_head(key, kparams, head_cfg))
 
 
 def _requests(n_requests, prompt_len, gen_short, gen_long, vocab, seed=0):
@@ -59,7 +60,7 @@ def _requests(n_requests, prompt_len, gen_short, gen_long, vocab, seed=0):
     ]
 
 
-def _run_static(params, cfg, reqs, n_slots, head, head_cfg):
+def _run_static(params, cfg, reqs, n_slots, head):
     """FIFO chunks of n_slots; each chunk decodes to its longest member."""
     done_tokens = 0
     decode_steps = 0
@@ -69,8 +70,7 @@ def _run_static(params, cfg, reqs, n_slots, head, head_cfg):
         chunk = reqs[i : i + n_slots]
         prompts = jnp.asarray(np.stack([p for p, _ in chunk]))
         gen_max = max(g for _, g in chunk)
-        out = generate(params, cfg, prompts, gen_max,
-                       sketch_head_params=head, sketch_cfg=head_cfg)
+        out = generate(params, cfg, prompts, gen_max, head=head)
         jax.block_until_ready(out)
         done_tokens += sum(g for _, g in chunk)   # useful tokens only
         decode_steps += gen_max - 1               # first token from prefill
@@ -83,9 +83,9 @@ def _run_static(params, cfg, reqs, n_slots, head, head_cfg):
             "slot_utilization": util}
 
 
-def _run_engine(params, cfg, reqs, n_slots, max_seq, head, head_cfg):
+def _run_engine(params, cfg, reqs, n_slots, max_seq, head):
     engine = make_engine(params, cfg, n_slots=n_slots, max_seq=max_seq,
-                         sketch_head=head, sketch_cfg=head_cfg)
+                         head=head)
     for prompt, gen in reqs:
         engine.submit(prompt, gen)
     t0 = time.perf_counter()
@@ -99,10 +99,10 @@ def _run_engine(params, cfg, reqs, n_slots, max_seq, head, head_cfg):
 
 def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
         prompt_len: int = 8, gen_short: int = 4, gen_long: int = 64,
-        reps: int = 3):
+        reps: int = 3, backend: str = "fused"):
     cfg = get_config(arch, smoke=True)
     params = init_model(jax.random.PRNGKey(0), cfg)
-    head, head_cfg = _make_head(cfg)
+    head = _make_head(cfg, backend)
     max_seq = prompt_len + gen_long
     reqs = _requests(n_requests, prompt_len, gen_short, gen_long,
                      cfg.vocab_size)
@@ -110,21 +110,21 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
     # Warm both paths (compile) on a tiny slice, then time the full stream
     # rep-by-rep interleaved (machine-load drift hits both modes equally)
     # and keep the best rep of each.
-    _run_static(params, cfg, reqs[: 2 * n_slots], n_slots, head, head_cfg)
-    _run_engine(params, cfg, reqs[: 2 * n_slots], n_slots, max_seq,
-                head, head_cfg)
+    _run_static(params, cfg, reqs[: 2 * n_slots], n_slots, head)
+    _run_engine(params, cfg, reqs[: 2 * n_slots], n_slots, max_seq, head)
 
     static = engine = None
     for _ in range(reps):
-        s = _run_static(params, cfg, reqs, n_slots, head, head_cfg)
-        e = _run_engine(params, cfg, reqs, n_slots, max_seq, head, head_cfg)
+        s = _run_static(params, cfg, reqs, n_slots, head)
+        e = _run_engine(params, cfg, reqs, n_slots, max_seq, head)
         static = s if static is None or s["seconds"] < static["seconds"] else static
         engine = e if engine is None or e["seconds"] < engine["seconds"] else engine
 
     result = {
         "arch": cfg.name, "n_slots": n_slots, "n_requests": n_requests,
         "prompt_len": prompt_len, "gen_short": gen_short,
-        "gen_long": gen_long, "head": "sketch/fused",
+        "gen_long": gen_long,
+        "head": {"kind": head.kind, "backend": head.backend},
         "static": static, "engine": engine,
         "tok_s_speedup": engine["tok_s"] / static["tok_s"],
         "decode_step_ratio": static["decode_steps"] / engine["decode_steps"],

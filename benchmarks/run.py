@@ -20,6 +20,11 @@ def main() -> None:
                          "kernels,roofline")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale budgets (slower)")
+    ap.add_argument("--backend", default="fused",
+                    choices=["fused", "two_kernel", "ref"],
+                    help="sketch-head decode backend for the serving "
+                         "benchmarks (recorded in the BENCH_*.json head "
+                         "metadata; DESIGN.md §8)")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
     csv_rows = []
@@ -66,10 +71,11 @@ def main() -> None:
     if want("sketch_head"):
         print("== Sketched LM head vs dense head ==")
         from benchmarks import sketch_head_bench
-        r = sketch_head_bench.run()
+        r = sketch_head_bench.run(backend=args.backend)
         csv_rows.append(("sketch_head/dense", r["us_dense"],
                          f"flops={r['dense_flops']}"))
-        csv_rows.append(("sketch_head/sketch", r["us_sketch"],
+        csv_rows.append((f"sketch_head/{r['head']['backend']}",
+                         r["us_sketch"],
                          f"flops={r['sketch_flops']};"
                          f"flop_ratio={r['flop_ratio']:.1f}x"))
         print()
@@ -77,7 +83,7 @@ def main() -> None:
     if want("engine"):
         print("== Continuous-batching engine vs static batching ==")
         from benchmarks import engine_bench
-        r = engine_bench.run()
+        r = engine_bench.run(backend=args.backend)
         csv_rows.append(("engine/static", 0.0,
                          f"tok_s={r['static']['tok_s']:.1f};"
                          f"util={r['static']['slot_utilization']:.2f}"))

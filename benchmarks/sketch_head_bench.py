@@ -51,7 +51,8 @@ def _time_group(fns, *args, n=20, reps=5):
     return [b * 1e6 for b in best]
 
 
-def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8):
+def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
+        backend: str = "fused"):
     cfg = SketchHeadConfig(n_rows=64, n_buckets=16, k=2, proj_dim=64,
                            bandwidth=4.0)
     key = jax.random.PRNGKey(0)
@@ -70,14 +71,16 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8):
 
     dense = jax.jit(lambda h: h @ table.T)
     sketch_jit = jax.jit(
-        lambda h: apply_head(head, h, cfg, use_pallas=False, fused=True))
+        lambda h: apply_head(head, h, cfg, backend=backend,
+                             kernel_backend="ref"))
     # Dispatch-level comparison: what fusion actually removes is the kernel
     # boundary — two launches with the (B, L) idx tensor materialized
     # between them vs one launch.  (Under a single outer jit the two ref
     # paths compile to the same graph, so they are *not* compared there.)
-    two_kernel = lambda h: apply_head(head, h, cfg, use_pallas=False,
-                                      fused=False)
-    fused = lambda h: apply_head(head, h, cfg, use_pallas=False, fused=True)
+    two_kernel = lambda h: apply_head(head, h, cfg, backend="two_kernel",
+                                      kernel_backend="ref")
+    fused = lambda h: apply_head(head, h, cfg, backend="fused",
+                                 kernel_backend="ref")
 
     us_dense = _time(dense, hidden)
     us_sketch, us_two, us_fused = _time_group(
@@ -101,6 +104,7 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8):
 
     result = {
         "d_model": d_model, "vocab": vocab, "batch": batch,
+        "head": {"kind": "sketch", "backend": backend},
         "head_config": {"n_rows": cfg.n_rows, "n_buckets": cfg.n_buckets,
                         "k": cfg.k, "proj_dim": cfg.proj_dim,
                         "bandwidth": cfg.bandwidth},

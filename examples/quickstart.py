@@ -1,7 +1,10 @@
-"""Quickstart: weighted RACE sketch in 40 lines.
+"""Quickstart: weighted RACE sketch in 40 lines, via the ``repro.api``
+facade.
 
 Builds a sketch over weighted points, queries it, and compares against the
 exact weighted kernel density — Algorithm 1 + 2 of the paper end to end.
+(The same facade serves models: ``LM.from_config(...).generate(...)`` — see
+examples/serve_sketch_head.py and DESIGN.md §8.)
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +12,7 @@ exact weighted kernel density — Algorithm 1 + 2 of the paper end to end.
 import jax
 import jax.numpy as jnp
 
-from repro.core import RepresenterSketch, SketchConfig
+from repro.api import RepresenterSketch, SketchConfig
 
 
 def main():

@@ -1,12 +1,15 @@
-"""Serving with the Representer-Sketch LM head (the paper's technique as a
-first-class serving feature — DESIGN.md §4): the full distill → freeze →
-serve flow.
+"""Serving with the Representer-Sketch LM head through the ``repro.api``
+facade (the paper's technique as a first-class serving feature — DESIGN.md
+§4/§8): the full distill → freeze → serve flow.
 
 1. distill the dense logit head of a small LM into a kernel model,
-2. freeze it into per-class RACE arrays and save the deployable .npz,
-3. serve: generate tokens with repro.launch.serve.generate decoding through
-   the fused Pallas sketch head (hash + gather + mean instead of the
-   d_model×V matmul), and report agreement + the analytic cost deltas.
+2. freeze it into a ``SketchHead`` (per-class RACE arrays + decode backend)
+   and save the deployable .npz — kind and backend round-trip with it,
+3. serve: ``LM.generate`` decoding through the fused Pallas sketch head
+   (hash + gather + mean instead of the d_model×V matmul), and report
+   agreement + the analytic cost deltas,
+4. engine: ``LM.serve`` runs a staggered request stream through the
+   continuous-batching engine with the reloaded head.
 
   PYTHONPATH=src python examples/serve_sketch_head.py
 """
@@ -18,12 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import LM, SketchHead, SketchHeadConfig, load_head
 from repro.configs import get_config
 from repro.core.distill import DistillConfig
-from repro.core.sketch_lm_head import (apply_head, distill_head, freeze_head,
-                                       head_costs, save_head)
-from repro.launch.serve import generate
-from repro.models.config import SketchHeadConfig
+from repro.core.sketch_lm_head import distill_head, freeze_head, head_costs
 from repro.models.model import init_model
 
 HEAD_PATH = Path(__file__).resolve().parents[1] / "results" / "sketch_head" \
@@ -48,17 +49,19 @@ def main():
         distill_cfg=DistillConfig(n_steps=2000, lr=5e-3))
     print(f"   distill MSE: {metrics['final_mse']:.5f}")
 
-    print("2. freezing → (L, R, V) sketch, saving deployable head …")
-    head = freeze_head(jax.random.PRNGKey(4), kparams, head_cfg)
-    save_head(HEAD_PATH, head, head_cfg)
-    print(f"   saved {HEAD_PATH}")
+    print("2. freezing → SketchHead(backend='fused'), saving deployable head …")
+    head = SketchHead(
+        cfg=head_cfg, backend="fused",
+        params=freeze_head(jax.random.PRNGKey(4), kparams, head_cfg))
+    head.save(HEAD_PATH)
+    print(f"   saved {HEAD_PATH} (kind + backend round-trip with the file)")
     print("   (the head is tied to this example's 512-vocab variant; "
           "repro.launch.serve --sketch-head --head-path validates the "
           "arch/head shapes and distills a fresh head when none is given)")
 
     test_h = jax.random.normal(jax.random.PRNGKey(5), (256, cfg.d_model))
     dense_logits = test_h @ np.asarray(table, np.float32).T
-    sketch_logits = apply_head(head, test_h, head_cfg, fused=True)
+    sketch_logits = head.apply(head.params, test_h)
 
     top5_dense = np.argsort(-dense_logits, 1)[:, :5]
     top1_sketch = np.asarray(jnp.argmax(sketch_logits, 1))
@@ -66,26 +69,25 @@ def main():
                        for i, t in enumerate(top1_sketch)])
     print(f"   sketch-head top-1 ∈ dense top-5: {in_top5:.2%}")
 
-    print("3. serving: decode loop through the fused sketch head …")
+    print("3. serving: LM.generate through the fused sketch head …")
+    lm = LM(params, cfg, head)
     prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 12), 0,
                                  cfg.vocab_size)
-    out = generate(params, cfg, prompts, gen_len=8,
-                   sketch_head_params=head, sketch_cfg=head_cfg, fused=True)
+    out = lm.generate(prompts, 8)
     print(f"   generated {out.shape} tokens; sample:",
           np.asarray(out[0, -8:]))
 
-    print("4. engine: continuous-batching serve of a staggered request "
-          "stream through the saved head …")
-    from repro.core.sketch_lm_head import load_head
-    from repro.launch.engine import make_engine
-
-    loaded, loaded_cfg = load_head(HEAD_PATH)
-    engine = make_engine(params, cfg, n_slots=2, max_seq=20,
-                         sketch_head=loaded, sketch_cfg=loaded_cfg)
+    print("4. engine: LM.serve of a staggered request stream through the "
+          "reloaded head …")
+    loaded = load_head(HEAD_PATH)   # dispatches on the stored kind/backend
+    print(f"   loaded {loaded.describe()} head "
+          f"(L={loaded.cfg.n_rows}, R={loaded.cfg.n_buckets})")
     rng = np.random.default_rng(7)
-    for i in range(5):
-        engine.submit(rng.integers(0, cfg.vocab_size, 12, dtype=np.int32),
-                      max_new_tokens=int(rng.integers(2, 9)), arrival=2 * i)
+    requests = [(rng.integers(0, cfg.vocab_size, 12, dtype=np.int32),
+                 int(rng.integers(2, 9)), 2 * i) for i in range(5)]
+    engine = lm.with_head(loaded).engine(n_slots=2, max_seq=20)
+    for prompt, max_new, arrival in requests:
+        engine.submit(prompt, max_new, arrival=arrival)
     finished = engine.run()
     print(f"   {len(finished)} requests retired over 2 recycled slots, "
           f"slot utilization {engine.slot_utilization:.2f}; "

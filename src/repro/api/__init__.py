@@ -1,0 +1,43 @@
+"""``repro.api`` — the one public serving surface (DESIGN.md §8).
+
+Everything a user needs to run the paper's pipeline or serve a model sits
+behind this facade:
+
+* **Heads** — ``DenseHead`` / ``SketchHead`` specs with a ``backend``
+  (``fused`` / ``two_kernel`` / ``ref``) replacing the old ``fused: bool``
+  plumbing; ``register_head`` adds new kinds; ``load_head`` round-trips
+  kind + backend from disk.
+* **Sampling** — ``Sampler`` (greedy / temperature / top-k / top-p, seeded
+  key chain) replacing the ``greedy: bool`` + ``seed`` pair.
+* **Serving** — ``LM.from_config(...).generate(...)`` / ``.serve(requests)``
+  routing to the static batch path or the continuous-batching engine.
+* **Kernels** — ``kernel_backends`` (the registry): per-call ``backend=`` or
+  global ``REPRO_KERNEL_BACKEND`` dispatch between pallas and ref.
+* **Paper core** — the RACE sketch objects, re-exported from ``repro.core``.
+"""
+
+from repro.api.heads import (HEAD_KINDS, SKETCH_BACKENDS, DenseHead,
+                             LogitHead, SketchHead, get_head_class, load_head,
+                             register_head)
+from repro.api.lm import LM
+from repro.api.sampler import Sampler
+from repro.core import RepresenterSketch, SketchConfig
+from repro.kernels import registry as kernel_backends
+from repro.models.config import SketchHeadConfig
+
+__all__ = [
+    "LM",
+    "Sampler",
+    "LogitHead",
+    "DenseHead",
+    "SketchHead",
+    "SketchHeadConfig",
+    "HEAD_KINDS",
+    "SKETCH_BACKENDS",
+    "register_head",
+    "get_head_class",
+    "load_head",
+    "kernel_backends",
+    "RepresenterSketch",
+    "SketchConfig",
+]

@@ -1,0 +1,168 @@
+"""First-class logit heads: the ``LogitHead`` registry (DESIGN.md §8).
+
+The paper's pitch is that a Representer Sketch is a *drop-in replacement*
+for the dense inference path.  This module makes the swap an object, not a
+flag: a ``LogitHead`` is a hashable spec of how decode-time logits are
+produced — its *kind* (``dense`` / ``sketch``), its kernel *backend*
+(``fused`` / ``two_kernel`` / ``ref``), and, for heads with state, the
+frozen arrays.  Head specs key the jitted-step memo cache
+(``launch.steps.jitted_serve_fns``); the arrays ride along as a runtime
+argument so two heads that compile identically share one executable.
+
+Adding a third head kind is one ``@register_head`` class — no call-site
+edits in launch/, examples/, or benchmarks/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Type
+
+import jax.numpy as jnp
+
+from repro.core.sketch_lm_head import HEAD_BACKENDS as SKETCH_BACKENDS
+from repro.models.config import SketchHeadConfig
+
+HEAD_KINDS: Dict[str, Type["LogitHead"]] = {}
+
+
+def register_head(kind: str):
+    """Class decorator: register a LogitHead subclass under ``kind``."""
+
+    def deco(cls):
+        HEAD_KINDS[kind] = cls
+        return cls
+
+    return deco
+
+
+def get_head_class(kind: str) -> Type["LogitHead"]:
+    if kind not in HEAD_KINDS:
+        raise KeyError(
+            f"unknown head kind {kind!r}; registered: {sorted(HEAD_KINDS)}")
+    return HEAD_KINDS[kind]
+
+
+@dataclasses.dataclass(frozen=True)
+class LogitHead:
+    """Base spec: hashable, equality on static config only.
+
+    ``needs_hidden`` tells ``serve_step`` whether the backbone should return
+    the final hidden (head produces logits) or run its own dense unembed.
+    ``params`` (on stateful heads) is excluded from hash/eq so the spec can
+    key jit memo caches; always pass ``head.params`` as a runtime argument.
+    """
+
+    kind = "abstract"
+    needs_hidden = False
+    params = None  # stateless by default
+
+    def apply(self, params: Any, hidden: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def without_params(self) -> "LogitHead":
+        """The bare spec — what jit memo caches should key on."""
+        return self
+
+    def with_params(self, params: Any) -> "LogitHead":
+        if params is not None:
+            raise ValueError(f"{type(self).__name__} is stateless")
+        return self
+
+    def describe(self) -> str:
+        return self.kind
+
+
+@register_head("dense")
+@dataclasses.dataclass(frozen=True)
+class DenseHead(LogitHead):
+    """The backbone's own ``h · Wᵀ`` unembed — logits come straight out of
+    ``decode_step``; this head carries no state and applies nothing."""
+
+    kind = "dense"
+    needs_hidden = False
+
+    def apply(self, params, hidden):
+        raise RuntimeError(
+            "DenseHead logits come from the backbone's unembed; "
+            "serve_step should not call apply()")
+
+
+@register_head("sketch")
+@dataclasses.dataclass(frozen=True)
+class SketchHead(LogitHead):
+    """The Representer-Sketch head: frozen (proj, w, b, array) params plus a
+    decode backend.
+
+    ``backend``:
+      * ``"fused"``      — one pallas_call: transform → hash → gather
+                           (repro.kernels.fused_decode; the serving default),
+      * ``"two_kernel"`` — lsh_hash → sketch_head composition (the unfused
+                           baseline, (B, L) indices round-trip through HBM),
+      * ``"ref"``        — the pure-jnp oracle composition (CPU/CI parity).
+
+    The kernel-level pallas/ref choice *within* ``fused``/``two_kernel`` is
+    the kernel registry's (``REPRO_KERNEL_BACKEND``, DESIGN.md §8).
+    """
+
+    kind = "sketch"
+    needs_hidden = True
+
+    cfg: SketchHeadConfig = dataclasses.field(default_factory=SketchHeadConfig)
+    backend: str = "fused"
+    params: Optional[dict] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        if self.backend not in SKETCH_BACKENDS:
+            raise ValueError(
+                f"unknown sketch-head backend {self.backend!r}; "
+                f"expected one of {SKETCH_BACKENDS}")
+
+    def apply(self, params: dict, hidden: jnp.ndarray) -> jnp.ndarray:
+        from repro.core.sketch_lm_head import apply_head
+        if params is None:
+            raise ValueError(
+                "SketchHead.apply needs the frozen head params; build them "
+                "with freeze_head/distill_head or load them with "
+                "SketchHead.load")
+        return apply_head(params, hidden, self.cfg, backend=self.backend)
+
+    def without_params(self) -> "SketchHead":
+        if self.params is None:
+            return self
+        return dataclasses.replace(self, params=None)
+
+    def with_params(self, params: dict) -> "SketchHead":
+        return dataclasses.replace(self, params=params)
+
+    def with_backend(self, backend: str) -> "SketchHead":
+        return dataclasses.replace(self, backend=backend)
+
+    def describe(self) -> str:
+        return f"sketch/{self.backend}"
+
+    # -- persistence (round-trips kind + backend, DESIGN.md §8) ------------
+
+    def save(self, path) -> None:
+        from repro.core.sketch_lm_head import save_head
+        if self.params is None:
+            raise ValueError("cannot save a SketchHead without params")
+        save_head(path, self.params, self.cfg,
+                  kind=self.kind, backend=self.backend)
+
+    @classmethod
+    def load(cls, path) -> "SketchHead":
+        from repro.core.sketch_lm_head import load_head_full
+        params, cfg, meta = load_head_full(path)
+        return cls(cfg=cfg, backend=meta["backend"], params=params)
+
+
+def load_head(path) -> LogitHead:
+    """Load any saved head; dispatches on the stored ``kind`` metadata."""
+    from repro.core.sketch_lm_head import load_head_meta
+    kind = load_head_meta(path)["kind"]
+    cls = get_head_class(kind)
+    if not hasattr(cls, "load"):
+        raise TypeError(f"head kind {kind!r} does not support load()")
+    return cls.load(path)

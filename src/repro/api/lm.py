@@ -1,0 +1,114 @@
+"""The ``LM`` facade: one request-level entry point for the serving surface.
+
+``LM`` binds (params, config, head) once; ``generate()`` routes to the
+static batch path and ``serve()`` to the continuous-batching engine, both
+through the same ``LogitHead`` / ``Sampler`` objects — "sketch in, sketch
+out": swapping the dense head for a Representer Sketch (or a new registered
+head kind, or a different kernel backend) is a constructor argument, not a
+flag threaded through eight call sites.
+
+    from repro.api import LM, Sampler, SketchHead
+
+    lm = LM.from_config("rwkv6-1.6b", smoke=True)
+    tokens = lm.generate(prompts, max_new_tokens=16)
+
+    lm = lm.with_head(SketchHead.load("head.npz"))
+    finished = lm.serve([(prompt, 16) for prompt in prompts], n_slots=4,
+                        sampler=Sampler(temperature=0.8, top_p=0.9, seed=1))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.heads import DenseHead, LogitHead
+from repro.api.sampler import Sampler
+from repro.models.config import ModelConfig
+
+#: A serve request: (prompt, max_new_tokens) or (prompt, max_new_tokens, arrival).
+RequestLike = Union[Tuple[Any, int], Tuple[Any, int, int]]
+
+
+@dataclasses.dataclass
+class LM:
+    """A servable model: backbone params + config + a first-class head."""
+
+    params: Any
+    cfg: ModelConfig
+    head: LogitHead = dataclasses.field(default_factory=DenseHead)
+
+    @classmethod
+    def from_config(cls, arch: str, *, smoke: bool = False,
+                    head: Optional[LogitHead] = None, params: Any = None,
+                    seed: int = 0) -> "LM":
+        """Build an LM from a registered arch config (random init unless
+        ``params`` is given)."""
+        from repro.configs import get_config
+        from repro.models.model import init_model
+
+        cfg = get_config(arch, smoke=smoke)
+        if params is None:
+            params = init_model(jax.random.PRNGKey(seed), cfg)
+        return cls(params, cfg, head or DenseHead())
+
+    def with_head(self, head: LogitHead) -> "LM":
+        """The same model serving through a different head."""
+        return dataclasses.replace(self, head=head)
+
+    # -- static batch --------------------------------------------------------
+
+    def generate(self, prompts, max_new_tokens: int, *,
+                 sampler: Optional[Sampler] = None,
+                 eos_id: Optional[int] = None, pad_id: int = 0,
+                 encoder_states=None) -> jnp.ndarray:
+        """Bulk prefill + decode one (B, P) batch → (B, P + max_new_tokens).
+
+        With ``eos_id``, sequences that emit it stop: later positions hold
+        ``pad_id`` and the decode loop exits once every row is done (parity
+        with the engine's per-request retirement).
+        """
+        from repro.launch.serve import generate
+
+        prompts = jnp.asarray(prompts, jnp.int32)
+        if prompts.ndim == 1:
+            prompts = prompts[None]
+        return generate(self.params, self.cfg, prompts, max_new_tokens,
+                        encoder_states=encoder_states, head=self.head,
+                        sampler=sampler, eos_id=eos_id, pad_id=pad_id)
+
+    # -- continuous batching -------------------------------------------------
+
+    def engine(self, n_slots: int, max_seq: int, *,
+               sampler: Optional[Sampler] = None,
+               eos_id: Optional[int] = None):
+        """A fresh continuous-batching ServeEngine over this (model, head)."""
+        from repro.launch.engine import make_engine
+
+        return make_engine(self.params, self.cfg, n_slots=n_slots,
+                           max_seq=max_seq, head=self.head,
+                           sampler=sampler, eos_id=eos_id)
+
+    def serve(self, requests: Iterable[RequestLike], *, n_slots: int = 4,
+              max_seq: Optional[int] = None,
+              sampler: Optional[Sampler] = None,
+              eos_id: Optional[int] = None) -> Dict[int, List[int]]:
+        """Serve a request stream through the engine; returns, per request id
+        (submission order), the generated tokens (prompt excluded)."""
+        reqs: List[Tuple[np.ndarray, int, int]] = []
+        for r in requests:
+            prompt, max_new = np.asarray(r[0], np.int32).reshape(-1), int(r[1])
+            arrival = int(r[2]) if len(r) > 2 else 0
+            reqs.append((prompt, max_new, arrival))
+        if not reqs:
+            return {}
+        if max_seq is None:
+            max_seq = max(len(p) + g for p, g, _ in reqs)
+        engine = self.engine(n_slots, max_seq, sampler=sampler, eos_id=eos_id)
+        for prompt, max_new, arrival in reqs:
+            engine.submit(prompt, max_new, arrival=arrival)
+        return engine.run()

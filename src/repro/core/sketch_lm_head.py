@@ -21,8 +21,9 @@ repro.kernels.lsh_hash (projection+hash) and repro.kernels.sketch_head
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from pathlib import Path
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,43 +78,105 @@ def freeze_head(key: jax.Array, kernel_params: dict,
     }
 
 
+#: Decode backends of the sketched head (see repro.api.heads.SketchHead).
+HEAD_BACKENDS = ("fused", "two_kernel", "ref")
+
+
 def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
-               *, use_pallas: bool = True, fused: bool = False) -> jnp.ndarray:
+               *, backend: Optional[str] = None,
+               kernel_backend: Optional[str] = None,
+               use_pallas=None, fused=None) -> jnp.ndarray:
     """Sketched logits for (B, d) final hiddens → (B, V).
 
-    ``fused=True`` runs the whole head in one pallas_call (the serving hot
-    path — no HBM round trip on the (B, L) index tensor); ``fused=False``
-    keeps the two-kernel composition used as the verification baseline.
+    ``backend`` selects the decode path:
+
+    * ``"fused"``      — the whole head in one pallas_call (the serving hot
+      path — no HBM round trip on the (B, L) index tensor; default),
+    * ``"two_kernel"`` — the lsh_hash → sketch_head composition kept as the
+      unfused baseline,
+    * ``"ref"``        — the pure-jnp oracle composition (CPU/CI parity).
+
+    ``kernel_backend`` optionally forces the kernel registry's pallas/ref
+    choice for this call (otherwise ``REPRO_KERNEL_BACKEND`` / the registry
+    default applies).  ``use_pallas=`` / ``fused=`` are deprecated aliases.
     """
-    if fused:
+    if fused is not None or use_pallas is not None:
+        warnings.warn(
+            "apply_head(fused=..., use_pallas=...) is deprecated; pass "
+            "backend='fused'|'two_kernel'|'ref' (and kernel_backend= for "
+            "the pallas/ref choice) instead", DeprecationWarning,
+            stacklevel=2)
+        if backend is None:
+            backend = "fused" if fused else "two_kernel"
+        if kernel_backend is None and use_pallas is not None:
+            kernel_backend = "pallas" if use_pallas else "ref"
+    if backend is None:
+        backend = "fused"
+    if backend == "ref":
+        backend, kernel_backend = "two_kernel", "ref"
+    if backend == "fused":
         return fused_decode_logits(
             hidden.astype(jnp.float32), head["proj"], head["w"], head["b"],
             head["array"], bandwidth=cfg.bandwidth, n_buckets=cfg.n_buckets,
-            use_pallas=use_pallas)
+            backend=kernel_backend)
+    if backend != "two_kernel":
+        raise ValueError(f"unknown sketch-head backend {backend!r}; "
+                         f"expected one of {HEAD_BACKENDS}")
     q = hidden.astype(jnp.float32) @ head["proj"]
     idx = lsh_hash(q, head["w"], head["b"], bandwidth=cfg.bandwidth,
-                   n_buckets=cfg.n_buckets, use_pallas=use_pallas)
-    return sketch_head_logits(head["array"], idx, use_pallas=use_pallas)
+                   n_buckets=cfg.n_buckets, backend=kernel_backend)
+    return sketch_head_logits(head["array"], idx, backend=kernel_backend)
 
 
-def save_head(path, head: dict, cfg: SketchHeadConfig) -> None:
-    """Persist a frozen head (+ its static config) as an .npz archive."""
+def save_head(path, head: dict, cfg: SketchHeadConfig, *,
+              kind: str = "sketch", backend: str = "fused") -> None:
+    """Persist a frozen head (+ its static config) as an .npz archive.
+
+    ``kind`` / ``backend`` are the head-registry identity (repro.api.heads);
+    they round-trip through :func:`load_head_meta` so a loaded head serves
+    on the same decode path it was saved with.
+    """
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     np.savez(path, **{k: np.asarray(v) for k, v in head.items()},
+             meta_kind=np.asarray(kind), meta_backend=np.asarray(backend),
              **{f"cfg_{f.name}": getattr(cfg, f.name)
                 for f in dataclasses.fields(cfg)})
 
 
+def load_head_full(path) -> Tuple[dict, SketchHeadConfig, Dict[str, str]]:
+    """One archive read → (frozen params, config, registry metadata).
+
+    Archives written before the metadata existed load as the historical
+    default, the fused sketch head.
+    """
+    with np.load(Path(path)) as data:
+        head = {k: jnp.asarray(data[k]) for k in ("proj", "w", "b", "array")}
+        fields = {f.name: f.type
+                  for f in dataclasses.fields(SketchHeadConfig)}
+        cfg = SketchHeadConfig(**{
+            name: (float if "float" in str(typ) else int)(data[f"cfg_{name}"])
+            for name, typ in fields.items()})
+        meta = {"kind": (str(data["meta_kind"])
+                         if "meta_kind" in data else "sketch"),
+                "backend": (str(data["meta_backend"])
+                            if "meta_backend" in data else "fused")}
+    return head, cfg, meta
+
+
 def load_head(path) -> Tuple[dict, SketchHeadConfig]:
     """Load a frozen head saved by :func:`save_head`."""
-    data = np.load(Path(path))
-    head = {k: jnp.asarray(data[k]) for k in ("proj", "w", "b", "array")}
-    fields = {f.name: f.type for f in dataclasses.fields(SketchHeadConfig)}
-    cfg = SketchHeadConfig(**{
-        name: (float if "float" in str(typ) else int)(data[f"cfg_{name}"])
-        for name, typ in fields.items()})
+    head, cfg, _ = load_head_full(path)
     return head, cfg
+
+
+def load_head_meta(path) -> Dict[str, str]:
+    """Head-registry metadata of a saved head: ``{"kind", "backend"}``."""
+    with np.load(Path(path)) as data:
+        return {"kind": (str(data["meta_kind"])
+                         if "meta_kind" in data else "sketch"),
+                "backend": (str(data["meta_backend"])
+                            if "meta_backend" in data else "fused")}
 
 
 def head_costs(cfg: SketchHeadConfig, d_model: int, vocab: int) -> dict:

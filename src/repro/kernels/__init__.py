@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Every op package registers its pallas + ref implementations in
+# ``repro.kernels.registry``; dispatch is per-call (``backend=``) or global
+# (``REPRO_KERNEL_BACKEND`` / ``registry.set_default_backend``) — DESIGN.md §8.
+from repro.kernels import registry  # noqa: F401

@@ -1,4 +1,4 @@
-"""Jit'd public wrapper for the flash-attention prefill kernel."""
+"""Public wrapper for the flash-attention prefill kernel (registry-dispatched)."""
 
 from __future__ import annotations
 
@@ -8,12 +8,25 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.flash_attn.kernel import flash_attention_pallas
 from repro.kernels.flash_attn.ref import flash_attention_ref
 
 
-@partial(jax.jit, static_argnames=("window", "softcap", "block_q", "block_k",
-                                   "use_pallas"))
+@registry.register("flash_attn", "pallas")
+@partial(jax.jit, static_argnames=("window", "softcap", "block_q", "block_k"))
+def _pallas(q, k, v, *, window, softcap, block_q, block_k):
+    return flash_attention_pallas(q, k, v, window=window, softcap=softcap,
+                                  block_q=block_q, block_k=block_k)
+
+
+@registry.register("flash_attn", "ref")
+@partial(jax.jit, static_argnames=("window", "softcap", "block_q", "block_k"))
+def _ref(q, k, v, *, window, softcap, block_q, block_k):
+    del block_q, block_k  # tiling is a pallas concern
+    return flash_attention_ref(q, k, v, window=window, softcap=softcap)
+
+
 def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -23,10 +36,10 @@ def flash_attention(
     softcap: Optional[float] = None,
     block_q: int = 128,
     block_k: int = 128,
-    use_pallas: bool = True,
+    use_pallas: Optional[bool] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """Fused causal (+window, +softcap) attention: (B,S,H,dh)³ → (B,S,H,dh)."""
-    if use_pallas:
-        return flash_attention_pallas(q, k, v, window=window, softcap=softcap,
-                                      block_q=block_q, block_k=block_k)
-    return flash_attention_ref(q, k, v, window=window, softcap=softcap)
+    impl = registry.resolve("flash_attn", backend, use_pallas)
+    return impl(q, k, v, window=window, softcap=softcap,
+                block_q=block_q, block_k=block_k)

@@ -1,18 +1,37 @@
-"""Jit'd public wrapper for the fused sketched-decode kernel."""
+"""Public wrapper for the fused sketched-decode kernel (registry-dispatched)."""
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.fused_decode.kernel import fused_decode_pallas
 from repro.kernels.fused_decode.ref import fused_decode_ref
 
 
+@registry.register("fused_decode", "pallas")
 @partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "block_b",
-                                   "block_v", "use_pallas"))
+                                   "block_v"))
+def _pallas(hidden, proj, w, b, sketch, *, bandwidth, n_buckets, block_b,
+            block_v):
+    return fused_decode_pallas(hidden, proj, w, b, sketch,
+                               bandwidth=bandwidth, n_buckets=n_buckets,
+                               block_b=block_b, block_v=block_v)
+
+
+@registry.register("fused_decode", "ref")
+@partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "block_b",
+                                   "block_v"))
+def _ref(hidden, proj, w, b, sketch, *, bandwidth, n_buckets, block_b,
+         block_v):
+    del block_b, block_v  # tiling is a pallas concern
+    return fused_decode_ref(hidden, proj, w, b, sketch, bandwidth, n_buckets)
+
+
 def fused_decode_logits(
     hidden: jnp.ndarray,     # (B, d_model) — final backbone hiddens
     proj: jnp.ndarray,       # (d_model, d') asymmetric transform A
@@ -24,11 +43,10 @@ def fused_decode_logits(
     n_buckets: int,
     block_b: int = 8,
     block_v: int = 2048,
-    use_pallas: bool = True,
+    use_pallas: Optional[bool] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """Sketched (B, V) logits in one kernel: transform → hash → gather."""
-    if use_pallas:
-        return fused_decode_pallas(
-            hidden, proj, w, b, sketch, bandwidth=bandwidth,
-            n_buckets=n_buckets, block_b=block_b, block_v=block_v)
-    return fused_decode_ref(hidden, proj, w, b, sketch, bandwidth, n_buckets)
+    impl = registry.resolve("fused_decode", backend, use_pallas)
+    return impl(hidden, proj, w, b, sketch, bandwidth=bandwidth,
+                n_buckets=n_buckets, block_b=block_b, block_v=block_v)

@@ -1,17 +1,32 @@
-"""Jit'd public wrapper for the fused LSH hash kernel."""
+"""Public wrapper for the fused LSH hash kernel (registry-dispatched)."""
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.lsh_hash.kernel import lsh_hash_pallas
 from repro.kernels.lsh_hash.ref import lsh_hash_ref
 
 
-@partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "block_b", "use_pallas"))
+@registry.register("lsh_hash", "pallas")
+@partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "block_b"))
+def _pallas(x, w, b, *, bandwidth, n_buckets, block_b):
+    return lsh_hash_pallas(x, w, b, bandwidth=bandwidth, n_buckets=n_buckets,
+                           block_b=block_b)
+
+
+@registry.register("lsh_hash", "ref")
+@partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "block_b"))
+def _ref(x, w, b, *, bandwidth, n_buckets, block_b):
+    del block_b  # tiling is a pallas concern
+    return lsh_hash_ref(x, w, b, bandwidth, n_buckets)
+
+
 def lsh_hash(
     x: jnp.ndarray,
     w: jnp.ndarray,
@@ -20,11 +35,10 @@ def lsh_hash(
     bandwidth: float,
     n_buckets: int,
     block_b: int = 128,
-    use_pallas: bool = True,
+    use_pallas: Optional[bool] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """Bucket indices (B, L) for a batch of queries against an L×K LSH bank."""
-    if use_pallas:
-        return lsh_hash_pallas(
-            x, w, b, bandwidth=bandwidth, n_buckets=n_buckets, block_b=block_b
-        )
-    return lsh_hash_ref(x, w, b, bandwidth, n_buckets)
+    impl = registry.resolve("lsh_hash", backend, use_pallas)
+    return impl(x, w, b, bandwidth=bandwidth, n_buckets=n_buckets,
+                block_b=block_b)

@@ -1,26 +1,40 @@
-"""Jit'd public wrapper for the RACE query kernel."""
+"""Public wrapper for the RACE query kernel (registry-dispatched)."""
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.race_query.kernel import race_query_pallas
 from repro.kernels.race_query.ref import race_query_ref
 
 
-@partial(jax.jit, static_argnames=("n_groups", "block_b", "use_pallas"))
+@registry.register("race_query", "pallas")
+@partial(jax.jit, static_argnames=("n_groups", "block_b"))
+def _pallas(sketch, idx, *, n_groups, block_b):
+    return race_query_pallas(sketch, idx, n_groups=n_groups, block_b=block_b)
+
+
+@registry.register("race_query", "ref")
+@partial(jax.jit, static_argnames=("n_groups", "block_b"))
+def _ref(sketch, idx, *, n_groups, block_b):
+    del block_b  # tiling is a pallas concern
+    return race_query_ref(sketch, idx, n_groups)
+
+
 def race_query(
     sketch: jnp.ndarray,
     idx: jnp.ndarray,
     *,
     n_groups: int,
     block_b: int = 128,
-    use_pallas: bool = True,
+    use_pallas: Optional[bool] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """Median-of-means sketch estimate (B, C) from bucket indices (B, L)."""
-    if use_pallas:
-        return race_query_pallas(sketch, idx, n_groups=n_groups, block_b=block_b)
-    return race_query_ref(sketch, idx, n_groups)
+    impl = registry.resolve("race_query", backend, use_pallas)
+    return impl(sketch, idx, n_groups=n_groups, block_b=block_b)

@@ -1,29 +1,42 @@
-"""Jit'd public wrapper for the sketch-construction kernel."""
+"""Public wrapper for the sketch-construction kernel (registry-dispatched)."""
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.race_update.kernel import race_update_pallas
 from repro.kernels.race_update.ref import race_update_ref
 
 
-@partial(jax.jit, static_argnames=("block_m", "use_pallas"))
+@registry.register("race_update", "pallas")
+@partial(jax.jit, static_argnames=("block_m",))
+def _pallas(sketch, idx, alphas, *, block_m):
+    delta = race_update_pallas(idx, alphas, n_buckets=sketch.shape[-1],
+                               block_m=block_m)
+    return sketch + delta
+
+
+@registry.register("race_update", "ref")
+@partial(jax.jit, static_argnames=("block_m",))
+def _ref(sketch, idx, alphas, *, block_m):
+    del block_m  # tiling is a pallas concern
+    return race_update_ref(sketch, idx, alphas)
+
+
 def race_update(
     sketch: jnp.ndarray,   # (C, L, R)
     idx: jnp.ndarray,      # (M, L)
     alphas: jnp.ndarray,   # (M, C)
     *,
     block_m: int = 256,
-    use_pallas: bool = True,
+    use_pallas: Optional[bool] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """Accumulate weighted points into the sketch; returns the new sketch."""
-    if use_pallas:
-        delta = race_update_pallas(
-            idx, alphas, n_buckets=sketch.shape[-1], block_m=block_m
-        )
-        return sketch + delta
-    return race_update_ref(sketch, idx, alphas)
+    impl = registry.resolve("race_update", backend, use_pallas)
+    return impl(sketch, idx, alphas, block_m=block_m)

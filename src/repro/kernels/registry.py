@@ -1,0 +1,94 @@
+"""Kernel backend registry: one dispatch point for every op package.
+
+Each op package (``fused_decode``, ``lsh_hash``, ``sketch_head``,
+``race_query``, ``race_update``, ``flash_attn``) registers its
+implementations here under a backend name:
+
+* ``"pallas"`` — the ``pl.pallas_call`` kernel (interpret mode off-TPU), and
+* ``"ref"``    — the pure-jnp oracle from the package's ``ref.py``.
+
+Dispatch is resolved per call (``backend="ref"`` on any op wrapper) or
+globally: ``set_default_backend("ref")`` in-process, or the
+``REPRO_KERNEL_BACKEND`` environment variable — which makes CPU/CI runs and
+parity sweeps a config switch instead of new code (DESIGN.md §8).
+
+Resolution order per call:
+
+1. explicit ``backend=`` argument,
+2. legacy ``use_pallas=`` argument (True → ``pallas``, False → ``ref``),
+3. ``set_default_backend(...)`` override,
+4. ``REPRO_KERNEL_BACKEND`` environment variable,
+5. the registry default, ``"pallas"``.
+
+Note that op wrappers are jitted with the backend as a static argument; the
+environment variable is read when a call first traces, so flip it before the
+first call (as the CI ref-dispatch job does), not mid-run.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, List, Optional
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+DEFAULT_BACKEND = "pallas"
+
+_IMPLS: Dict[str, Dict[str, Callable]] = {}
+_OVERRIDE: Optional[str] = None
+
+
+def register(op: str, backend: str) -> Callable[[Callable], Callable]:
+    """Decorator: register ``fn`` as the ``backend`` implementation of ``op``."""
+
+    def deco(fn: Callable) -> Callable:
+        _IMPLS.setdefault(op, {})[backend] = fn
+        return fn
+
+    return deco
+
+
+def ops() -> List[str]:
+    """Registered op names (packages that have imported their ops module)."""
+    return sorted(_IMPLS)
+
+
+def backends(op: str) -> List[str]:
+    """Backend names registered for ``op``."""
+    if op not in _IMPLS:
+        raise KeyError(f"unknown kernel op {op!r}; registered: {ops()}")
+    return sorted(_IMPLS[op])
+
+
+def set_default_backend(backend: Optional[str]) -> None:
+    """Set (or clear, with None) the process-wide backend override.
+
+    Takes precedence over ``REPRO_KERNEL_BACKEND``; only affects calls that
+    have not already traced with another backend.
+    """
+    global _OVERRIDE
+    if backend is not None and backend not in ("pallas", "ref"):
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected 'pallas' or 'ref'")
+    _OVERRIDE = backend
+
+
+def default_backend() -> str:
+    """The backend used when a call does not pick one explicitly."""
+    return _OVERRIDE or os.environ.get(ENV_VAR) or DEFAULT_BACKEND
+
+
+def resolve(op: str, backend: Optional[str] = None,
+            use_pallas: Optional[bool] = None) -> Callable:
+    """Pick the implementation of ``op`` for this call (see module docstring)."""
+    if backend is None and use_pallas is not None:
+        backend = "pallas" if use_pallas else "ref"
+    if backend is None:
+        backend = default_backend()
+    impls = _IMPLS.get(op)
+    if impls is None:
+        raise KeyError(f"unknown kernel op {op!r}; registered: {ops()}")
+    if backend not in impls:
+        raise ValueError(
+            f"kernel op {op!r} has no backend {backend!r}; "
+            f"registered: {sorted(impls)}")
+    return impls[backend]

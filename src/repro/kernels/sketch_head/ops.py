@@ -1,33 +1,46 @@
-"""Jit'd public wrapper for the sketched LM head."""
+"""Public wrapper for the sketched LM head (registry-dispatched)."""
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.lsh_hash.ops import lsh_hash
 from repro.kernels.sketch_head.kernel import sketch_head_pallas
 from repro.kernels.sketch_head.ref import sketch_head_ref
 
 
-@partial(jax.jit, static_argnames=("block_b", "block_v", "use_pallas"))
+@registry.register("sketch_head", "pallas")
+@partial(jax.jit, static_argnames=("block_b", "block_v"))
+def _pallas(sketch, idx, *, block_b, block_v):
+    return sketch_head_pallas(sketch, idx, block_b=block_b, block_v=block_v)
+
+
+@registry.register("sketch_head", "ref")
+@partial(jax.jit, static_argnames=("block_b", "block_v"))
+def _ref(sketch, idx, *, block_b, block_v):
+    del block_b, block_v  # tiling is a pallas concern
+    return sketch_head_ref(sketch, idx)
+
+
 def sketch_head_logits(
     sketch: jnp.ndarray,   # (L, R, V)
     idx: jnp.ndarray,      # (B, L)
     *,
     block_b: int = 8,
     block_v: int = 2048,
-    use_pallas: bool = True,
+    use_pallas: Optional[bool] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """Estimate (B, V) logits from precomputed bucket indices."""
-    if use_pallas:
-        return sketch_head_pallas(sketch, idx, block_b=block_b, block_v=block_v)
-    return sketch_head_ref(sketch, idx)
+    impl = registry.resolve("sketch_head", backend, use_pallas)
+    return impl(sketch, idx, block_b=block_b, block_v=block_v)
 
 
-@partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "use_pallas"))
 def sketch_head_apply(
     hidden: jnp.ndarray,   # (B, d_model) — final hidden state
     proj: jnp.ndarray,     # (d_model, d') asymmetric transform A
@@ -37,11 +50,12 @@ def sketch_head_apply(
     *,
     bandwidth: float,
     n_buckets: int,
-    use_pallas: bool = True,
+    use_pallas: Optional[bool] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """Full sketched head: transform → hash → per-class RACE estimate."""
     q = hidden @ proj
-    idx = lsh_hash(
-        q, w, b, bandwidth=bandwidth, n_buckets=n_buckets, use_pallas=use_pallas
-    )
-    return sketch_head_logits(sketch, idx, use_pallas=use_pallas)
+    idx = lsh_hash(q, w, b, bandwidth=bandwidth, n_buckets=n_buckets,
+                   use_pallas=use_pallas, backend=backend)
+    return sketch_head_logits(sketch, idx, use_pallas=use_pallas,
+                              backend=backend)

@@ -17,12 +17,13 @@ pool of ``n_slots`` decode-cache rows and a FIFO request queue instead:
   ``max_new_tokens``; the slot is ``cache_slot_reset`` to a fresh (bitwise
   zero) row and immediately reusable on the next tick.
 
-The engine is head-agnostic: dense unembed, fused sketch head, and the
-two-kernel sketch path all run through the same ``serve_step``
-(DESIGN.md §7).  Scheduling bookkeeping lives in the pure-Python
-``SlotScheduler`` and the model compute behind the small ``EngineBackend``
-seam, so scheduler invariants are property-testable without JAX in the loop
-(tests/test_engine_properties.py).
+The engine is head-agnostic through the ``repro.api`` objects: any
+registered ``LogitHead`` (dense unembed, fused sketch head, the two-kernel
+path, …) runs through the same ``serve_step``, and token selection is a
+``Sampler`` (DESIGN.md §7/§8).  Scheduling bookkeeping lives in the
+pure-Python ``SlotScheduler`` and the model compute behind the small
+``EngineBackend`` seam, so scheduler invariants are property-testable
+without JAX in the loop (tests/test_engine_properties.py).
 """
 
 from __future__ import annotations
@@ -31,11 +32,13 @@ import bisect
 import dataclasses
 from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import jitted_serve_fns
+from repro.api.heads import DenseHead, LogitHead
+from repro.api.sampler import Sampler
+from repro.launch.steps import (jitted_serve_fns,
+                                resolve_legacy_serving_kwargs)
 from repro.models.config import ModelConfig, SketchHeadConfig
 from repro.models.model import init_decode_cache
 
@@ -96,23 +99,26 @@ class EngineBackend:
     """Model compute behind the engine: prefill / insert / decode / reset.
 
     One instance per (model, head) pair; the jitted callables are memoized
-    per config (``jitted_serve_fns``), so many engines over the same model
-    share compiles.
+    per (config, head spec) — ``jitted_serve_fns`` — so many engines over
+    the same model share compiles.
     """
 
-    def __init__(self, params, cfg: ModelConfig, *, sketch_head=None,
-                 sketch_cfg: Optional[SketchHeadConfig] = None,
-                 fused: bool = True):
+    def __init__(self, params, cfg: ModelConfig, *,
+                 head: Optional[LogitHead] = None, sketch_head=None,
+                 sketch_cfg: Optional[SketchHeadConfig] = None, fused=None):
         if cfg.n_encoder_tokens:
             raise NotImplementedError(
                 "engine serving of encoder-conditioned archs needs "
                 "per-request encoder states; use launch.serve.generate")
+        head, _ = resolve_legacy_serving_kwargs(
+            head, None, sketch_head, sketch_cfg, fused, None, None,
+            "EngineBackend")
         self.params = params
         self.cfg = cfg
-        self.sketch_head = sketch_head
+        self.head = head or DenseHead()
         self.vocab_size = cfg.vocab_size
-        (self._prefill, self._decode,
-         self._insert, self._reset) = jitted_serve_fns(cfg, sketch_cfg, fused)
+        (self._prefill, self._decode, self._insert,
+         self._reset) = jitted_serve_fns(cfg, self.head.without_params())
 
     def init_pool(self, n_slots: int, max_seq: int):
         return init_decode_cache(self.cfg, n_slots, max_seq)
@@ -133,7 +139,7 @@ class EngineBackend:
                active: np.ndarray):
         logits, pool = self._decode(
             self.params, pool, jnp.asarray(tokens[:, None], jnp.int32),
-            jnp.asarray(pos, jnp.int32), sketch_head=self.sketch_head,
+            jnp.asarray(pos, jnp.int32), head_params=self.head.params,
             active=jnp.asarray(active))
         return np.asarray(logits), pool
 
@@ -143,18 +149,22 @@ class ServeEngine:
 
     ``submit()`` requests, then ``run()`` (or ``step()`` tick by tick);
     finished sequences land in ``finished[rid]`` as the generated token list
-    (prompt excluded).  Greedy by default; ``greedy=False`` samples from a
-    key chain seeded once with ``seed`` (reproducible per seed).
+    (prompt excluded).  Token selection is the ``sampler``
+    (repro.api.Sampler; greedy by default, otherwise a key chain seeded once
+    — reproducible per seed).
     """
 
     def __init__(self, backend, n_slots: int, max_seq: int, *,
-                 eos_id: Optional[int] = None, greedy: bool = True,
-                 seed: int = 0):
+                 eos_id: Optional[int] = None,
+                 sampler: Optional[Sampler] = None,
+                 greedy=None, seed=None):
+        _, sampler = resolve_legacy_serving_kwargs(
+            None, sampler, None, None, None, greedy, seed, "ServeEngine")
         self.backend = backend
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
-        self.greedy = greedy
+        self.sampler = sampler or Sampler()
         self.pool = backend.init_pool(n_slots, max_seq)
         self.sched = SlotScheduler(n_slots)
         self.pos = np.zeros(n_slots, np.int32)         # tokens cached per slot
@@ -167,7 +177,7 @@ class ServeEngine:
         self._next_rid = 0
         self._rids: set[int] = set()                   # every rid ever submitted
         self._pending_reset: List[int] = []            # slots retired this tick
-        self._key = jax.random.PRNGKey(seed)
+        self._key = self.sampler.init_key()
         self.stats = {"decode_steps": 0, "active_slot_steps": 0,
                       "admitted": 0, "retired": 0, "prefill_batches": 0}
 
@@ -198,11 +208,8 @@ class ServeEngine:
     # -- scheduling --------------------------------------------------------
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
-        if self.greedy:
-            return np.argmax(logits, axis=-1).astype(np.int32)
-        self._key, sub = jax.random.split(self._key)
-        return np.asarray(jax.random.categorical(sub, jnp.asarray(logits)),
-                          np.int32)
+        self._key, toks = self.sampler.sample(self._key, logits)
+        return np.asarray(toks, np.int32)
 
     def _admit(self) -> None:
         """FIFO head-of-line admission into free slots; equal-length prompts
@@ -300,11 +307,18 @@ class ServeEngine:
 
 
 def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
+                head: Optional[LogitHead] = None,
+                sampler: Optional[Sampler] = None,
+                eos_id: Optional[int] = None,
                 sketch_head=None, sketch_cfg: Optional[SketchHeadConfig] = None,
-                fused: bool = True, eos_id: Optional[int] = None,
-                greedy: bool = True, seed: int = 0) -> ServeEngine:
-    """Engine over a real model: the serving entry point (see launch.serve)."""
-    backend = EngineBackend(params, cfg, sketch_head=sketch_head,
-                            sketch_cfg=sketch_cfg, fused=fused)
+                fused=None, greedy=None, seed=None) -> ServeEngine:
+    """Engine over a real model: the serving entry point (see launch.serve
+    and the ``LM.engine`` / ``LM.serve`` facade).  The pre-redesign
+    ``sketch_head=/sketch_cfg=/fused=/greedy=/seed=`` kwargs keep working
+    behind a DeprecationWarning."""
+    head, sampler = resolve_legacy_serving_kwargs(
+        head, sampler, sketch_head, sketch_cfg, fused, greedy, seed,
+        "make_engine")
+    backend = EngineBackend(params, cfg, head=head)
     return ServeEngine(backend, n_slots, max_seq, eos_id=eos_id,
-                       greedy=greedy, seed=seed)
+                       sampler=sampler)

@@ -1,7 +1,7 @@
-"""Serving launcher: static batch or continuous-batching engine, optional
-sketched head.
+"""Serving launcher: static batch or continuous-batching engine, any head.
 
-Two serving modes over a (smoke-scale on CPU) model:
+Two serving modes over a (smoke-scale on CPU) model, both routed through the
+``repro.api`` facade (``LM`` + ``LogitHead`` + ``Sampler`` — DESIGN.md §8):
 
 * **static** (default) — one synthetic request batch: a single bulk prefill
   ingests every prompt into the decode cache, then the decode loop emits
@@ -14,14 +14,14 @@ Two serving modes over a (smoke-scale on CPU) model:
 
 ``--sketch-head`` swaps the dense logit matmul for the Representer-Sketch
 head (the paper's technique as a first-class serving feature — DESIGN.md §4)
-in either mode: the backbone returns the final hidden and the frozen
-(L, R, V) sketch produces the logits in one fused Pallas call
-(repro.kernels.fused_decode).  The head is distilled offline by
+in either mode; ``--backend fused|two_kernel|ref`` picks its decode path
+(one fused Pallas call by default).  The head is distilled offline by
 examples/serve_sketch_head.py and loaded via ``--head-path``; without a
 saved head a quick in-process distillation builds one.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
-      --batch 4 --prompt-len 32 --gen 16 [--sketch-head] [--no-fused] \
+      --batch 4 --prompt-len 32 --gen 16 [--sketch-head] [--backend fused] \
+      [--temperature 0.8 --top-k 40 --top-p 0.95] \
       [--engine --requests 8 --arrival-every 2]
 """
 
@@ -30,11 +30,14 @@ from __future__ import annotations
 import argparse
 import time
 from pathlib import Path
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.heads import DenseHead, LogitHead, SketchHead
+from repro.api.sampler import Sampler
 from repro.configs import get_config
 from repro.launch.steps import jitted_serve_fns
 from repro.models.config import SketchHeadConfig
@@ -42,23 +45,40 @@ from repro.models.model import init_decode_cache, init_model
 
 
 def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
-             encoder_states=None, sketch_head_params=None,
-             sketch_cfg: SketchHeadConfig | None = None,
-             fused: bool = True, greedy: bool = True, seed: int = 0):
+             encoder_states=None, *, head: Optional[LogitHead] = None,
+             sampler: Optional[Sampler] = None,
+             eos_id: Optional[int] = None, pad_id: int = 0,
+             return_stats: bool = False,
+             sketch_head_params=None,
+             sketch_cfg: Optional[SketchHeadConfig] = None,
+             fused=None, greedy=None, seed=None):
     """Bulk prefill + decode. prompts: (B, P) → tokens (B, P+gen_len).
 
-    Sampling (``greedy=False``) threads a split key chain from a single
-    ``seed``: runs with the same seed reproduce exactly, different seeds
-    give independent streams.  (Rebuilding ``PRNGKey(t)`` from the step
-    index — the old behavior — reused one fixed stream for every run.)
+    ``head`` (a repro.api ``LogitHead``, dense by default) produces the
+    per-step logits; ``sampler`` (greedy by default) picks the tokens,
+    threading a split key chain from its seed so runs with the same sampler
+    reproduce exactly.  With ``eos_id``, a sequence that emits it is
+    finished: its later positions hold ``pad_id``, its cache row freezes
+    (the engine's parked-slot discipline), and the loop exits early once
+    every row is done — finished sequences stop counting toward decode
+    work.  ``return_stats=True`` additionally returns ``{"decode_steps"}``.
+
+    The pre-redesign ``sketch_head_params=/sketch_cfg=/fused=/greedy=/
+    seed=`` kwargs keep working behind a DeprecationWarning.
     """
+    from repro.launch.steps import resolve_legacy_serving_kwargs
+    head, sampler = resolve_legacy_serving_kwargs(
+        head, sampler, sketch_head_params, sketch_cfg, fused, greedy, seed,
+        "generate()")
+    head = head or DenseHead()
+    sampler = sampler or Sampler()
     b, p = prompts.shape
     max_seq = p + gen_len
     cache = init_decode_cache(cfg, b, max_seq)
 
-    # Jitted steps are memoized per (cfg, head, fused) — repeated generate()
+    # Jitted steps are memoized per (cfg, head spec) — repeated generate()
     # calls (static-batch chunking, benchmarks) reuse one compile cache.
-    prefill, step, _, _ = jitted_serve_fns(cfg, sketch_cfg, fused)
+    prefill, step, _, _ = jitted_serve_fns(cfg, head.without_params())
 
     # Bulk prefill: the whole prompt runs in one forward pass that fills the
     # decode cache, replacing the P per-token decode steps of the old loop.
@@ -67,38 +87,51 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
     logits, cache = prefill(params, prompts, encoder_states=encoder_states,
                             cache=cache)
 
-    # Decode: with a sketch head the step skips the dense unembed and
-    # produces logits from the frozen sketch (fused kernel by default).
-    key = jax.random.PRNGKey(seed)
+    key = sampler.init_key()
     out = [prompts]
+    finished = np.zeros(b, bool)
+    stats = {"decode_steps": 0}
     for t in range(gen_len):
-        if greedy:
-            nxt = jnp.argmax(logits, -1)
-        else:
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub, logits)
+        key, nxt = sampler.sample(key, logits)
+        if eos_id is not None:
+            # EOS bookkeeping needs host values; without eos_id the tokens
+            # stay on device so dispatch pipelines across steps.
+            nxt_h = np.where(finished, pad_id,
+                             np.asarray(nxt, np.int32)).astype(np.int32)
+            finished |= nxt_h == eos_id
+            nxt = jnp.asarray(nxt_h)
         nxt = nxt[:, None].astype(jnp.int32)
         out.append(nxt)
         if t == gen_len - 1:
             break  # the last token needs no forward — its logits are unused
+        if eos_id is not None and finished.all():
+            # Early stop: every sequence is done; the rest is padding.
+            out.append(jnp.full((b, gen_len - 1 - t), pad_id, jnp.int32))
+            break
+        active = jnp.asarray(~finished) if eos_id is not None else None
         logits, cache = step(params, cache, nxt,
                              jnp.asarray(p + t, jnp.int32),
                              encoder_states=encoder_states,
-                             sketch_head=sketch_head_params)
-    return jnp.concatenate(out, axis=1)
+                             head_params=head.params, active=active)
+        stats["decode_steps"] += 1
+    tokens = jnp.concatenate(out, axis=1)
+    return (tokens, stats) if return_stats else tokens
 
 
 def build_or_load_head(params, cfg, head_path: str | None,
-                       distill_steps: int = 300):
+                       backend: str | None = None,
+                       distill_steps: int = 300) -> SketchHead:
     """Load a frozen sketch head, or distill one from the dense head now.
 
     The offline path (examples/serve_sketch_head.py) distills at a real
-    budget and saves with ``save_head``; this fallback runs a short
+    budget and saves with ``SketchHead.save``; this fallback runs a short
     distillation so ``--sketch-head`` is self-contained at smoke scale.
+    Returns a ready-to-serve :class:`repro.api.SketchHead`.  ``backend=None``
+    keeps a loaded head on the decode backend it was saved with (the
+    kind/backend round-trip); an explicit value overrides it.
     """
     from repro.core.distill import DistillConfig
-    from repro.core.sketch_lm_head import (distill_head, freeze_head,
-                                           load_head)
+    from repro.core.sketch_lm_head import distill_head, freeze_head
 
     if head_path:
         if not Path(head_path).exists():
@@ -106,17 +139,20 @@ def build_or_load_head(params, cfg, head_path: str | None,
                 f"--head-path {head_path} does not exist; run "
                 f"examples/serve_sketch_head.py to distill and save a head, "
                 f"or drop --head-path to distill one in-process")
-        head, head_cfg = load_head(head_path)
-        l, r, v = head["array"].shape
-        d = head["proj"].shape[0]
+        head = SketchHead.load(head_path)
+        if backend is not None:
+            head = head.with_backend(backend)
+        l, r, v = head.params["array"].shape
+        d = head.params["proj"].shape[0]
         if v != cfg.vocab_size or d != cfg.d_model:
             raise ValueError(
                 f"sketch head {head_path} was frozen for (d_model={d}, "
                 f"vocab={v}) but --arch {cfg.name} has "
                 f"(d_model={cfg.d_model}, vocab={cfg.vocab_size})")
         print(f"loaded sketch head from {head_path} "
-              f"(L={head_cfg.n_rows}, R={head_cfg.n_buckets})")
-        return head, head_cfg
+              f"(L={head.cfg.n_rows}, R={head.cfg.n_buckets}, "
+              f"backend={head.backend})")
+        return head
 
     head_cfg = cfg.sketch_head or SketchHeadConfig(
         n_rows=128, n_buckets=16, k=1, proj_dim=32, bandwidth=2.0)
@@ -129,22 +165,20 @@ def build_or_load_head(params, cfg, head_path: str | None,
         jax.random.PRNGKey(12), table, hiddens, head_cfg, n_points=256,
         distill_cfg=DistillConfig(n_steps=distill_steps, lr=5e-3))
     print(f"  distill MSE: {metrics['final_mse']:.5f}")
-    return freeze_head(jax.random.PRNGKey(13), kparams, head_cfg), head_cfg
+    return SketchHead(cfg=head_cfg, backend=backend or "fused",
+                      params=freeze_head(jax.random.PRNGKey(13), kparams,
+                                         head_cfg))
 
 
-def run_engine(params, cfg, args, sketch_head, sketch_cfg) -> None:
+def run_engine(lm, args, sampler: Sampler) -> None:
     """Serve a synthetic request stream through the continuous-batching
     engine: staggered arrivals, skewed generation lengths, recycled slots."""
-    from repro.launch.engine import make_engine
-
     n_requests = args.requests or 2 * args.batch
     max_seq = args.prompt_len + args.gen
-    engine = make_engine(params, cfg, n_slots=args.batch, max_seq=max_seq,
-                         sketch_head=sketch_head, sketch_cfg=sketch_cfg,
-                         fused=not args.no_fused, seed=args.seed)
+    engine = lm.engine(n_slots=args.batch, max_seq=max_seq, sampler=sampler)
     rng = np.random.default_rng(args.seed)
     for i in range(n_requests):
-        prompt = rng.integers(0, cfg.vocab_size, args.prompt_len,
+        prompt = rng.integers(0, lm.cfg.vocab_size, args.prompt_len,
                               dtype=np.int32)
         # Skewed length mix: even requests are short, odd run the full --gen.
         gen = args.gen if i % 2 else max(1, args.gen // 4)
@@ -154,10 +188,7 @@ def run_engine(params, cfg, args, sketch_head, sketch_cfg) -> None:
     finished = engine.run()
     dur = time.time() - t0
     n_generated = sum(len(v) for v in finished.values())
-    head_kind = ("sketch/fused" if sketch_head is not None and not args.no_fused
-                 else "sketch/2-kernel" if sketch_head is not None
-                 else "dense")
-    print(f"arch={cfg.name} head={head_kind} engine served "
+    print(f"arch={lm.cfg.name} head={lm.head.describe()} engine served "
           f"{len(finished)} requests over {args.batch} slots: "
           f"{n_generated} tokens in {dur:.1f}s "
           f"({n_generated / dur:.1f} tok/s incl. compile), "
@@ -168,6 +199,8 @@ def run_engine(params, cfg, args, sketch_head, sketch_cfg) -> None:
 
 
 def main() -> None:
+    from repro.api.lm import LM
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-1.6b")
     ap.add_argument("--smoke", action="store_true")
@@ -182,9 +215,13 @@ def main() -> None:
                          "of the dense logit matmul")
     ap.add_argument("--head-path", default=None,
                     help="frozen head .npz from examples/serve_sketch_head.py")
+    ap.add_argument("--backend", default=None,
+                    choices=["fused", "two_kernel", "ref"],
+                    help="sketch-head decode backend (DESIGN.md §8); "
+                         "default: the backend a --head-path head was saved "
+                         "with, else fused")
     ap.add_argument("--no-fused", action="store_true",
-                    help="use the two-kernel (lsh_hash + sketch_head) decode "
-                         "path instead of the fused kernel")
+                    help="deprecated: alias for --backend two_kernel")
     ap.add_argument("--engine", action="store_true",
                     help="serve a request stream through the "
                          "continuous-batching engine instead of one static "
@@ -193,19 +230,29 @@ def main() -> None:
                     help="engine mode: number of requests (default 2×batch)")
     ap.add_argument("--arrival-every", type=int, default=1,
                     help="engine mode: ticks between request arrivals")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="sampling / request-stream seed")
     args = ap.parse_args()
+    if args.no_fused and args.backend is not None:
+        ap.error("--no-fused is a deprecated alias for --backend two_kernel; "
+                 "pass only --backend")
+    backend = "two_kernel" if args.no_fused else args.backend
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_model(jax.random.PRNGKey(0), cfg)
-    sketch_head = sketch_cfg = None
+    head = DenseHead()
     if args.sketch_head:
-        sketch_head, sketch_cfg = build_or_load_head(params, cfg,
-                                                     args.head_path)
+        head = build_or_load_head(params, cfg, args.head_path, backend)
+    lm = LM(params, cfg, head)
+    sampler = Sampler(temperature=args.temperature, top_k=args.top_k,
+                      top_p=args.top_p, seed=args.seed)
 
     if args.engine:
-        run_engine(params, cfg, args, sketch_head, sketch_cfg)
+        run_engine(lm, args, sampler)
         return
 
     prompts = jax.random.randint(jax.random.PRNGKey(1),
@@ -218,16 +265,12 @@ def main() -> None:
             (args.batch, cfg.n_encoder_tokens, cfg.d_model), jnp.bfloat16)
 
     t0 = time.time()
-    out = generate(params, cfg, prompts, args.gen, encoder_states=enc,
-                   sketch_head_params=sketch_head, sketch_cfg=sketch_cfg,
-                   fused=not args.no_fused, seed=args.seed)
+    out = lm.generate(prompts, args.gen, sampler=sampler,
+                      encoder_states=enc)
     dur = time.time() - t0
     total_tokens = args.batch * (args.prompt_len + args.gen)
-    head_kind = ("sketch/fused" if sketch_head is not None and not args.no_fused
-                 else "sketch/2-kernel" if sketch_head is not None
-                 else "dense")
-    print(f"arch={cfg.name} head={head_kind} served {args.batch} seqs, "
-          f"{total_tokens} tokens in {dur:.1f}s "
+    print(f"arch={cfg.name} head={lm.head.describe()} served {args.batch} "
+          f"seqs, {total_tokens} tokens in {dur:.1f}s "
           f"({total_tokens / dur:.1f} tok/s incl. compile)")
     print("sample token ids:", np.asarray(out[0, :24]))
 

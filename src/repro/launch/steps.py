@@ -9,11 +9,13 @@ the production mesh without any device memory.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.heads import DenseHead, LogitHead, SketchHead
 from repro.configs import SHAPES, get_config
 from repro.models.config import ModelConfig, SketchHeadConfig
 from repro.models.model import (decode_step, forward, init_decode_cache,
@@ -101,20 +103,80 @@ def prefill_step(params, tokens, cfg: ModelConfig,
     return logits[:, -1], new_cache
 
 
+def _legacy_sketch_spec(sketch_cfg, fused, params=None) -> SketchHead:
+    """The single legacy (sketch_cfg, fused) → SketchHead mapping.
+
+    Every deprecation shim funnels through here so the mapping cannot drift
+    between call sites.  Serving frozen arrays without their config was a
+    crash before the redesign; keep it a hard error rather than silently
+    hashing with default bandwidth/buckets (which emits wrong tokens).
+    """
+    if sketch_cfg is None:
+        raise ValueError(
+            "legacy sketch-head params were passed without sketch_cfg; the "
+            "frozen arrays are unusable without their SketchHeadConfig — "
+            "pass head=repro.api.SketchHead(cfg=..., params=...) instead")
+    return SketchHead(cfg=sketch_cfg,
+                      backend="fused" if fused in (None, True)
+                      else "two_kernel",
+                      params=params)
+
+
+def resolve_legacy_serving_kwargs(head, sampler, sketch_params, sketch_cfg,
+                                  fused, greedy, seed, caller: str):
+    """Map the pre-redesign serving kwargs (sketch head params/cfg +
+    ``fused``/``greedy``/``seed``) onto (LogitHead, Sampler) for one release
+    of grace.  Shared by generate(), the engine, and make_engine."""
+    from repro.api.sampler import Sampler
+
+    if (sketch_params is None and sketch_cfg is None and fused is None
+            and greedy is None and seed is None):
+        return head, sampler
+    warnings.warn(
+        f"the legacy {caller} kwargs (sketch head params/cfg, fused=, "
+        f"greedy=, seed=) are deprecated; pass "
+        f"head=repro.api.SketchHead(...) and sampler=repro.api.Sampler(...) "
+        f"instead", DeprecationWarning, stacklevel=3)
+    if head is None and (sketch_params is not None or sketch_cfg is not None):
+        head = _legacy_sketch_spec(sketch_cfg, fused, sketch_params)
+    if sampler is None and (greedy is not None or seed is not None):
+        sampler = (Sampler() if greedy in (None, True)
+                   else Sampler(temperature=1.0, seed=seed or 0))
+    return head, sampler
+
+
+def _resolve_head_shim(head, head_params, sketch_head, sketch_cfg, fused):
+    """Map the pre-redesign ``sketch_head=/sketch_cfg=/fused=`` kwargs onto
+    a (LogitHead spec, runtime params) pair.  One release of grace."""
+    if sketch_head is None and sketch_cfg is None and fused is None:
+        return head or DenseHead(), head_params
+    warnings.warn(
+        "serve_step(sketch_head=, sketch_cfg=, fused=) is deprecated; pass "
+        "head=repro.api.SketchHead(cfg=..., backend=...) and "
+        "head_params=<frozen arrays> instead", DeprecationWarning,
+        stacklevel=3)
+    if head is None and (sketch_head is not None or sketch_cfg is not None):
+        head = _legacy_sketch_spec(sketch_cfg, fused)
+    if head_params is None:
+        head_params = sketch_head
+    return head or DenseHead(), head_params
+
+
 def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
-               encoder_states=None, sketch_head=None,
-               sketch_cfg: Optional[SketchHeadConfig] = None,
-               fused: bool = True, active=None):
+               encoder_states=None, head: Optional[LogitHead] = None,
+               head_params=None, active=None, sketch_head=None,
+               sketch_cfg: Optional[SketchHeadConfig] = None, fused=None):
     """One decode step (one new token per sequence against the cache).
 
-    With ``sketch_head`` (frozen params from
-    ``repro.core.sketch_lm_head.freeze_head``) the dense h·Wᵀ logit matmul is
-    skipped entirely: the backbone returns the final hidden and the
-    Representer-Sketch head produces the (B, V) logits — fused into a single
-    Pallas call (repro.kernels.fused_decode) unless ``fused=False`` selects
-    the two-kernel lsh_hash → sketch_head baseline.  ``sketch_cfg`` must be
-    the head's static SketchHeadConfig (hashable; close over it via
-    functools.partial before jit).
+    ``head`` is a :class:`repro.api.heads.LogitHead` *spec* (hashable —
+    close over it via functools.partial before jit).  A ``DenseHead`` (the
+    default) takes the backbone's own unembed logits.  A head with
+    ``needs_hidden`` (e.g. ``SketchHead``) skips the dense h·Wᵀ matmul
+    entirely: the backbone returns the final hidden and the head produces
+    the (B, V) logits on its configured backend (``fused`` — one Pallas
+    call, ``two_kernel``, or ``ref``); its frozen arrays arrive as the
+    runtime argument ``head_params``.  The old ``sketch_head=/sketch_cfg=/
+    fused=`` kwargs still work behind a DeprecationWarning.
 
     Continuous batching: ``pos`` may be per-slot (B,) counters, and
     ``active`` a (B,) bool mask — cache rows of inactive (free/padded) slots
@@ -123,17 +185,18 @@ def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
     """
     from repro.models.model import mask_cache_update
 
-    if sketch_head is None:
+    head, head_params = _resolve_head_shim(head, head_params, sketch_head,
+                                           sketch_cfg, fused)
+    if not head.needs_hidden:
         logits, new_cache = decode_step(params, cache, tokens, pos, cfg,
                                         encoder_states=encoder_states)
     else:
-        from repro.core.sketch_lm_head import apply_head
         from repro.models.layers import softcap
 
         hidden, new_cache = decode_step(params, cache, tokens, pos, cfg,
                                         encoder_states=encoder_states,
                                         return_hidden=True)
-        logits = apply_head(sketch_head, hidden, sketch_cfg, fused=fused)
+        logits = head.apply(head_params, hidden)
         if cfg.final_logit_softcap:
             logits = softcap(logits, cfg.final_logit_softcap)
     if active is not None:
@@ -141,20 +204,36 @@ def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
     return logits, new_cache
 
 
-@functools.lru_cache(maxsize=None)
-def jitted_serve_fns(cfg: ModelConfig,
-                     sketch_cfg: Optional[SketchHeadConfig] = None,
-                     fused: bool = True):
+def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
+                     fused=None):
     """Jitted (prefill, decode, slot_insert, slot_reset) for one serving
-    config.  Memoized on the (hashable) configs so every ``generate()`` call
-    and every engine instance for the same model reuses one compile cache —
-    a fresh ``jax.jit(partial(...))`` per call would recompile each time.
+    config.  Memoized on ``(cfg, head spec)`` — both hashable — so every
+    ``generate()`` call and every engine instance for the same (model, head)
+    pair reuses one compile cache; a fresh ``jax.jit(partial(...))`` per
+    call would recompile each time.  The head's frozen arrays are *not*
+    part of the key: pass them per call as ``head_params``.
+
+    Accepts the pre-redesign ``(cfg, sketch_cfg, fused)`` calling convention
+    behind a DeprecationWarning.
     """
+    if isinstance(head, SketchHeadConfig) or fused is not None:
+        warnings.warn(
+            "jitted_serve_fns(cfg, sketch_cfg, fused) is deprecated; pass a "
+            "repro.api LogitHead spec instead", DeprecationWarning,
+            stacklevel=2)
+        sketch_cfg = head if isinstance(head, SketchHeadConfig) else None
+        head = (_legacy_sketch_spec(sketch_cfg, fused)
+                if sketch_cfg is not None else DenseHead())
+    head = (head or DenseHead()).without_params()
+    return _jitted_serve_fns(cfg, head)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_serve_fns(cfg: ModelConfig, head: LogitHead):
     from repro.models.model import cache_slot_insert, cache_slot_reset
 
     prefill = jax.jit(functools.partial(prefill_step, cfg=cfg))
-    decode = jax.jit(functools.partial(serve_step, cfg=cfg,
-                                       sketch_cfg=sketch_cfg, fused=fused))
+    decode = jax.jit(functools.partial(serve_step, cfg=cfg, head=head))
     insert = jax.jit(functools.partial(cache_slot_insert, cfg))
     reset = jax.jit(functools.partial(cache_slot_reset, cfg))
     return prefill, decode, insert, reset

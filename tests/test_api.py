@@ -1,0 +1,371 @@
+"""The repro.api surface (DESIGN.md §8): golden parity against the
+pre-redesign call paths, LogitHead registry round-trips, Sampler
+determinism, deprecation shims, eos_id early stop, and kernel-backend
+dispatch."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (LM, DenseHead, Sampler, SketchHead, SketchHeadConfig,
+                       load_head)
+from repro.configs import get_config
+from repro.core.sketch_lm_head import apply_head, freeze_head
+from repro.kernels import registry
+from repro.launch.engine import make_engine
+from repro.launch.serve import generate
+from repro.models.model import init_model
+
+_HEAD_CFG = SketchHeadConfig(n_rows=32, n_buckets=8, k=1, proj_dim=16,
+                             bandwidth=2.0)
+
+
+def _direct_head_params(key, d_model: int, vocab: int,
+                        cfg: SketchHeadConfig) -> dict:
+    """Direct-construction frozen head (distillation quality is covered by
+    tests/test_system.py; these tests exercise the API plumbing)."""
+    kp, ka, kj, kf = jax.random.split(key, 4)
+    kparams = {
+        "points": jax.random.normal(kp, (128, cfg.proj_dim)),
+        "alphas": jax.random.normal(ka, (128, vocab)) * 0.01,
+        "proj": jax.random.normal(kj, (d_model, cfg.proj_dim))
+        / np.sqrt(d_model),
+    }
+    return freeze_head(kf, kparams, cfg)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """(cfg, params, frozen head params) for one smoke arch."""
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    head_params = _direct_head_params(jax.random.PRNGKey(42), cfg.d_model,
+                                      cfg.vocab_size, _HEAD_CFG)
+    return cfg, params, head_params
+
+
+def _head_for(kind: str, head_params) -> "DenseHead | SketchHead":
+    if kind == "dense":
+        return DenseHead()
+    backend = {"sketch-fused": "fused", "sketch-2kernel": "two_kernel"}[kind]
+    return SketchHead(cfg=_HEAD_CFG, backend=backend, params=head_params)
+
+
+def _legacy_kwargs(kind: str, head_params) -> dict:
+    if kind == "dense":
+        return {}
+    return {"sketch_head_params": head_params, "sketch_cfg": _HEAD_CFG,
+            "fused": kind == "sketch-fused"}
+
+
+# --------------------------------------------------------------------------
+# golden parity: new facade == pre-redesign call paths, bitwise
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "sketch-fused", "sketch-2kernel"])
+def test_lm_generate_matches_legacy_static_path(served, kind):
+    cfg, params, head_params = served
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0,
+                                 cfg.vocab_size)
+    legacy_kw = _legacy_kwargs(kind, head_params)
+    if legacy_kw:
+        with pytest.warns(DeprecationWarning):
+            legacy = np.asarray(generate(params, cfg, prompts, 4, **legacy_kw))
+    else:
+        legacy = np.asarray(generate(params, cfg, prompts, 4))
+    lm = LM(params, cfg, _head_for(kind, head_params))
+    np.testing.assert_array_equal(np.asarray(lm.generate(prompts, 4)), legacy)
+
+
+@pytest.mark.parametrize("kind", ["dense", "sketch-fused", "sketch-2kernel"])
+def test_lm_serve_matches_legacy_engine_path(served, kind):
+    cfg, params, head_params = served
+    b, p, g = 2, 5, 4
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (b, p), 0,
+                                 cfg.vocab_size)
+    legacy_kw = _legacy_kwargs(kind, head_params)
+    if legacy_kw:
+        with pytest.warns(DeprecationWarning):
+            engine = make_engine(params, cfg, n_slots=b, max_seq=p + g,
+                                 sketch_head=legacy_kw["sketch_head_params"],
+                                 sketch_cfg=legacy_kw["sketch_cfg"],
+                                 fused=legacy_kw["fused"])
+    else:
+        engine = make_engine(params, cfg, n_slots=b, max_seq=p + g)
+    rids = [engine.submit(np.asarray(prompts[i]), g) for i in range(b)]
+    legacy = engine.run()
+
+    lm = LM(params, cfg, _head_for(kind, head_params))
+    finished = lm.serve([(np.asarray(prompts[i]), g) for i in range(b)],
+                        n_slots=b)
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(np.asarray(finished[i]),
+                                      np.asarray(legacy[rid]))
+
+
+# --------------------------------------------------------------------------
+# head registry round-trip
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["fused", "two_kernel", "ref"])
+def test_head_save_load_roundtrips_kind_and_backend(tmp_path, backend):
+    head_params = _direct_head_params(jax.random.PRNGKey(3), 24, 64, _HEAD_CFG)
+    head = SketchHead(cfg=_HEAD_CFG, backend=backend, params=head_params)
+    head.save(tmp_path / "head.npz")
+    loaded = load_head(tmp_path / "head.npz")
+    assert isinstance(loaded, SketchHead)
+    assert loaded.kind == "sketch"
+    assert loaded.backend == backend
+    assert loaded.cfg == _HEAD_CFG
+    for k in head_params:
+        np.testing.assert_array_equal(np.asarray(loaded.params[k]),
+                                      np.asarray(head_params[k]))
+    # The spec (hash/eq) ignores the arrays, so loaded == original.
+    assert loaded == head.without_params().with_params(loaded.params)
+
+
+def test_legacy_archives_load_as_fused_sketch(tmp_path):
+    """Heads saved before the registry metadata existed still load."""
+    from repro.core.sketch_lm_head import save_head as core_save
+
+    head_params = _direct_head_params(jax.random.PRNGKey(4), 24, 64, _HEAD_CFG)
+    path = tmp_path / "legacy.npz"
+    core_save(path, head_params, _HEAD_CFG)
+    data = dict(np.load(path))
+    for k in ("meta_kind", "meta_backend"):  # simulate a pre-metadata file
+        data.pop(k)
+    np.savez(path, **data)
+    loaded = load_head(path)
+    assert isinstance(loaded, SketchHead) and loaded.backend == "fused"
+
+
+def test_unknown_sketch_backend_rejected():
+    with pytest.raises(ValueError, match="backend"):
+        SketchHead(cfg=_HEAD_CFG, backend="warp")
+
+
+def test_head_specs_are_hashable_jit_keys(served):
+    """Same spec (any params) must hit the same jitted-step memo entry."""
+    from repro.launch.steps import jitted_serve_fns
+
+    cfg, _, head_params = served
+    a = jitted_serve_fns(cfg, SketchHead(cfg=_HEAD_CFG, backend="fused",
+                                         params=head_params))
+    b = jitted_serve_fns(cfg, SketchHead(cfg=_HEAD_CFG, backend="fused"))
+    c = jitted_serve_fns(cfg, SketchHead(cfg=_HEAD_CFG, backend="two_kernel"))
+    assert a is b
+    assert a is not c
+    assert jitted_serve_fns(cfg) is jitted_serve_fns(cfg, DenseHead())
+
+
+# --------------------------------------------------------------------------
+# Sampler
+# --------------------------------------------------------------------------
+
+def test_sampler_deterministic_under_fixed_seed(served):
+    cfg, params, _ = served
+    lm = LM(params, cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 4), 0,
+                                 cfg.vocab_size)
+    s = Sampler(temperature=1.0, seed=7)
+    a = np.asarray(lm.generate(prompts, 6, sampler=s))
+    b = np.asarray(lm.generate(prompts, 6, sampler=s))
+    c = np.asarray(lm.generate(prompts, 6,
+                               sampler=Sampler(temperature=1.0, seed=8)))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a[:, 4:], c[:, 4:])
+
+
+def test_sampler_filters_degenerate_to_greedy():
+    """top_k=1 and a tiny nucleus both collapse sampling onto the argmax."""
+    logits = jax.random.normal(jax.random.PRNGKey(6), (5, 64))
+    want = np.asarray(jnp.argmax(logits, -1))
+    for s in (Sampler(temperature=1.0, top_k=1, seed=0),
+              Sampler(temperature=1.0, top_p=1e-6, seed=0)):
+        _, got = s.sample(s.init_key(), logits)
+        np.testing.assert_array_equal(np.asarray(got), want)
+    _, greedy = Sampler().sample(Sampler().init_key(), logits)
+    np.testing.assert_array_equal(np.asarray(greedy), want)
+
+
+def test_sampler_top_p_keeps_boundary_ties():
+    """A kept token tied with the largest cut logit must survive the
+    nucleus filter — masking ties too used to empty the whole row, making
+    sampling deterministically return token 0."""
+    logits = jnp.asarray([[5.0, 5.0, 3.0, 1.0]])
+    s = Sampler(temperature=1.0, top_p=0.3, seed=0)
+    key = s.init_key()
+    seen = set()
+    for _ in range(8):
+        key, tok = s.sample(key, logits)
+        seen.add(int(tok[0]))
+    assert seen <= {0, 1}     # the nucleus is the tied pair …
+    assert len(seen) == 2     # … and both of its members stay reachable
+
+
+def test_sampler_validation():
+    with pytest.raises(ValueError):
+        Sampler(temperature=-1.0)
+    with pytest.raises(ValueError):
+        Sampler(top_p=0.0)
+    with pytest.raises(ValueError):
+        Sampler(top_k=-1)
+
+
+# --------------------------------------------------------------------------
+# deprecation shims
+# --------------------------------------------------------------------------
+
+def test_apply_head_fused_kwarg_warns_and_forwards():
+    head_params = _direct_head_params(jax.random.PRNGKey(7), 24, 64, _HEAD_CFG)
+    hidden = jax.random.normal(jax.random.PRNGKey(8), (3, 24))
+    with pytest.warns(DeprecationWarning):
+        legacy = apply_head(head_params, hidden, _HEAD_CFG, fused=True)
+    np.testing.assert_array_equal(
+        np.asarray(legacy),
+        np.asarray(apply_head(head_params, hidden, _HEAD_CFG,
+                              backend="fused")))
+    with pytest.warns(DeprecationWarning):
+        legacy_2k = apply_head(head_params, hidden, _HEAD_CFG, fused=False,
+                               use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(legacy_2k),
+        np.asarray(apply_head(head_params, hidden, _HEAD_CFG, backend="ref")),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_generate_legacy_kwargs_warn(served):
+    cfg, params, head_params = served
+    prompts = jax.random.randint(jax.random.PRNGKey(9), (1, 4), 0,
+                                 cfg.vocab_size)
+    with pytest.warns(DeprecationWarning):
+        generate(params, cfg, prompts, 2, greedy=True)
+    with pytest.warns(DeprecationWarning):
+        generate(params, cfg, prompts, 2, sketch_head_params=head_params,
+                 sketch_cfg=_HEAD_CFG, fused=False)
+
+
+def test_make_engine_legacy_kwargs_warn(served):
+    cfg, params, _ = served
+    with pytest.warns(DeprecationWarning):
+        make_engine(params, cfg, n_slots=1, max_seq=8, greedy=False, seed=3)
+
+
+# --------------------------------------------------------------------------
+# eos_id early stop (static generate == engine retirement discipline)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "sketch-fused"])
+def test_generate_eos_early_stop_matches_engine(served, kind):
+    cfg, params, head_params = served
+    head = _head_for(kind, head_params)
+    lm = LM(params, cfg, head)
+    b, p, g = 2, 5, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(10), (b, p), 0,
+                                 cfg.vocab_size)
+    ref = np.asarray(lm.generate(prompts, g))          # no eos: full budget
+    eos = int(ref[0, p + 2])                           # row 0 stops at step 2
+    pad = -1
+
+    tokens, stats = generate(params, cfg, prompts, g, head=head,
+                             eos_id=eos, pad_id=pad, return_stats=True)
+    tokens = np.asarray(tokens)
+    assert tokens.shape == (b, p + g)
+    for i in range(b):
+        row_ref = ref[i, p:]
+        hits = np.flatnonzero(row_ref == eos)
+        n_live = (int(hits[0]) + 1) if hits.size else g
+        # Tokens up to (and including) EOS match the unbounded run …
+        np.testing.assert_array_equal(tokens[i, p:p + n_live],
+                                      row_ref[:n_live])
+        # … and everything past EOS is padding.
+        assert (tokens[i, p + n_live:] == pad).all()
+    # Finished sequences stop counting toward decode work: the loop ends as
+    # soon as the slowest surviving row does.
+    live = []
+    for i in range(b):
+        hits = np.flatnonzero(ref[i, p:] == eos)
+        live.append((int(hits[0]) + 1) if hits.size else g)
+    assert stats["decode_steps"] == min(max(live) - 1, g - 1)
+
+    # Engine parity: per-request retirement produces the same sequences.
+    finished = lm.serve([(np.asarray(prompts[i]), g) for i in range(b)],
+                        n_slots=b, eos_id=eos)
+    for i in range(b):
+        n_live = live[i]
+        np.testing.assert_array_equal(np.asarray(finished[i]),
+                                      ref[i, p:p + n_live])
+
+
+def test_generate_eos_on_first_token_skips_decode_entirely(served):
+    cfg, params, _ = served
+    lm = LM(params, cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(11), (1, 4), 0,
+                                 cfg.vocab_size)
+    ref = np.asarray(lm.generate(prompts, 4))
+    eos = int(ref[0, 4])                               # the first new token
+    tokens, stats = generate(params, cfg, prompts, 4, eos_id=eos,
+                             pad_id=0, return_stats=True)
+    assert stats["decode_steps"] == 0
+    assert (np.asarray(tokens)[0, 5:] == 0).all()
+
+
+# --------------------------------------------------------------------------
+# kernel backend registry
+# --------------------------------------------------------------------------
+
+def test_registry_lists_all_op_packages():
+    # Importing the ops modules registers them; the serving path has already
+    # pulled most in, but import explicitly so the test stands alone.
+    import repro.kernels.flash_attn.ops  # noqa: F401
+    import repro.kernels.fused_decode.ops  # noqa: F401
+    import repro.kernels.lsh_hash.ops  # noqa: F401
+    import repro.kernels.race_query.ops  # noqa: F401
+    import repro.kernels.race_update.ops  # noqa: F401
+    import repro.kernels.sketch_head.ops  # noqa: F401
+
+    assert set(registry.ops()) >= {"flash_attn", "fused_decode", "lsh_hash",
+                                   "race_query", "race_update", "sketch_head"}
+    for op in registry.ops():
+        assert set(registry.backends(op)) == {"pallas", "ref"}
+
+
+def test_registry_per_call_backend_matches_pallas():
+    from repro.kernels.lsh_hash.ops import lsh_hash
+
+    x = jax.random.normal(jax.random.PRNGKey(12), (4, 8))
+    w = jax.random.normal(jax.random.PRNGKey(13), (3, 2, 8))
+    b = jax.random.uniform(jax.random.PRNGKey(14), (3, 2))
+    got_p = lsh_hash(x, w, b, bandwidth=1.0, n_buckets=8, backend="pallas")
+    got_r = lsh_hash(x, w, b, bandwidth=1.0, n_buckets=8, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(got_r))
+
+
+def test_registry_env_and_override_dispatch(monkeypatch):
+    import repro.kernels.lsh_hash.ops  # noqa: F401 — ensure registered
+
+    monkeypatch.setenv(registry.ENV_VAR, "ref")
+    assert registry.default_backend() == "ref"
+    assert (registry.resolve("lsh_hash")
+            is registry.resolve("lsh_hash", backend="ref"))
+    try:
+        registry.set_default_backend("pallas")  # override beats the env var
+        assert registry.default_backend() == "pallas"
+    finally:
+        registry.set_default_backend(None)
+    monkeypatch.delenv(registry.ENV_VAR)
+    assert registry.default_backend() == "pallas"
+
+
+def test_registry_rejects_unknown_names():
+    import repro.kernels.lsh_hash.ops  # noqa: F401 — ensure registered
+
+    with pytest.raises(KeyError):
+        registry.resolve("warp_drive")
+    with pytest.raises(ValueError):
+        registry.resolve("lsh_hash", backend="cuda")
+    with pytest.raises(ValueError):
+        registry.set_default_backend("cuda")
