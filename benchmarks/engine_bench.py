@@ -60,7 +60,7 @@ def _requests(n_requests, prompt_len, gen_short, gen_long, vocab, seed=0):
     ]
 
 
-def _run_static(params, cfg, reqs, n_slots, head):
+def _run_static(params, cfg, reqs, n_slots, head, mesh=None):
     """FIFO chunks of n_slots; each chunk decodes to its longest member."""
     done_tokens = 0
     decode_steps = 0
@@ -70,7 +70,7 @@ def _run_static(params, cfg, reqs, n_slots, head):
         chunk = reqs[i : i + n_slots]
         prompts = jnp.asarray(np.stack([p for p, _ in chunk]))
         gen_max = max(g for _, g in chunk)
-        out = generate(params, cfg, prompts, gen_max, head=head)
+        out = generate(params, cfg, prompts, gen_max, head=head, mesh=mesh)
         jax.block_until_ready(out)
         done_tokens += sum(g for _, g in chunk)   # useful tokens only
         decode_steps += gen_max - 1               # first token from prefill
@@ -83,9 +83,9 @@ def _run_static(params, cfg, reqs, n_slots, head):
             "slot_utilization": util}
 
 
-def _run_engine(params, cfg, reqs, n_slots, max_seq, head):
+def _run_engine(params, cfg, reqs, n_slots, max_seq, head, mesh=None):
     engine = make_engine(params, cfg, n_slots=n_slots, max_seq=max_seq,
-                         head=head)
+                         head=head, mesh=mesh)
     for prompt, gen in reqs:
         engine.submit(prompt, gen)
     t0 = time.perf_counter()
@@ -99,10 +99,20 @@ def _run_engine(params, cfg, reqs, n_slots, max_seq, head):
 
 def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
         prompt_len: int = 8, gen_short: int = 4, gen_long: int = 64,
-        reps: int = 3, backend: str = "fused"):
+        reps: int = 3, backend: str = "fused", mesh=None):
+    from benchmarks.schema import SCHEMA_VERSION, mesh_record
+    from repro.launch.mesh import parse_mesh
+
+    mesh = parse_mesh(mesh)
     cfg = get_config(arch, smoke=True)
     params = init_model(jax.random.PRNGKey(0), cfg)
     head = _make_head(cfg, backend)
+    if mesh is not None:
+        # Place once, outside the timed loops — the per-call device_puts
+        # inside generate()/make_engine become no-ops, so neither mode pays
+        # host→device placement inside its timed region.
+        from repro.launch.mesh import place_serving_state
+        params, head = place_serving_state(params, head, mesh)
     max_seq = prompt_len + gen_long
     reqs = _requests(n_requests, prompt_len, gen_short, gen_long,
                      cfg.vocab_size)
@@ -110,17 +120,20 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
     # Warm both paths (compile) on a tiny slice, then time the full stream
     # rep-by-rep interleaved (machine-load drift hits both modes equally)
     # and keep the best rep of each.
-    _run_static(params, cfg, reqs[: 2 * n_slots], n_slots, head)
-    _run_engine(params, cfg, reqs[: 2 * n_slots], n_slots, max_seq, head)
+    _run_static(params, cfg, reqs[: 2 * n_slots], n_slots, head, mesh)
+    _run_engine(params, cfg, reqs[: 2 * n_slots], n_slots, max_seq, head,
+                mesh)
 
     static = engine = None
     for _ in range(reps):
-        s = _run_static(params, cfg, reqs, n_slots, head)
-        e = _run_engine(params, cfg, reqs, n_slots, max_seq, head)
+        s = _run_static(params, cfg, reqs, n_slots, head, mesh)
+        e = _run_engine(params, cfg, reqs, n_slots, max_seq, head, mesh)
         static = s if static is None or s["seconds"] < static["seconds"] else static
         engine = e if engine is None or e["seconds"] < engine["seconds"] else engine
 
     result = {
+        "schema_version": SCHEMA_VERSION,
+        "mesh": mesh_record(mesh),
         "arch": cfg.name, "n_slots": n_slots, "n_requests": n_requests,
         "prompt_len": prompt_len, "gen_short": gen_short,
         "gen_long": gen_long,

@@ -25,6 +25,11 @@ def main() -> None:
                     help="sketch-head decode backend for the serving "
                          "benchmarks (recorded in the BENCH_*.json head "
                          "metadata; DESIGN.md §8)")
+    ap.add_argument("--mesh", default=None,
+                    help="'<data>x<model>' serving mesh for the serving "
+                         "benchmarks (e.g. 4x2; needs XLA_FLAGS forced "
+                         "devices on CPU).  Recorded in every BENCH_*.json "
+                         "record's mesh field; default single-device 1x1")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
     csv_rows = []
@@ -71,7 +76,7 @@ def main() -> None:
     if want("sketch_head"):
         print("== Sketched LM head vs dense head ==")
         from benchmarks import sketch_head_bench
-        r = sketch_head_bench.run(backend=args.backend)
+        r = sketch_head_bench.run(backend=args.backend, mesh=args.mesh)
         csv_rows.append(("sketch_head/dense", r["us_dense"],
                          f"flops={r['dense_flops']}"))
         csv_rows.append((f"sketch_head/{r['head']['backend']}",
@@ -83,7 +88,7 @@ def main() -> None:
     if want("engine"):
         print("== Continuous-batching engine vs static batching ==")
         from benchmarks import engine_bench
-        r = engine_bench.run(backend=args.backend)
+        r = engine_bench.run(backend=args.backend, mesh=args.mesh)
         csv_rows.append(("engine/static", 0.0,
                          f"tok_s={r['static']['tok_s']:.1f};"
                          f"util={r['static']['slot_utilization']:.2f}"))

@@ -1,0 +1,29 @@
+"""Shared schema for the BENCH_*.json records (EXPERIMENTS.md §Bench schema).
+
+Every serving benchmark record carries
+
+* ``schema_version`` — bumped whenever a field is added/renamed, and
+* ``mesh`` — the device mesh the numbers were measured on (``1x1`` for the
+  default single-device run),
+
+so downstream consumers (README results table, dashboards) can tell a
+single-device artifact from a sharded one without guessing from file
+mtimes.  Version history:
+
+  1 (implicit) — head {kind, backend} only, no version field
+  2            — adds schema_version + mesh {spec, data, model, devices}
+"""
+
+from __future__ import annotations
+
+SCHEMA_VERSION = 2
+
+
+def mesh_record(mesh=None) -> dict:
+    """The ``mesh`` field for a BENCH record (single-device when None)."""
+    if mesh is None:
+        return {"spec": "1x1", "data": 1, "model": 1, "devices": 1}
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    d, m = axes.get("data", 1), axes.get("model", 1)
+    return {"spec": f"{d}x{m}", "data": d, "model": m,
+            "devices": int(mesh.devices.size)}

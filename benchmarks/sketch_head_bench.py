@@ -52,7 +52,11 @@ def _time_group(fns, *args, n=20, reps=5):
 
 
 def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
-        backend: str = "fused"):
+        backend: str = "fused", mesh=None):
+    from benchmarks.schema import SCHEMA_VERSION, mesh_record
+    from repro.launch.mesh import parse_mesh
+
+    mesh = parse_mesh(mesh)
     cfg = SketchHeadConfig(n_rows=64, n_buckets=16, k=2, proj_dim=64,
                            bandwidth=4.0)
     key = jax.random.PRNGKey(0)
@@ -85,6 +89,19 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
     us_dense = _time(dense, hidden)
     us_sketch, us_two, us_fused = _time_group(
         [sketch_jit, two_kernel, fused], hidden)
+    us_sharded = None
+    if mesh is not None:
+        # The row-sharded shard_map path (DESIGN.md §9): count arrays over
+        # model on the repetition axis, one psum of (B, V) per call.  On
+        # forced-CPU devices this measures dispatch overhead, not a TPU
+        # win; the record's mesh field is the point.
+        from repro.sharding.rules import head_param_shardings
+        placed = jax.device_put(head, head_param_shardings(head, mesh))
+        sharded = jax.jit(lambda h: apply_head(placed, h, cfg,
+                                               backend=backend,
+                                               kernel_backend="ref",
+                                               mesh=mesh))
+        us_sharded = _time(sharded, hidden)
     costs = head_costs(cfg, d_model, vocab)
     # HBM traffic the fusion removes: write + read of the (B, L) int32 index
     # tensor between the lsh_hash and sketch_head kernel launches.
@@ -103,6 +120,8 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
           f"{costs['sketch_flops']/1e6:.2f}M  ({costs['flop_ratio']:.1f}x)")
 
     result = {
+        "schema_version": SCHEMA_VERSION,
+        "mesh": mesh_record(mesh),
         "d_model": d_model, "vocab": vocab, "batch": batch,
         "head": {"kind": "sketch", "backend": backend},
         "head_config": {"n_rows": cfg.n_rows, "n_buckets": cfg.n_buckets,
@@ -116,6 +135,7 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
         "tok_s_two_kernel": tok_s(us_two),
         "tok_s_fused": tok_s(us_fused),
         "fused_vs_two_kernel_speedup": us_two / us_fused,
+        "us_sharded": us_sharded,
         "idx_hbm_bytes_saved_per_step": idx_bytes,
         "note": "us_two_kernel/us_fused are dispatch-level (kernel-boundary)"
                 " timings of the jnp reference paths on CPU; under one jit"

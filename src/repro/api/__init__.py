@@ -10,7 +10,9 @@ behind this facade:
 * **Sampling** — ``Sampler`` (greedy / temperature / top-k / top-p, seeded
   key chain) replacing the ``greedy: bool`` + ``seed`` pair.
 * **Serving** — ``LM.from_config(...).generate(...)`` / ``.serve(requests)``
-  routing to the static batch path or the continuous-batching engine.
+  routing to the static batch path or the continuous-batching engine;
+  ``mesh="4x2"`` serves SPMD over a ``(data, model)`` device mesh with the
+  sketch count arrays partitioned over ``model`` (DESIGN.md §9).
 * **Kernels** — ``kernel_backends`` (the registry): per-call ``backend=`` or
   global ``REPRO_KERNEL_BACKEND`` dispatch between pallas and ref.
 * **Paper core** — the RACE sketch objects, re-exported from ``repro.core``.

@@ -27,7 +27,24 @@ HEAD_KINDS: Dict[str, Type["LogitHead"]] = {}
 
 
 def register_head(kind: str):
-    """Class decorator: register a LogitHead subclass under ``kind``."""
+    """Class decorator: register a LogitHead subclass under ``kind``.
+
+    Args:
+      kind: the registry key; becomes the head's persisted ``meta_kind`` so
+        ``load_head`` can dispatch on it.
+
+    Returns:
+      The decorating function (returns the class unchanged).
+
+    Example:
+
+    >>> @register_head("null")
+    ... class NullHead(LogitHead):
+    ...     kind = "null"
+    >>> get_head_class("null") is NullHead
+    True
+    >>> del HEAD_KINDS["null"]  # keep the registry clean for other tests
+    """
 
     def deco(cls):
         HEAD_KINDS[kind] = cls
@@ -37,6 +54,20 @@ def register_head(kind: str):
 
 
 def get_head_class(kind: str) -> Type["LogitHead"]:
+    """The registered LogitHead subclass for ``kind``.
+
+    Args:
+      kind: a registry key (``"dense"``, ``"sketch"``, or a custom kind).
+
+    Returns:
+      The class registered under ``kind``.
+
+    Raises:
+      KeyError: if ``kind`` was never registered.
+
+    >>> get_head_class("dense").__name__
+    'DenseHead'
+    """
     if kind not in HEAD_KINDS:
         raise KeyError(
             f"unknown head kind {kind!r}; registered: {sorted(HEAD_KINDS)}")
@@ -57,7 +88,23 @@ class LogitHead:
     needs_hidden = False
     params = None  # stateless by default
 
-    def apply(self, params: Any, hidden: jnp.ndarray) -> jnp.ndarray:
+    def apply(self, params: Any, hidden: jnp.ndarray,
+              mesh=None) -> jnp.ndarray:
+        """Produce (B, V) logits from (B, d_model) final hiddens.
+
+        Args:
+          params: the head's runtime arrays (``head.params`` passed per call
+            so the spec stays hashable).
+          hidden: (B, d_model) final backbone hidden states.
+          mesh: optional ``jax.sharding.Mesh`` for the sharded decode path;
+            stateless heads may ignore it.
+
+        Returns:
+          (B, V) f32 logits.
+
+        Raises:
+          NotImplementedError: on the abstract base.
+        """
         raise NotImplementedError
 
     def without_params(self) -> "LogitHead":
@@ -65,11 +112,23 @@ class LogitHead:
         return self
 
     def with_params(self, params: Any) -> "LogitHead":
+        """This spec with runtime arrays attached.
+
+        Args:
+          params: the runtime arrays (``None`` allowed on stateless heads).
+
+        Returns:
+          A head carrying ``params``.
+
+        Raises:
+          ValueError: if a stateless head is given non-``None`` params.
+        """
         if params is not None:
             raise ValueError(f"{type(self).__name__} is stateless")
         return self
 
     def describe(self) -> str:
+        """Short human-readable identity (kind, plus backend if any)."""
         return self.kind
 
 
@@ -82,7 +141,13 @@ class DenseHead(LogitHead):
     kind = "dense"
     needs_hidden = False
 
-    def apply(self, params, hidden):
+    def apply(self, params, hidden, mesh=None):
+        """Never called — dense logits come out of the backbone.
+
+        Raises:
+          RuntimeError: always; ``serve_step`` must not route a DenseHead
+            through ``apply``.
+        """
         raise RuntimeError(
             "DenseHead logits come from the backbone's unembed; "
             "serve_step should not call apply()")
@@ -103,6 +168,19 @@ class SketchHead(LogitHead):
 
     The kernel-level pallas/ref choice *within* ``fused``/``two_kernel`` is
     the kernel registry's (``REPRO_KERNEL_BACKEND``, DESIGN.md §8).
+
+    On a serving mesh (``LM.from_config(mesh=...)``), ``apply`` runs the
+    shard_map path: count arrays partitioned over ``model`` on the
+    repetition axis, one psum per decode step (DESIGN.md §9).
+
+    >>> SketchHead(backend="ref").describe()
+    'sketch/ref'
+    >>> SketchHead().with_backend("two_kernel").backend
+    'two_kernel'
+    >>> SketchHead(backend="nope")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown sketch-head backend 'nope'; expected one of ('fused', 'two_kernel', 'ref')
     """
 
     kind = "sketch"
@@ -119,32 +197,68 @@ class SketchHead(LogitHead):
                 f"unknown sketch-head backend {self.backend!r}; "
                 f"expected one of {SKETCH_BACKENDS}")
 
-    def apply(self, params: dict, hidden: jnp.ndarray) -> jnp.ndarray:
+    def apply(self, params: dict, hidden: jnp.ndarray,
+              mesh=None) -> jnp.ndarray:
+        """Sketched (B, V) logits for (B, d_model) hiddens.
+
+        Args:
+          params: the frozen head arrays ({"proj", "w", "b", "array"}).
+          hidden: (B, d_model) final backbone hidden states.
+          mesh: optional serving mesh; with a ``model`` axis the count
+            arrays evaluate shard-locally and reduce with one psum.
+
+        Returns:
+          (B, V) f32 logits on this spec's ``backend``.
+
+        Raises:
+          ValueError: if ``params`` is None (a bare spec cannot serve).
+        """
         from repro.core.sketch_lm_head import apply_head
         if params is None:
             raise ValueError(
                 "SketchHead.apply needs the frozen head params; build them "
                 "with freeze_head/distill_head or load them with "
                 "SketchHead.load")
-        return apply_head(params, hidden, self.cfg, backend=self.backend)
+        return apply_head(params, hidden, self.cfg, backend=self.backend,
+                          mesh=mesh)
 
     def without_params(self) -> "SketchHead":
+        """The bare spec — what jit memo caches should key on."""
         if self.params is None:
             return self
         return dataclasses.replace(self, params=None)
 
     def with_params(self, params: dict) -> "SketchHead":
+        """This spec with the frozen arrays attached (runtime identity)."""
         return dataclasses.replace(self, params=params)
 
     def with_backend(self, backend: str) -> "SketchHead":
+        """The same head decoding on a different backend.
+
+        Args:
+          backend: one of ``"fused"`` / ``"two_kernel"`` / ``"ref"``.
+
+        Returns:
+          A new spec; raises ``ValueError`` (via ``__post_init__``) on an
+          unknown backend name.
+        """
         return dataclasses.replace(self, backend=backend)
 
     def describe(self) -> str:
+        """``"sketch/<backend>"`` — the registry identity."""
         return f"sketch/{self.backend}"
 
     # -- persistence (round-trips kind + backend, DESIGN.md §8) ------------
 
     def save(self, path) -> None:
+        """Persist params + config + registry identity as an .npz archive.
+
+        Args:
+          path: destination file path (parent dirs are created).
+
+        Raises:
+          ValueError: if the spec carries no params.
+        """
         from repro.core.sketch_lm_head import save_head
         if self.params is None:
             raise ValueError("cannot save a SketchHead without params")
@@ -153,13 +267,34 @@ class SketchHead(LogitHead):
 
     @classmethod
     def load(cls, path) -> "SketchHead":
+        """Load a head saved by :meth:`save` (kind/backend round-trip).
+
+        Args:
+          path: the .npz archive.
+
+        Returns:
+          A ready-to-serve ``SketchHead`` on the backend it was saved with
+          (archives predating the metadata load as ``fused``).
+        """
         from repro.core.sketch_lm_head import load_head_full
         params, cfg, meta = load_head_full(path)
         return cls(cfg=cfg, backend=meta["backend"], params=params)
 
 
 def load_head(path) -> LogitHead:
-    """Load any saved head; dispatches on the stored ``kind`` metadata."""
+    """Load any saved head; dispatches on the stored ``kind`` metadata.
+
+    Args:
+      path: an .npz archive written by a head's ``save``.
+
+    Returns:
+      An instance of the registered class for the stored kind, with params
+      attached.
+
+    Raises:
+      KeyError: if the stored kind was never registered in this process.
+      TypeError: if the registered class has no ``load``.
+    """
     from repro.core.sketch_lm_head import load_head_meta
     kind = load_head_meta(path)["kind"]
     cls = get_head_class(kind)

@@ -1,11 +1,14 @@
 """The ``LM`` facade: one request-level entry point for the serving surface.
 
-``LM`` binds (params, config, head) once; ``generate()`` routes to the
+``LM`` binds (params, config, head, mesh) once; ``generate()`` routes to the
 static batch path and ``serve()`` to the continuous-batching engine, both
 through the same ``LogitHead`` / ``Sampler`` objects — "sketch in, sketch
 out": swapping the dense head for a Representer Sketch (or a new registered
 head kind, or a different kernel backend) is a constructor argument, not a
-flag threaded through eight call sites.
+flag threaded through eight call sites.  A ``mesh`` makes every path
+SPMD-sharded end-to-end (DESIGN.md §9): params placed by
+``sharding/rules.py``, decode caches batch-sharded over ``data``, sketch
+count arrays partitioned over ``model`` with one psum per decode step.
 
     from repro.api import LM, Sampler, SketchHead
 
@@ -15,6 +18,10 @@ flag threaded through eight call sites.
     lm = lm.with_head(SketchHead.load("head.npz"))
     finished = lm.serve([(prompt, 16) for prompt in prompts], n_slots=4,
                         sampler=Sampler(temperature=0.8, top_p=0.9, seed=1))
+
+    sharded = LM.from_config("rwkv6-1.6b", smoke=True, mesh="4x2",
+                             head=SketchHead.load("head.npz"))
+    tokens = sharded.generate(prompts, max_new_tokens=16)  # same streams
 """
 
 from __future__ import annotations
@@ -34,31 +41,107 @@ from repro.models.config import ModelConfig
 RequestLike = Union[Tuple[Any, int], Tuple[Any, int, int]]
 
 
+def _place(params, head: LogitHead, mesh):
+    """Shard model params (and any head params) onto ``mesh``."""
+    from repro.launch.mesh import place_serving_state
+
+    return place_serving_state(params, head, mesh)
+
+
 @dataclasses.dataclass
 class LM:
-    """A servable model: backbone params + config + a first-class head."""
+    """A servable model: backbone params + config + a first-class head.
+
+    Attributes:
+      params: the backbone parameter pytree.
+      cfg: the architecture's ``ModelConfig``.
+      head: the ``LogitHead`` producing decode-time logits (dense default).
+      mesh: optional ``jax.sharding.Mesh`` — when set, serving runs SPMD
+        over it (construct via :meth:`from_config` / :meth:`with_mesh` so
+        params are placed; a hand-built instance is not auto-placed).
+    """
 
     params: Any
     cfg: ModelConfig
     head: LogitHead = dataclasses.field(default_factory=DenseHead)
+    mesh: Any = None
 
     @classmethod
     def from_config(cls, arch: str, *, smoke: bool = False,
                     head: Optional[LogitHead] = None, params: Any = None,
-                    seed: int = 0) -> "LM":
-        """Build an LM from a registered arch config (random init unless
-        ``params`` is given)."""
+                    mesh=None, seed: int = 0) -> "LM":
+        """Build an LM from a registered arch config.
+
+        Args:
+          arch: a registered architecture name (``repro.configs``).
+          smoke: use the arch's CPU-scale smoke variant.
+          head: the serving ``LogitHead`` (dense unembed if omitted).
+          params: backbone params to serve (random init per ``seed`` if
+            omitted).
+          mesh: serving mesh — a ``jax.sharding.Mesh`` or a ``"<data>x
+            <model>"`` spec string (e.g. ``"4x2"``); params and head arrays
+            are placed per ``sharding/rules.py``.
+          seed: PRNG seed for the random init.
+
+        Returns:
+          A ready-to-serve ``LM``.
+
+        Raises:
+          KeyError: unknown ``arch``.
+          ValueError: malformed mesh spec or not enough devices.
+        """
         from repro.configs import get_config
+        from repro.launch.mesh import parse_mesh
         from repro.models.model import init_model
 
         cfg = get_config(arch, smoke=smoke)
         if params is None:
             params = init_model(jax.random.PRNGKey(seed), cfg)
-        return cls(params, cfg, head or DenseHead())
+        head = head or DenseHead()
+        mesh = parse_mesh(mesh)
+        if mesh is not None:
+            params, head = _place(params, head, mesh)
+        return cls(params, cfg, head, mesh)
 
     def with_head(self, head: LogitHead) -> "LM":
-        """The same model serving through a different head."""
+        """The same model serving through a different head.
+
+        Args:
+          head: the new ``LogitHead``; its arrays are placed on this LM's
+            mesh (if any).
+
+        Returns:
+          A new ``LM`` sharing params/cfg/mesh.
+        """
+        if self.mesh is not None and head.params is not None:
+            from repro.launch.mesh import place_serving_state
+            _, head = place_serving_state(self.params, head, self.mesh)
         return dataclasses.replace(self, head=head)
+
+    def with_mesh(self, mesh) -> "LM":
+        """This model re-placed onto a serving mesh (or off of one).
+
+        Args:
+          mesh: ``None`` (single-device), a ``jax.sharding.Mesh``, or a
+            ``"<data>x<model>"`` spec string.
+
+        Returns:
+          A new ``LM`` with params and head arrays placed on the mesh.
+        """
+        from repro.launch.mesh import parse_mesh
+
+        mesh = parse_mesh(mesh)
+        params, head = self.params, self.head
+        if mesh is not None:
+            params, head = _place(params, head, mesh)
+        elif self.mesh is not None:
+            # Un-shard: gather back to one device so single-device serve fns
+            # don't mix committed multi-device and fresh single-device arrays.
+            dev = jax.devices()[0]
+            params = jax.device_put(params, dev)
+            if head.params is not None:
+                head = head.with_params(jax.device_put(head.params, dev))
+        return dataclasses.replace(self, params=params, head=head, mesh=mesh)
 
     # -- static batch --------------------------------------------------------
 
@@ -68,9 +151,18 @@ class LM:
                  encoder_states=None) -> jnp.ndarray:
         """Bulk prefill + decode one (B, P) batch → (B, P + max_new_tokens).
 
-        With ``eos_id``, sequences that emit it stop: later positions hold
-        ``pad_id`` and the decode loop exits once every row is done (parity
-        with the engine's per-request retirement).
+        Args:
+          prompts: (B, P) (or (P,)) int32 prompt token ids.
+          max_new_tokens: tokens to decode per sequence.
+          sampler: token-selection policy (greedy if omitted).
+          eos_id: with it, sequences that emit it stop — later positions
+            hold ``pad_id`` and the decode loop exits once every row is done
+            (parity with the engine's per-request retirement).
+          pad_id: filler token for stopped rows.
+          encoder_states: (B, T_enc, d) states for encoder-conditioned archs.
+
+        Returns:
+          (B, P + max_new_tokens) int32 tokens (prompt included).
         """
         from repro.launch.serve import generate
 
@@ -79,26 +171,50 @@ class LM:
             prompts = prompts[None]
         return generate(self.params, self.cfg, prompts, max_new_tokens,
                         encoder_states=encoder_states, head=self.head,
-                        sampler=sampler, eos_id=eos_id, pad_id=pad_id)
+                        sampler=sampler, eos_id=eos_id, pad_id=pad_id,
+                        mesh=self.mesh)
 
     # -- continuous batching -------------------------------------------------
 
     def engine(self, n_slots: int, max_seq: int, *,
                sampler: Optional[Sampler] = None,
                eos_id: Optional[int] = None):
-        """A fresh continuous-batching ServeEngine over this (model, head)."""
+        """A fresh continuous-batching ServeEngine over this (model, head).
+
+        Args:
+          n_slots: decode-cache slot-pool size.
+          max_seq: per-slot cache length (prompt + generation budget).
+          sampler: token-selection policy (greedy if omitted).
+          eos_id: optional early-retirement token.
+
+        Returns:
+          A ``repro.launch.engine.ServeEngine`` (mesh-aware when this LM
+          has a mesh).
+        """
         from repro.launch.engine import make_engine
 
         return make_engine(self.params, self.cfg, n_slots=n_slots,
                            max_seq=max_seq, head=self.head,
-                           sampler=sampler, eos_id=eos_id)
+                           sampler=sampler, eos_id=eos_id, mesh=self.mesh)
 
     def serve(self, requests: Iterable[RequestLike], *, n_slots: int = 4,
               max_seq: Optional[int] = None,
               sampler: Optional[Sampler] = None,
               eos_id: Optional[int] = None) -> Dict[int, List[int]]:
-        """Serve a request stream through the engine; returns, per request id
-        (submission order), the generated tokens (prompt excluded)."""
+        """Serve a request stream through the engine.
+
+        Args:
+          requests: iterables of ``(prompt, max_new_tokens[, arrival])``.
+          n_slots: engine slot-pool size.
+          max_seq: per-slot cache length (inferred from the longest request
+            if omitted).
+          sampler: token-selection policy (greedy if omitted).
+          eos_id: optional early-retirement token.
+
+        Returns:
+          Per request id (submission order), the generated tokens (prompt
+          excluded).
+        """
         reqs: List[Tuple[np.ndarray, int, int]] = []
         for r in requests:
             prompt, max_new = np.asarray(r[0], np.int32).reshape(-1), int(r[1])

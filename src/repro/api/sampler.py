@@ -30,6 +30,28 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class Sampler:
+    """The decode-time sampling policy as one hashable spec.
+
+    Attributes:
+      temperature: 0 → greedy argmax (default); > 0 → softmax sampling.
+      top_k: keep only the k largest logits (0 disables).
+      top_p: keep the smallest nucleus with probability mass ≥ p
+        (1.0 disables).
+      seed: PRNG seed for the per-run key chain.
+
+    Raises:
+      ValueError: on a negative temperature / top_k, or top_p ∉ (0, 1].
+
+    >>> Sampler().describe()
+    'greedy'
+    >>> Sampler(temperature=0.8, top_k=40, seed=1).describe()
+    'sample(t=0.8,top_k=40,seed=1)'
+    >>> Sampler(top_p=0)
+    Traceback (most recent call last):
+        ...
+    ValueError: top_p must be in (0, 1], got 0
+    """
+
     temperature: float = 0.0   # 0 → greedy
     top_k: int = 0             # 0 → no top-k filter
     top_p: float = 1.0         # 1 → no nucleus filter
@@ -45,21 +67,35 @@ class Sampler:
 
     @classmethod
     def greedy(cls) -> "Sampler":
+        """The greedy policy (equivalent to ``Sampler()``)."""
         return cls()
 
     @property
     def is_greedy(self) -> bool:
+        """True when ``temperature == 0`` (argmax; PRNG never consumed)."""
         return self.temperature == 0.0
 
     def init_key(self) -> jax.Array:
+        """The root of this sampler's split-key chain (from ``seed``)."""
         return jax.random.PRNGKey(self.seed)
 
     def sample(self, key: jax.Array,
                logits: jnp.ndarray) -> Tuple[jax.Array, jnp.ndarray]:
-        """(key, (B, V) logits) → (next key, (B,) int32 tokens), jitted."""
+        """Pick one token per row.
+
+        Args:
+          key: the carried chain key (start from :meth:`init_key`).
+          logits: (B, V) logits.
+
+        Returns:
+          ``(next_key, tokens)`` — the advanced chain key (untouched when
+          greedy) and (B,) int32 token ids.  Jitted once per distinct
+          sampler spec.
+        """
         return _jitted_sample(self)(key, jnp.asarray(logits))
 
     def describe(self) -> str:
+        """Short human-readable policy summary (see class doctest)."""
         if self.is_greedy:
             return "greedy"
         parts = [f"t={self.temperature:g}"]

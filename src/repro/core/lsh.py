@@ -41,7 +41,21 @@ _MIX_A = np.int64(1103515245)
 _MIX_B = np.int64(12345)
 
 
-def _fold_subhashes(codes: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+def row_salts(n_rows: int, start=0) -> jnp.ndarray:
+    """Golden-ratio fold salts for sketch rows ``[start, start + n_rows)``.
+
+    The fold salt is a function of the *global* row index; sharded decode
+    paths that evaluate a contiguous row slice (kernels/fused_decode's
+    shard_map path) must pass the offset salts explicitly or their buckets
+    diverge from the single-device hash.  ``start`` may be traced (it comes
+    from ``jax.lax.axis_index`` inside shard_map).
+    """
+    rows = jnp.arange(n_rows, dtype=jnp.int32) + start
+    return rows.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+
+
+def _fold_subhashes(codes: jnp.ndarray, n_buckets: int,
+                    salt: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fold ``(..., L, K)`` integer sub-hash codes into ``(..., L)`` indices.
 
     Carter–Wegman-style iterated affine mix in uint32, **salted by the row
@@ -49,12 +63,13 @@ def _fold_subhashes(codes: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
     map — without the salt, rows whose p-stable codes coincide (tiny code
     support at k=1!) collapse onto identical buckets and the sketch loses
     its i.i.d.-rows guarantee (caught by the bucket-uniformity test).
+    ``salt`` overrides the default ``row_salts(L)`` (row-sharded callers).
     """
     codes = codes.astype(jnp.uint32)
     k = codes.shape[-1]
     n_rows = codes.shape[-2]
-    salt = (jnp.arange(n_rows, dtype=jnp.uint32)
-            * jnp.uint32(0x9E3779B9))            # golden-ratio row salt
+    if salt is None:
+        salt = row_salts(n_rows)
     acc = jnp.broadcast_to(salt, codes.shape[:-1]).astype(jnp.uint32)
     for i in range(k):
         acc = acc * jnp.uint32(_MIX_A & 0xFFFFFFFF) + codes[..., i] + jnp.uint32(i * 97 + 13)

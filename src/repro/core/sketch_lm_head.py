@@ -85,7 +85,7 @@ HEAD_BACKENDS = ("fused", "two_kernel", "ref")
 def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
                *, backend: Optional[str] = None,
                kernel_backend: Optional[str] = None,
-               use_pallas=None, fused=None) -> jnp.ndarray:
+               mesh=None, use_pallas=None, fused=None) -> jnp.ndarray:
     """Sketched logits for (B, d) final hiddens → (B, V).
 
     ``backend`` selects the decode path:
@@ -98,7 +98,11 @@ def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
 
     ``kernel_backend`` optionally forces the kernel registry's pallas/ref
     choice for this call (otherwise ``REPRO_KERNEL_BACKEND`` / the registry
-    default applies).  ``use_pallas=`` / ``fused=`` are deprecated aliases.
+    default applies).  ``mesh`` (a ``jax.sharding.Mesh`` with a ``model``
+    axis) runs the head on the row-sharded shard_map path: count arrays
+    partitioned over ``model`` on the repetition axis, one psum of the
+    (B, V) partials per step (DESIGN.md §9) — any ``backend`` composes with
+    it.  ``use_pallas=`` / ``fused=`` are deprecated aliases.
     """
     if fused is not None or use_pallas is not None:
         warnings.warn(
@@ -118,14 +122,15 @@ def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
         return fused_decode_logits(
             hidden.astype(jnp.float32), head["proj"], head["w"], head["b"],
             head["array"], bandwidth=cfg.bandwidth, n_buckets=cfg.n_buckets,
-            backend=kernel_backend)
+            backend=kernel_backend, mesh=mesh)
     if backend != "two_kernel":
         raise ValueError(f"unknown sketch-head backend {backend!r}; "
                          f"expected one of {HEAD_BACKENDS}")
     q = hidden.astype(jnp.float32) @ head["proj"]
     idx = lsh_hash(q, head["w"], head["b"], bandwidth=cfg.bandwidth,
                    n_buckets=cfg.n_buckets, backend=kernel_backend)
-    return sketch_head_logits(head["array"], idx, backend=kernel_backend)
+    return sketch_head_logits(head["array"], idx, backend=kernel_backend,
+                              mesh=mesh)
 
 
 def save_head(path, head: dict, cfg: SketchHeadConfig, *,

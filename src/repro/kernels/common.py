@@ -16,6 +16,13 @@ def interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def mesh_axis_size(mesh, name: str) -> int:
+    """Size of mesh axis ``name``; 1 when ``mesh`` is None or lacks the axis."""
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
 def round_up(x: int, multiple: int) -> int:
     return ((x + multiple - 1) // multiple) * multiple
 

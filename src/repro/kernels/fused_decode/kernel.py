@@ -41,13 +41,14 @@ from repro.kernels.common import interpret_default, pad_axis
 from repro.kernels.lsh_hash.kernel import _mix_codes
 
 
-def _fused_decode_kernel(h_ref, a_ref, w_ref, b_ref, sketch_ref, out_ref, *,
-                         k: int, n_buckets: int, bandwidth: float,
+def _fused_decode_kernel(h_ref, a_ref, w_ref, b_ref, salt_ref, sketch_ref,
+                         out_ref, *, k: int, n_buckets: int, bandwidth: float,
                          n_rows: int):
     h = h_ref[...]                        # (Bt, d)
     a = a_ref[...]                        # (d, d')
     w = w_ref[...]                        # (L*K, d')
     b = b_ref[...]                        # (1, L*K)
+    salt = salt_ref[...][0]               # (L,) uint32 global-row fold salts
     sketch = sketch_ref[...]              # (L, R, Vt)
     l, r, vt = sketch.shape
     bt = h.shape[0]
@@ -62,7 +63,7 @@ def _fused_decode_kernel(h_ref, a_ref, w_ref, b_ref, sketch_ref, out_ref, *,
     )                                     # (Bt, L*K)
     codes = jnp.floor((proj + b) / bandwidth).astype(jnp.int32).astype(jnp.uint32)
     codes = codes.reshape(bt, n_rows, k)
-    idx = _mix_codes(codes, k, n_buckets)  # (Bt, L)
+    idx = _mix_codes(codes, k, n_buckets, salt=salt)  # (Bt, L)
 
     # 3. shared-index gather as a one-hot MXU contraction (row-mean over L).
     iota_r = jax.lax.broadcasted_iota(jnp.int32, (bt, l, r), 2)
@@ -86,6 +87,7 @@ def fused_decode_pallas(
     block_b: int = 8,
     block_v: int = 2048,
     interpret: bool | None = None,
+    row_salt: jnp.ndarray | None = None,   # (L,) uint32 global-row fold salts
 ) -> jnp.ndarray:            # (B, V) f32 logits
     if interpret is None:
         interpret = interpret_default()
@@ -96,6 +98,10 @@ def fused_decode_pallas(
 
     w2 = w.reshape(n_rows * k, d_proj)
     b2 = b.reshape(1, n_rows * k)
+    if row_salt is None:
+        from repro.core.lsh import row_salts
+        row_salt = row_salts(n_rows)
+    salt2 = row_salt.reshape(1, n_rows)
 
     hp = pad_axis(hidden, 0, block_b)
     sketchp = pad_axis(sketch, 2, block_v)
@@ -113,10 +119,11 @@ def fused_decode_pallas(
             pl.BlockSpec((d, d_proj), lambda i, j: (0, 0)),
             pl.BlockSpec((n_rows * k, d_proj), lambda i, j: (0, 0)),
             pl.BlockSpec((1, n_rows * k), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, n_rows), lambda i, j: (0, 0)),
             pl.BlockSpec((l, r, block_v), lambda i, j: (0, 0, j)),
         ],
         out_specs=pl.BlockSpec((block_b, block_v), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bp, vp), jnp.float32),
         interpret=interpret,
-    )(hp, proj, w2, b2, sketchp)
+    )(hp, proj, w2, b2, salt2, sketchp)
     return out[:n_batch, :v]

@@ -1,4 +1,13 @@
-"""Public wrapper for the fused sketched-decode kernel (registry-dispatched)."""
+"""Public wrapper for the fused sketched-decode kernel (registry-dispatched).
+
+``mesh=`` enables the sharded decode path (DESIGN.md §9): hash params and
+count arrays are partitioned over the mesh's ``model`` axis on the
+repetition axis L, each shard runs the whole fused kernel (transform →
+hash → gather) on its local L/m repetitions, and the per-shard partial
+means finish with a single ``psum`` of the (B, V) logits — one collective
+per decode step.  Falls back to the single-device path when L does not
+divide the ``model`` axis size.
+"""
 
 from __future__ import annotations
 
@@ -7,8 +16,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import registry
+from repro.kernels.common import mesh_axis_size
 from repro.kernels.fused_decode.kernel import fused_decode_pallas
 from repro.kernels.fused_decode.ref import fused_decode_ref
 
@@ -17,19 +29,21 @@ from repro.kernels.fused_decode.ref import fused_decode_ref
 @partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "block_b",
                                    "block_v"))
 def _pallas(hidden, proj, w, b, sketch, *, bandwidth, n_buckets, block_b,
-            block_v):
+            block_v, row_salt=None):
     return fused_decode_pallas(hidden, proj, w, b, sketch,
                                bandwidth=bandwidth, n_buckets=n_buckets,
-                               block_b=block_b, block_v=block_v)
+                               block_b=block_b, block_v=block_v,
+                               row_salt=row_salt)
 
 
 @registry.register("fused_decode", "ref")
 @partial(jax.jit, static_argnames=("bandwidth", "n_buckets", "block_b",
                                    "block_v"))
 def _ref(hidden, proj, w, b, sketch, *, bandwidth, n_buckets, block_b,
-         block_v):
+         block_v, row_salt=None):
     del block_b, block_v  # tiling is a pallas concern
-    return fused_decode_ref(hidden, proj, w, b, sketch, bandwidth, n_buckets)
+    return fused_decode_ref(hidden, proj, w, b, sketch, bandwidth, n_buckets,
+                            row_salt=row_salt)
 
 
 def fused_decode_logits(
@@ -45,8 +59,54 @@ def fused_decode_logits(
     block_v: int = 2048,
     use_pallas: Optional[bool] = None,
     backend: Optional[str] = None,
+    mesh=None,
 ) -> jnp.ndarray:
-    """Sketched (B, V) logits in one kernel: transform → hash → gather."""
+    """Sketched (B, V) logits in one kernel: transform → hash → gather.
+
+    Args:
+      hidden: (B, d_model) final backbone hidden states.
+      proj: (d_model, d') asymmetric transform.
+      w / b: (L, K, d') / (L, K) p-stable hash bank.
+      sketch: (L, R, V) per-class RACE count arrays.
+      bandwidth / n_buckets: static LSH family parameters.
+      block_b / block_v: pallas VMEM tile sizes.
+      use_pallas: deprecated pallas/ref switch (prefer ``backend``).
+      backend: kernel registry backend (``"pallas"`` / ``"ref"``); ``None``
+        resolves through the registry default.
+      mesh: a ``jax.sharding.Mesh`` with a ``model`` axis to run the
+        row-sharded psum path; ``None`` (default) is the single-device path.
+
+    Returns:
+      (B, V) f32 logit estimates.
+    """
     impl = registry.resolve("fused_decode", backend, use_pallas)
-    return impl(hidden, proj, w, b, sketch, bandwidth=bandwidth,
-                n_buckets=n_buckets, block_b=block_b, block_v=block_v)
+    kw = dict(bandwidth=bandwidth, n_buckets=n_buckets, block_b=block_b,
+              block_v=block_v)
+    l = sketch.shape[0]
+    msize = mesh_axis_size(mesh, "model")
+    if msize > 1 and l % msize == 0:
+        l_shard = l // msize
+        # Keep the batch sharded over data when it divides (decode caches
+        # already are): each device transforms/hashes only its rows and the
+        # psum moves (B/d, V), not (B, V).
+        dsize = mesh_axis_size(mesh, "data")
+        bspec = "data" if dsize > 1 and hidden.shape[0] % dsize == 0 else None
+
+        def local(h, pj, ws, bs, sk):
+            # The hash fold is salted by the *global* row index; a shard
+            # holding rows [i·L/m, (i+1)·L/m) must hash with those salts.
+            from repro.core.lsh import row_salts
+            start = jax.lax.axis_index("model") * l_shard
+            part = impl(h, pj, ws, bs, sk, row_salt=row_salts(l_shard, start),
+                        **kw)
+            return jax.lax.psum(part * (l_shard / l), "model")
+
+        # check_rep=False: pallas_call has no replication rule; the psum
+        # makes the output replicated over model by construction.
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(P(bspec, None), P(None, None), P("model", None, None),
+                      P("model", None), P("model", None, None)),
+            out_specs=P(bspec, None), check_rep=False)(hidden, proj, w, b,
+                                                       sketch)
+    return impl(hidden, proj, w, b, sketch, **kw)

@@ -26,7 +26,8 @@ def fused_decode_ref(
     sketch: jnp.ndarray,     # (L, R, V) f32
     bandwidth: float,
     n_buckets: int,
+    row_salt: jnp.ndarray | None = None,   # (L,) uint32 global-row fold salts
 ) -> jnp.ndarray:            # (B, V)
     q = hidden.astype(jnp.float32) @ proj
-    idx = lsh_hash_ref(q, w, b, bandwidth, n_buckets)
+    idx = lsh_hash_ref(q, w, b, bandwidth, n_buckets, row_salt=row_salt)
     return sketch_head_ref(sketch, idx)

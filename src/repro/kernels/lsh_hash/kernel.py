@@ -30,14 +30,18 @@ from repro.kernels.common import interpret_default, pad_axis, round_up
 _MIX_A = 1103515245
 
 
-def _mix_codes(codes: jnp.ndarray, k: int, n_buckets: int) -> jnp.ndarray:
+def _mix_codes(codes: jnp.ndarray, k: int, n_buckets: int,
+               salt: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fold (..., L, K) uint32 codes → (..., L) indices. Mirrors core.lsh
-    bit-for-bit, including the golden-ratio per-row salt."""
-    n_rows = codes.shape[-2]
-    salt = (jax.lax.broadcasted_iota(jnp.uint32, codes.shape[:-1],
-                                     codes.ndim - 2)
-            * jnp.uint32(0x9E3779B9))
-    acc = salt
+    bit-for-bit, including the golden-ratio per-row salt.  ``salt`` ((L,)
+    uint32) overrides the local-row default — required when the caller only
+    holds a row *slice* of the bank (the sharded fused-decode path), since
+    the salt is a function of the global row index."""
+    if salt is None:
+        salt = (jax.lax.broadcasted_iota(jnp.uint32, codes.shape[:-1],
+                                         codes.ndim - 2)
+                * jnp.uint32(0x9E3779B9))
+    acc = jnp.broadcast_to(salt, codes.shape[:-1]).astype(jnp.uint32)
     for i in range(k):
         acc = acc * jnp.uint32(_MIX_A & 0xFFFFFFFF) + codes[..., i] + jnp.uint32(i * 97 + 13)
         acc = acc ^ (acc >> 16)

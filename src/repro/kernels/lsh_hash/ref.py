@@ -23,7 +23,8 @@ def lsh_hash_ref(
     b: jnp.ndarray,      # (L, K) float32
     bandwidth: float,
     n_buckets: int,
+    row_salt: jnp.ndarray | None = None,  # (L,) uint32 global-row fold salts
 ) -> jnp.ndarray:        # (B, L) int32
     proj = jnp.einsum("bd,lkd->blk", x, w)
     codes = jnp.floor((proj + b) / bandwidth).astype(jnp.int32)
-    return _fold_subhashes(codes, n_buckets)
+    return _fold_subhashes(codes, n_buckets, salt=row_salt)

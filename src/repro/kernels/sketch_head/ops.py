@@ -1,4 +1,12 @@
-"""Public wrapper for the sketched LM head (registry-dispatched)."""
+"""Public wrapper for the sketched LM head (registry-dispatched).
+
+``mesh=`` enables the sharded decode path (DESIGN.md §9): the (L, R, V)
+count arrays are partitioned over the mesh's ``model`` axis on the
+repetition axis L, every shard runs the same kernel on its local rows, and
+the per-shard partial means finish with a single ``psum`` of the (B, V)
+logits.  Falls back to the single-device path when L does not divide the
+``model`` axis size.
+"""
 
 from __future__ import annotations
 
@@ -7,9 +15,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import registry
-from repro.kernels.lsh_hash.ops import lsh_hash
+from repro.kernels.common import mesh_axis_size
 from repro.kernels.sketch_head.kernel import sketch_head_pallas
 from repro.kernels.sketch_head.ref import sketch_head_ref
 
@@ -35,27 +45,42 @@ def sketch_head_logits(
     block_v: int = 2048,
     use_pallas: Optional[bool] = None,
     backend: Optional[str] = None,
+    mesh=None,
 ) -> jnp.ndarray:
-    """Estimate (B, V) logits from precomputed bucket indices."""
+    """Estimate (B, V) logits from precomputed bucket indices.
+
+    Args:
+      sketch: the (L, R, V) per-class RACE count arrays.
+      idx: (B, L) int32 bucket indices from ``lsh_hash``.
+      block_b / block_v: pallas VMEM tile sizes.
+      use_pallas: deprecated pallas/ref switch (prefer ``backend``).
+      backend: kernel registry backend (``"pallas"`` / ``"ref"``); ``None``
+        resolves through the registry default.
+      mesh: a ``jax.sharding.Mesh`` with a ``model`` axis to run the
+        row-sharded psum path; ``None`` (default) is the single-device path.
+
+    Returns:
+      (B, V) f32 logit estimates (the row-mean over L sketch reads).
+    """
     impl = registry.resolve("sketch_head", backend, use_pallas)
+    l = sketch.shape[0]
+    msize = mesh_axis_size(mesh, "model")
+    if msize > 1 and l % msize == 0:
+        l_shard = l // msize
+        # Keep the batch sharded over data when it divides (decode caches
+        # already are): each device reads only its rows' indices and the
+        # psum moves (B/d, V), not (B, V).
+        dsize = mesh_axis_size(mesh, "data")
+        bspec = "data" if dsize > 1 and idx.shape[0] % dsize == 0 else None
+
+        def local(sk, ix):
+            part = impl(sk, ix, block_b=block_b, block_v=block_v)
+            return jax.lax.psum(part * (l_shard / l), "model")
+
+        # check_rep=False: pallas_call has no replication rule; the psum
+        # makes the output replicated over model by construction.
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(P("model", None, None), P(bspec, "model")),
+            out_specs=P(bspec, None), check_rep=False)(sketch, idx)
     return impl(sketch, idx, block_b=block_b, block_v=block_v)
-
-
-def sketch_head_apply(
-    hidden: jnp.ndarray,   # (B, d_model) — final hidden state
-    proj: jnp.ndarray,     # (d_model, d') asymmetric transform A
-    w: jnp.ndarray,        # (L, K, d') hash projections
-    b: jnp.ndarray,        # (L, K) hash offsets
-    sketch: jnp.ndarray,   # (L, R, V) per-class arrays
-    *,
-    bandwidth: float,
-    n_buckets: int,
-    use_pallas: Optional[bool] = None,
-    backend: Optional[str] = None,
-) -> jnp.ndarray:
-    """Full sketched head: transform → hash → per-class RACE estimate."""
-    q = hidden @ proj
-    idx = lsh_hash(q, w, b, bandwidth=bandwidth, n_buckets=n_buckets,
-                   use_pallas=use_pallas, backend=backend)
-    return sketch_head_logits(sketch, idx, use_pallas=use_pallas,
-                              backend=backend)

@@ -32,6 +32,7 @@ import bisect
 import dataclasses
 from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -104,7 +105,8 @@ class EngineBackend:
     """
 
     def __init__(self, params, cfg: ModelConfig, *,
-                 head: Optional[LogitHead] = None, sketch_head=None,
+                 head: Optional[LogitHead] = None, mesh=None,
+                 sketch_head=None,
                  sketch_cfg: Optional[SketchHeadConfig] = None, fused=None):
         if cfg.n_encoder_tokens:
             raise NotImplementedError(
@@ -113,19 +115,33 @@ class EngineBackend:
         head, _ = resolve_legacy_serving_kwargs(
             head, None, sketch_head, sketch_cfg, fused, None, None,
             "EngineBackend")
-        self.params = params
         self.cfg = cfg
         self.head = head or DenseHead()
+        self.mesh = mesh
+        if mesh is not None:
+            # Serving SPMD: params per sharding/rules.py, head count arrays
+            # over model; no-op when the LM facade already placed them.
+            from repro.launch.mesh import place_serving_state
+            params, self.head = place_serving_state(params, self.head, mesh)
+        self.params = params
         self.vocab_size = cfg.vocab_size
         (self._prefill, self._decode, self._insert,
-         self._reset) = jitted_serve_fns(cfg, self.head.without_params())
+         self._reset) = jitted_serve_fns(cfg, self.head.without_params(),
+                                         mesh=mesh)
+
+    def _place_cache(self, cache):
+        if self.mesh is None:
+            return cache
+        from repro.sharding.rules import cache_shardings
+        return jax.device_put(cache, cache_shardings(cache, self.mesh))
 
     def init_pool(self, n_slots: int, max_seq: int):
-        return init_decode_cache(self.cfg, n_slots, max_seq)
+        return self._place_cache(init_decode_cache(self.cfg, n_slots, max_seq))
 
     def prefill(self, prompts: jnp.ndarray, max_seq: int):
         """Bulk-prefill (G, P) prompts into a fresh cache → (logits, cache)."""
-        fresh = init_decode_cache(self.cfg, prompts.shape[0], max_seq)
+        fresh = self._place_cache(
+            init_decode_cache(self.cfg, prompts.shape[0], max_seq))
         logits, filled = self._prefill(self.params, prompts, cache=fresh)
         return np.asarray(logits), filled
 
@@ -309,16 +325,19 @@ class ServeEngine:
 def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
                 head: Optional[LogitHead] = None,
                 sampler: Optional[Sampler] = None,
-                eos_id: Optional[int] = None,
+                eos_id: Optional[int] = None, mesh=None,
                 sketch_head=None, sketch_cfg: Optional[SketchHeadConfig] = None,
                 fused=None, greedy=None, seed=None) -> ServeEngine:
     """Engine over a real model: the serving entry point (see launch.serve
-    and the ``LM.engine`` / ``LM.serve`` facade).  The pre-redesign
+    and the ``LM.engine`` / ``LM.serve`` facade).  ``mesh`` makes the whole
+    engine SPMD-sharded: the slot pool's cache rows batch-shard over
+    ``data``, head count arrays over ``model``, and the slot ops preserve
+    those shardings across insert/reset (DESIGN.md §9).  The pre-redesign
     ``sketch_head=/sketch_cfg=/fused=/greedy=/seed=`` kwargs keep working
     behind a DeprecationWarning."""
     head, sampler = resolve_legacy_serving_kwargs(
         head, sampler, sketch_head, sketch_cfg, fused, greedy, seed,
         "make_engine")
-    backend = EngineBackend(params, cfg, head=head)
+    backend = EngineBackend(params, cfg, head=head, mesh=mesh)
     return ServeEngine(backend, n_slots, max_seq, eos_id=eos_id,
                        sampler=sampler)

@@ -19,10 +19,16 @@ in either mode; ``--backend fused|two_kernel|ref`` picks its decode path
 examples/serve_sketch_head.py and loaded via ``--head-path``; without a
 saved head a quick in-process distillation builds one.
 
+``--mesh <data>x<model>`` serves SPMD over a device mesh in either mode
+(params via ``sharding/rules.py``, caches batch-sharded over ``data``,
+sketch count arrays over ``model`` with one psum per decode step —
+DESIGN.md §9); on CPU force devices first with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
       --batch 4 --prompt-len 32 --gen 16 [--sketch-head] [--backend fused] \
       [--temperature 0.8 --top-k 40 --top-p 0.95] \
-      [--engine --requests 8 --arrival-every 2]
+      [--engine --requests 8 --arrival-every 2] [--mesh 4x2]
 """
 
 from __future__ import annotations
@@ -48,7 +54,7 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
              encoder_states=None, *, head: Optional[LogitHead] = None,
              sampler: Optional[Sampler] = None,
              eos_id: Optional[int] = None, pad_id: int = 0,
-             return_stats: bool = False,
+             return_stats: bool = False, mesh=None,
              sketch_head_params=None,
              sketch_cfg: Optional[SketchHeadConfig] = None,
              fused=None, greedy=None, seed=None):
@@ -63,6 +69,12 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
     every row is done — finished sequences stop counting toward decode
     work.  ``return_stats=True`` additionally returns ``{"decode_steps"}``.
 
+    ``mesh`` serves SPMD over a ``(data, model)`` device mesh: params and
+    head arrays are placed per ``sharding/rules.py`` (a no-op when the LM
+    facade already placed them), the decode cache batch-shards over
+    ``data``, and sketch heads decode on their shard_map path
+    (DESIGN.md §9).
+
     The pre-redesign ``sketch_head_params=/sketch_cfg=/fused=/greedy=/
     seed=`` kwargs keep working behind a DeprecationWarning.
     """
@@ -75,10 +87,17 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
     b, p = prompts.shape
     max_seq = p + gen_len
     cache = init_decode_cache(cfg, b, max_seq)
+    if mesh is not None:
+        from repro.launch.mesh import place_serving_state
+        from repro.sharding.rules import cache_shardings
+        params, head = place_serving_state(params, head, mesh)
+        cache = jax.device_put(cache, cache_shardings(cache, mesh))
 
-    # Jitted steps are memoized per (cfg, head spec) — repeated generate()
-    # calls (static-batch chunking, benchmarks) reuse one compile cache.
-    prefill, step, _, _ = jitted_serve_fns(cfg, head.without_params())
+    # Jitted steps are memoized per (cfg, head spec, mesh) — repeated
+    # generate() calls (static-batch chunking, benchmarks) reuse one
+    # compile cache.
+    prefill, step, _, _ = jitted_serve_fns(cfg, head.without_params(),
+                                           mesh=mesh)
 
     # Bulk prefill: the whole prompt runs in one forward pass that fills the
     # decode cache, replacing the P per-token decode steps of the old loop.
@@ -236,6 +255,10 @@ def main() -> None:
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="sampling / request-stream seed")
+    ap.add_argument("--mesh", default=None,
+                    help="serve SPMD over a '<data>x<model>' device mesh "
+                         "(e.g. '4x2'); on CPU, force devices first with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     args = ap.parse_args()
     if args.no_fused and args.backend is not None:
         ap.error("--no-fused is a deprecated alias for --backend two_kernel; "
@@ -248,6 +271,9 @@ def main() -> None:
     if args.sketch_head:
         head = build_or_load_head(params, cfg, args.head_path, backend)
     lm = LM(params, cfg, head)
+    if args.mesh:
+        lm = lm.with_mesh(args.mesh)
+        print(f"serving over mesh {dict(zip(lm.mesh.axis_names, lm.mesh.devices.shape))}")
     sampler = Sampler(temperature=args.temperature, top_k=args.top_k,
                       top_p=args.top_p, seed=args.seed)
 

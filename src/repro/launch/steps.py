@@ -84,14 +84,28 @@ def train_step(params, opt_state: AdamWState, batch: Dict[str, jnp.ndarray],
     return new_params, new_opt, metrics
 
 
+def _constrain_cache(cache, mesh):
+    """Pin a (traced) decode cache to its per-leaf mesh sharding.
+
+    Applied inside the jitted serve fns so prefill / decode / slot ops
+    *preserve* cache shardings step over step instead of letting the SPMD
+    partitioner drift (or worse, gather a slot pool to one device).
+    """
+    from repro.sharding.rules import cache_shardings
+    return jax.lax.with_sharding_constraint(
+        cache, cache_shardings(cache, mesh))
+
+
 def prefill_step(params, tokens, cfg: ModelConfig,
-                 encoder_states=None, cache=None):
+                 encoder_states=None, cache=None, mesh=None):
     """Context ingestion: forward pass returning last-position logits.
 
     Without a cache this is the abstract dry-run shape (logits only).  With
     ``cache`` it is the serving bulk prefill: the whole (B, P) prompt runs in
     one forward pass that fills the decode cache, and ``(last_logits,
-    new_cache)`` is returned — replacing P per-token decode steps.
+    new_cache)`` is returned — replacing P per-token decode steps.  With
+    ``mesh`` the filled cache is constrained to the serving cache shardings
+    (batch over data axes, features over model).
     """
     if cache is None:
         logits, _, _ = forward(params, tokens, cfg,
@@ -100,6 +114,8 @@ def prefill_step(params, tokens, cfg: ModelConfig,
     logits, new_cache, _ = forward(
         params, tokens, cfg, encoder_states=encoder_states,
         cache=cache, cache_pos=jnp.zeros((), jnp.int32), remat=False)
+    if mesh is not None:
+        new_cache = _constrain_cache(new_cache, mesh)
     return logits[:, -1], new_cache
 
 
@@ -164,7 +180,7 @@ def _resolve_head_shim(head, head_params, sketch_head, sketch_cfg, fused):
 
 def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
                encoder_states=None, head: Optional[LogitHead] = None,
-               head_params=None, active=None, sketch_head=None,
+               head_params=None, active=None, mesh=None, sketch_head=None,
                sketch_cfg: Optional[SketchHeadConfig] = None, fused=None):
     """One decode step (one new token per sequence against the cache).
 
@@ -182,6 +198,10 @@ def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
     ``active`` a (B,) bool mask — cache rows of inactive (free/padded) slots
     are kept bitwise unchanged, so a parked slot neither attends nor decays
     state while it waits for a new request.
+
+    Sharded serving: ``mesh`` (static; threaded by ``jitted_serve_fns``)
+    routes stateful heads through their shard_map path and re-constrains the
+    updated cache to the serving cache shardings every step.
     """
     from repro.models.model import mask_cache_update
 
@@ -196,22 +216,30 @@ def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
         hidden, new_cache = decode_step(params, cache, tokens, pos, cfg,
                                         encoder_states=encoder_states,
                                         return_hidden=True)
-        logits = head.apply(head_params, hidden)
+        logits = head.apply(head_params, hidden, mesh=mesh)
         if cfg.final_logit_softcap:
             logits = softcap(logits, cfg.final_logit_softcap)
     if active is not None:
         new_cache = mask_cache_update(cfg, cache, new_cache, active)
+    if mesh is not None:
+        new_cache = _constrain_cache(new_cache, mesh)
     return logits, new_cache
 
 
 def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
-                     fused=None):
+                     fused=None, *, mesh=None):
     """Jitted (prefill, decode, slot_insert, slot_reset) for one serving
-    config.  Memoized on ``(cfg, head spec)`` — both hashable — so every
-    ``generate()`` call and every engine instance for the same (model, head)
-    pair reuses one compile cache; a fresh ``jax.jit(partial(...))`` per
-    call would recompile each time.  The head's frozen arrays are *not*
-    part of the key: pass them per call as ``head_params``.
+    config.  Memoized on ``(cfg, head spec, mesh)`` — all hashable — so
+    every ``generate()`` call and every engine instance for the same
+    (model, head, mesh) triple reuses one compile cache; a fresh
+    ``jax.jit(partial(...))`` per call would recompile each time.  The
+    head's frozen arrays are *not* part of the key: pass them per call as
+    ``head_params``.
+
+    With ``mesh``, every returned fn is mesh-aware: prefill/decode constrain
+    their output cache to the serving cache shardings, stateful heads run
+    their shard_map path, and the slot ops preserve the pool's shardings
+    across insert/reset instead of letting rows gather to one device.
 
     Accepts the pre-redesign ``(cfg, sketch_cfg, fused)`` calling convention
     behind a DeprecationWarning.
@@ -225,17 +253,25 @@ def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
         head = (_legacy_sketch_spec(sketch_cfg, fused)
                 if sketch_cfg is not None else DenseHead())
     head = (head or DenseHead()).without_params()
-    return _jitted_serve_fns(cfg, head)
+    return _jitted_serve_fns(cfg, head, mesh)
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_serve_fns(cfg: ModelConfig, head: LogitHead):
+def _jitted_serve_fns(cfg: ModelConfig, head: LogitHead, mesh=None):
     from repro.models.model import cache_slot_insert, cache_slot_reset
 
-    prefill = jax.jit(functools.partial(prefill_step, cfg=cfg))
-    decode = jax.jit(functools.partial(serve_step, cfg=cfg, head=head))
-    insert = jax.jit(functools.partial(cache_slot_insert, cfg))
-    reset = jax.jit(functools.partial(cache_slot_reset, cfg))
+    prefill = jax.jit(functools.partial(prefill_step, cfg=cfg, mesh=mesh))
+    decode = jax.jit(functools.partial(serve_step, cfg=cfg, head=head,
+                                       mesh=mesh))
+
+    def slot_op(fn):
+        def op(*args):
+            out = fn(cfg, *args)
+            return out if mesh is None else _constrain_cache(out, mesh)
+        return jax.jit(op)
+
+    insert = slot_op(cache_slot_insert)
+    reset = slot_op(cache_slot_reset)
     return prefill, decode, insert, reset
 
 

@@ -15,6 +15,12 @@ Rules are path-based regexes over flattened parameter paths; scanned period
 stacks get their leading ``n_periods`` axis automatically skipped.  ZeRO-1
 (`zero1=True`) additionally shards optimizer-state leaves over ``data`` on
 the largest remaining unsharded dimension.
+
+Frozen *logit-head* params (the serving-side sketch family) have their own
+rule table: ``head_param_shardings`` partitions the (L, R, V) RACE count
+arrays over ``model`` on the repetition axis L and replicates the hash
+params, so the sharded decode path reduces with one ``psum`` per step
+(DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -85,9 +91,27 @@ _PARAM_RULES: Tuple[Tuple[str, P], ...] = (
     (r"mixer/cm_v$",                  P("model", None)),
     # norms & anything scalar
     (r"norm[12]$",                    P(None)),
-    # sketch head (vocab axis last → shard over model)
-    (r"sketch/array$",                P(None, None, "model")),
+    # sketch head embedded in a model tree (same layout as _HEAD_RULES:
+    # count arrays over model on the repetition axis, hash params replicated)
+    (r"sketch/array$",                P("model", None, None)),
     (r"sketch/.*$",                   P(None)),
+)
+
+
+# Frozen sketch-head param tree ({"proj", "w", "b", "array"} — see
+# core/sketch_lm_head.freeze_head).  The (L, R, V) count arrays partition
+# over ``model`` on the repetition axis L: every shard owns L/m full RACE
+# repetitions, so a decode step aggregates per-shard partial means and
+# finishes with ONE psum of the (B, V) logits (the shard_map path in
+# kernels/fused_decode and kernels/sketch_head).  Hash params (proj, w, b)
+# are replicated — they are KB-scale and every shard slices its own L rows
+# inside the shard_map.  First match wins; exactly one rule per leaf
+# (tests/test_sharding.py).
+_HEAD_RULES: Tuple[Tuple[str, P], ...] = (
+    (r"(^|/)array$",                  P("model", None, None)),
+    (r"(^|/)proj$",                   P(None, None)),
+    (r"(^|/)w$",                      P(None, None, None)),
+    (r"(^|/)b$",                      P(None, None)),
 )
 
 
@@ -106,6 +130,14 @@ def _path_str(path) -> str:
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The batch-parallel axes of ``mesh``.
+
+    Args:
+      mesh: a ``jax.sharding.Mesh`` (or any object with ``axis_names``).
+
+    Returns:
+      The subset of ``("pod", "data")`` present in the mesh, in order.
+    """
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
@@ -131,6 +163,20 @@ def _fully_fits(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> bool:
 
 def param_spec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
                scanned: bool) -> P:
+    """PartitionSpec for one model-parameter leaf.
+
+    Args:
+      path_str: ``/``-joined flattened tree path (e.g.
+        ``"periods/pos0/mixer/wq"``).
+      shape: the leaf's array shape.
+      mesh: target mesh; axis sizes gate divisibility fallbacks.
+      scanned: whether the leaf carries a leading ``n_periods`` scan axis
+        (the axis is skipped and never sharded).
+
+    Returns:
+      The first matching rule's spec, rank-filtered and divisibility-checked
+      (``_fit_spec``); replicated if no rule matches.
+    """
     rank = len(shape) - (1 if scanned else 0)
     for pattern, specs in _PARAM_RULES:
         if re.search(pattern, path_str):
@@ -146,7 +192,15 @@ def param_spec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
 
 
 def params_shardings(params, mesh: Mesh):
-    """NamedSharding pytree for a model parameter tree."""
+    """NamedSharding pytree for a model parameter tree.
+
+    Args:
+      params: the model parameter pytree (``models.model.init_model``).
+      mesh: target mesh.
+
+    Returns:
+      A pytree of ``NamedSharding`` with the same structure as ``params``.
+    """
     def one(path, leaf):
         ps = _path_str(path)
         scanned = "periods/" in ps
@@ -154,8 +208,78 @@ def params_shardings(params, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+def head_rule_matches(path_str: str) -> Tuple[str, ...]:
+    """Every ``_HEAD_RULES`` pattern matching a head-param leaf path.
+
+    Exists so tests can assert the rule set is unambiguous (exactly one
+    match per leaf of the frozen sketch-head tree — no silent replication
+    of count arrays through the no-match fallback).
+
+    Args:
+      path_str: ``/``-joined flattened path of a head-param leaf.
+
+    Returns:
+      The matching rule patterns, in rule order.
+    """
+    return tuple(pat for pat, _ in _HEAD_RULES if re.search(pat, path_str))
+
+
+def head_param_spec(path_str: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one frozen logit-head param leaf.
+
+    Args:
+      path_str: leaf path within the head tree (``"array"``, ``"proj"``, …).
+      shape: the leaf's array shape.
+      mesh: target mesh; if the repetition axis L does not divide the
+        ``model`` axis size the spec falls back to replication.
+
+    Returns:
+      The first matching ``_HEAD_RULES`` spec (divisibility-checked);
+      replicated for unknown leaf names.
+
+    Raises:
+      Nothing — unknown leaves replicate, so third-party head kinds with
+      extra state serve unsharded rather than failing.
+    """
+    for pattern, spec in _HEAD_RULES:
+        if re.search(pattern, path_str):
+            return _fit_spec(spec, shape, mesh)
+    return _fit_spec(P(), shape, mesh)
+
+
+def head_param_shardings(head_params, mesh: Mesh):
+    """NamedSharding pytree for a frozen logit-head param tree.
+
+    The sketch family's (L, R, V) count arrays shard over ``model`` on the
+    repetition axis; hash params replicate (see ``_HEAD_RULES``).  Used by
+    ``repro.api.LM`` / the engine to place ``head.params`` on the serving
+    mesh so the shard_map decode path starts from already-local shards.
+
+    Args:
+      head_params: the frozen head tree (``core.sketch_lm_head.freeze_head``).
+      mesh: target mesh.
+
+    Returns:
+      A pytree of ``NamedSharding`` mirroring ``head_params``.
+    """
+    def one(path, leaf):
+        return NamedSharding(
+            mesh, head_param_spec(_path_str(path), leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, head_params)
+
+
 def zero1_shardings(params, mesh: Mesh):
-    """Optimizer-state sharding: param spec + `data` on the largest free dim."""
+    """Optimizer-state sharding: param spec + `data` on the largest free dim.
+
+    Args:
+      params: the model parameter pytree (state leaves mirror it).
+      mesh: target mesh.
+
+    Returns:
+      A pytree of ``NamedSharding``: each leaf keeps its ``param_spec`` and
+      additionally shards the largest unsharded divisible dim over the data
+      axes (ZeRO-1); FSDP-sharded leaves are left as-is.
+    """
     dax = data_axes(mesh)
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dsize = int(np.prod([axes[a] for a in dax]))
@@ -183,7 +307,17 @@ def zero1_shardings(params, mesh: Mesh):
 
 
 def batch_spec(batch_size: int, mesh: Mesh) -> P:
-    """Spec for a batch axis: (pod, data) if divisible, else what fits."""
+    """Spec entry for a batch axis: (pod, data) if divisible, else what fits.
+
+    Args:
+      batch_size: the batch dimension to shard.
+      mesh: target mesh.
+
+    Returns:
+      The axis-name entry (tuple / str / ``None``) to place in a
+      ``PartitionSpec`` for the batch dimension — all data axes when they
+      divide ``batch_size``, ``"data"`` alone as a fallback, else ``None``.
+    """
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dax = data_axes(mesh)
     total = int(np.prod([axes[a] for a in dax]))
@@ -195,8 +329,22 @@ def batch_spec(batch_size: int, mesh: Mesh) -> P:
     return None
 
 
-def cache_shardings(cache, mesh: Mesh, batch_size: int):
+def cache_shardings(cache, mesh: Mesh, batch_size: Optional[int] = None):
     """Decode-cache sharding: batch over data axes, *features* over model.
+
+    Args:
+      cache: a decode-cache pytree (``models.model.init_decode_cache`` or an
+        abstract ``eval_shape`` of one).
+      mesh: target mesh.
+      batch_size: the cache's batch (slot-pool) size, used for the
+        batch-axis divisibility check.  ``None`` infers it per leaf from the
+        leading batch dimension — every leaf of one cache shares the same B,
+        so this is equivalent and lets jitted steps constrain their output
+        cache without threading B statically.
+
+    Returns:
+      A pytree of ``NamedSharding`` mirroring ``cache`` (``None`` subtrees
+      preserved).
 
     The sequence axis is deliberately never sharded: the per-step
     ``dynamic_update_slice`` at a traced position does not partition across
@@ -219,13 +367,15 @@ def cache_shardings(cache, mesh: Mesh, batch_size: int):
     from repro.models.mla import MLACache
     from repro.models.rwkv import RWKVCache
 
-    bspec = batch_spec(batch_size, mesh)
+    bspec_global = None if batch_size is None else batch_spec(batch_size, mesh)
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     msize = axes.get("model", 1)
 
     def leaf_spec(kind_field, shape, scanned):
         rank = len(shape) - (1 if scanned else 0)
         dims = shape[1:] if scanned else shape
+        bspec = (batch_spec(dims[0], mesh) if batch_size is None
+                 else bspec_global)
         if kind_field == "kv":          # (B, S, kv, dh)
             if dims[2] % msize == 0:
                 spec = P(bspec, None, "model", None)

@@ -9,7 +9,8 @@ import pytest
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.rules import (_fit_spec, batch_spec, param_spec)
+from repro.sharding.rules import (_fit_spec, batch_spec, head_param_spec,
+                                  head_rule_matches, param_spec)
 
 
 class FakeMesh:
@@ -72,6 +73,55 @@ def test_batch_spec_divisibility():
     assert batch_spec(32, POD) == ("pod", "data")
     # 16 doesn't divide 32 → falls back to data(16)
     assert batch_spec(16, POD) == "data"
+
+
+def test_head_rules_cover_sketch_tree_exactly_once():
+    """Every leaf of the frozen sketch-head tree matches exactly ONE head
+    rule — no overlap ambiguity, and no leaf silently falling through to
+    the replicate-everything default."""
+    import jax.numpy as jnp
+    from repro.core.sketch_lm_head import freeze_head
+    from repro.models.config import SketchHeadConfig
+    from repro.sharding.rules import _path_str
+
+    cfg = SketchHeadConfig(n_rows=32, n_buckets=8, k=2, proj_dim=16,
+                           bandwidth=2.0)
+    head = jax.eval_shape(
+        lambda: freeze_head(
+            jax.random.PRNGKey(0),
+            {"points": jnp.zeros((64, cfg.proj_dim)),
+             "alphas": jnp.zeros((64, 128)),
+             "proj": jnp.zeros((48, cfg.proj_dim))}, cfg))
+    leaves = jax.tree_util.tree_flatten_with_path(head)[0]
+    assert len(leaves) == 4
+    for path, leaf in leaves:
+        matches = head_rule_matches(_path_str(path))
+        assert len(matches) == 1, (path, matches)
+
+
+def test_head_param_specs_shard_count_arrays_over_model():
+    # (L, R, V) count arrays: model on the repetition axis when it divides.
+    assert tuple(head_param_spec("array", (32, 8, 256), MESH)) == (
+        "model", None, None)
+    # Non-divisible L falls back to replication rather than crashing.
+    assert tuple(head_param_spec("array", (10, 8, 256), MESH)) == (
+        None, None, None)
+    # Hash params replicate (KB-scale; shard_map slices rows on the fly).
+    assert tuple(head_param_spec("proj", (64, 16), MESH)) == (None, None)
+    assert tuple(head_param_spec("w", (32, 2, 16), MESH)) == (
+        None, None, None)
+    assert tuple(head_param_spec("b", (32, 2), MESH)) == (None, None)
+    # Unknown leaves of third-party heads replicate.
+    assert tuple(head_param_spec("extra_state", (8, 8), MESH)) == (None, None)
+
+
+def test_head_count_arrays_not_silently_replicated():
+    """The array rule must actually fire — a regression here would leave
+    every shard holding the full (L, R, V) tensor and the psum path dead."""
+    spec = head_param_spec("array", (64, 16, 4096), MESH)
+    used = {n for e in spec if e is not None
+            for n in (e if isinstance(e, tuple) else (e,))}
+    assert "model" in used
 
 
 def test_cache_shardings_types():
