@@ -9,8 +9,10 @@ Serves the same request stream two ways —
            from the queue
 
 — with a skewed generation-length mix (alternating short/long, the
-workload where padding hurts most), and emits ``BENCH_engine.json`` at the
-repo root.  Decode uses the fused sketch head (the serving hot path; the
+workload where padding hurts most), then sweeps the engine's decode
+megastep size (``decode_chunk`` ∈ ``--chunks``; launch/decode_loop.py,
+DESIGN.md §10) over the same stream, and emits ``BENCH_engine.json``
+(schema v3) at the repo root.  Decode uses the fused sketch head (the serving hot path; the
 relative static/engine numbers are head-agnostic since both modes share
 ``serve_step``).  Both modes are warmed up first so the timed runs measure
 steady-state steps, not compile; the jitted steps are shared via
@@ -83,9 +85,10 @@ def _run_static(params, cfg, reqs, n_slots, head, mesh=None):
             "slot_utilization": util}
 
 
-def _run_engine(params, cfg, reqs, n_slots, max_seq, head, mesh=None):
+def _run_engine(params, cfg, reqs, n_slots, max_seq, head, mesh=None,
+                decode_chunk=1):
     engine = make_engine(params, cfg, n_slots=n_slots, max_seq=max_seq,
-                         head=head, mesh=mesh)
+                         head=head, mesh=mesh, decode_chunk=decode_chunk)
     for prompt, gen in reqs:
         engine.submit(prompt, gen)
     t0 = time.perf_counter()
@@ -94,12 +97,16 @@ def _run_engine(params, cfg, reqs, n_slots, max_seq, head, mesh=None):
     tokens = sum(len(v) for v in finished.values())
     return {"seconds": dur, "tokens": tokens, "tok_s": tokens / dur,
             "decode_steps": engine.stats["decode_steps"],
+            "megasteps": engine.stats["megasteps"],
+            "host_syncs_per_token": engine.stats["host_syncs"] / tokens,
+            "decode_chunk": decode_chunk,
             "slot_utilization": engine.slot_utilization}
 
 
 def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
         prompt_len: int = 8, gen_short: int = 4, gen_long: int = 64,
-        reps: int = 3, backend: str = "fused", mesh=None):
+        reps: int = 3, backend: str = "fused", mesh=None,
+        chunks=(1, 4, 16)):
     from benchmarks.schema import SCHEMA_VERSION, mesh_record
     from repro.launch.mesh import parse_mesh
 
@@ -131,20 +138,44 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
         static = s if static is None or s["seconds"] < static["seconds"] else static
         engine = e if engine is None or e["seconds"] < engine["seconds"] else engine
 
+    # Megastep sweep: the same stream through the engine at each chunk
+    # size K — K=1 is the per-token host tick the parity tests pin, larger
+    # K amortizes the per-token dispatch + device→host sample sync over an
+    # on-device lax.scan (launch/decode_loop.py, DESIGN.md §10).
+    megastep = {}
+    for k in chunks:
+        if k == 1:
+            # Identical protocol to the engine comparison runs above (same
+            # stream, decode_chunk=1, best-of-reps) — reuse, don't re-time.
+            megastep["1"] = engine
+            continue
+        _run_engine(params, cfg, reqs[: 2 * n_slots], n_slots, max_seq,
+                    head, mesh, decode_chunk=k)          # warm the compile
+        best = None
+        for _ in range(reps):
+            m = _run_engine(params, cfg, reqs, n_slots, max_seq, head,
+                            mesh, decode_chunk=k)
+            best = m if best is None or m["seconds"] < best["seconds"] else best
+        megastep[str(k)] = best
+
     result = {
         "schema_version": SCHEMA_VERSION,
         "mesh": mesh_record(mesh),
+        "decode_chunk": 1,   # the static-vs-engine comparison rows' chunk
         "arch": cfg.name, "n_slots": n_slots, "n_requests": n_requests,
         "prompt_len": prompt_len, "gen_short": gen_short,
         "gen_long": gen_long,
         "head": {"kind": head.kind, "backend": head.backend},
         "static": static, "engine": engine,
+        "megastep": megastep,
         "tok_s_speedup": engine["tok_s"] / static["tok_s"],
         "decode_step_ratio": static["decode_steps"] / engine["decode_steps"],
         "note": "same skewed request stream (alternating gen_short/gen_long)"
                 " served as FIFO static chunks vs the continuous-batching"
                 " engine; tokens counts useful (per-request) tokens only, so"
-                " tok_s differences are padding waste vs slot recycling.",
+                " tok_s differences are padding waste vs slot recycling."
+                " megastep[K] reruns the engine with decode_chunk=K"
+                " (on-device K-token scan; schema v3).",
     }
     print(f"  static:  {static['tok_s']:8.1f} tok/s  "
           f"({static['decode_steps']} decode steps, "
@@ -154,10 +185,39 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
           f"util {engine['slot_utilization']:.2f})")
     print(f"  speedup: {result['tok_s_speedup']:.2f}x tok/s, "
           f"{result['decode_step_ratio']:.2f}x fewer decode steps")
+    for k, m in megastep.items():
+        print(f"  megastep K={k:>2}: {m['tok_s']:8.1f} tok/s  "
+              f"({m['decode_steps']} decode steps in {m['megasteps']} "
+              f"dispatches, {m['host_syncs_per_token']:.2f} host syncs/tok)")
     BENCH_JSON.write_text(json.dumps(result, indent=1))
     print(f"  wrote {BENCH_JSON}")
     return result
 
 
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="static vs engine + decode-megastep chunk sweep")
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen-short", type=int, default=4)
+    ap.add_argument("--gen-long", type=int, default=64)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--backend", default="fused",
+                    choices=["fused", "two_kernel", "ref"])
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--chunks", default="1,4,16",
+                    help="comma list of decode_chunk sizes to sweep")
+    args = ap.parse_args()
+    run(arch=args.arch, n_slots=args.n_slots, n_requests=args.requests,
+        prompt_len=args.prompt_len, gen_short=args.gen_short,
+        gen_long=args.gen_long, reps=args.reps, backend=args.backend,
+        mesh=args.mesh,
+        chunks=tuple(int(c) for c in args.chunks.split(",")))
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -96,6 +96,12 @@ def main() -> None:
                          f"tok_s={r['engine']['tok_s']:.1f};"
                          f"util={r['engine']['slot_utilization']:.2f};"
                          f"speedup={r['tok_s_speedup']:.2f}x"))
+        for k, m in r["megastep"].items():
+            csv_rows.append((f"engine/megastep_k{k}", 0.0,
+                             f"tok_s={m['tok_s']:.1f};"
+                             f"dispatches={m['megasteps']};"
+                             f"host_syncs_per_tok="
+                             f"{m['host_syncs_per_token']:.2f}"))
         print()
 
     if want("kernels"):

@@ -2,21 +2,38 @@
 
 Every serving benchmark record carries
 
-* ``schema_version`` — bumped whenever a field is added/renamed, and
+* ``schema_version`` — bumped whenever a field is added/renamed,
 * ``mesh`` — the device mesh the numbers were measured on (``1x1`` for the
-  default single-device run),
+  default single-device run), and
+* (v3) ``decode_chunk`` — the decode megastep size K the record's serving
+  loop ran at (launch/decode_loop.py, DESIGN.md §10),
 
-so downstream consumers (README results table, dashboards) can tell a
-single-device artifact from a sharded one without guessing from file
-mtimes.  Version history:
+so downstream consumers (README results table, dashboards, the CI
+bench-smoke job) can tell a single-device artifact from a sharded one and a
+host-loop run from a megastep run without guessing from file mtimes.
+Version history:
 
   1 (implicit) — head {kind, backend} only, no version field
   2            — adds schema_version + mesh {spec, data, model, devices}
+  3            — adds decode_chunk; engine run records gain
+                 ``host_syncs_per_token`` and ``megasteps`` (device
+                 dispatches), and BENCH_engine.json gains the ``megastep``
+                 sweep: {str(K): engine run record} for K ∈ the swept
+                 chunk sizes
+
+``validate_engine_record`` / ``validate_serve_record`` are the structural
+checks the CI bench-smoke job runs on freshly emitted artifacts:
+
+  PYTHONPATH=src python -m benchmarks.schema BENCH_engine.json
 """
 
 from __future__ import annotations
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+
+#: Fields every timed serving-run record must carry (schema v3).
+_RUN_FIELDS = ("seconds", "tokens", "tok_s", "decode_steps")
+_ENGINE_RUN_FIELDS = _RUN_FIELDS + ("megasteps", "host_syncs_per_token")
 
 
 def mesh_record(mesh=None) -> dict:
@@ -27,3 +44,73 @@ def mesh_record(mesh=None) -> dict:
     d, m = axes.get("data", 1), axes.get("model", 1)
     return {"spec": f"{d}x{m}", "data": d, "model": m,
             "devices": int(mesh.devices.size)}
+
+
+def _require(record: dict, fields, where: str) -> None:
+    missing = [f for f in fields if f not in record]
+    if missing:
+        raise ValueError(f"{where}: missing fields {missing}")
+
+
+def _validate_common(record: dict, name: str) -> None:
+    _require(record, ("schema_version", "mesh", "head"), name)
+    if record["schema_version"] != SCHEMA_VERSION:
+        raise ValueError(
+            f"{name}: schema_version {record['schema_version']} != "
+            f"{SCHEMA_VERSION} (regenerate with benchmarks/run.py)")
+    _require(record["mesh"], ("spec", "data", "model", "devices"),
+             f"{name}.mesh")
+    _require(record["head"], ("kind", "backend"), f"{name}.head")
+
+
+def validate_engine_record(record: dict) -> None:
+    """Structural check for a BENCH_engine.json record (schema v3).
+
+    Raises ``ValueError`` naming the first missing/mismatched field; used
+    by the CI bench-smoke job on freshly emitted artifacts.
+    """
+    name = "BENCH_engine"
+    _validate_common(record, name)
+    _require(record, ("decode_chunk", "static", "engine", "megastep"), name)
+    _require(record["static"], _RUN_FIELDS, f"{name}.static")
+    _require(record["engine"], _ENGINE_RUN_FIELDS, f"{name}.engine")
+    if not record["megastep"]:
+        raise ValueError(f"{name}.megastep: empty sweep")
+    for k, run in record["megastep"].items():
+        if int(k) < 1:
+            raise ValueError(f"{name}.megastep[{k}]: bad chunk size")
+        _require(run, _ENGINE_RUN_FIELDS + ("decode_chunk",),
+                 f"{name}.megastep[{k}]")
+        if run["decode_chunk"] != int(k):
+            raise ValueError(f"{name}.megastep[{k}]: decode_chunk "
+                             f"{run['decode_chunk']} != key {k}")
+
+
+def validate_serve_record(record: dict) -> None:
+    """Structural check for a BENCH_sketch_serve.json record (schema v3)."""
+    _validate_common(record, "BENCH_sketch_serve")
+    _require(record, ("decode_chunk", "us_dense", "us_sketch"),
+             "BENCH_sketch_serve")
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser(
+        description="validate BENCH_*.json artifacts against schema "
+                    f"v{SCHEMA_VERSION}")
+    ap.add_argument("paths", nargs="+")
+    args = ap.parse_args(argv)
+    for path in args.paths:
+        record = json.loads(Path(path).read_text())
+        if "megastep" in record or "engine" in record:
+            validate_engine_record(record)
+        else:
+            validate_serve_record(record)
+        print(f"{path}: valid (schema v{record['schema_version']})")
+
+
+if __name__ == "__main__":
+    main()

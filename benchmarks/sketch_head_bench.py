@@ -122,6 +122,9 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
     result = {
         "schema_version": SCHEMA_VERSION,
         "mesh": mesh_record(mesh),
+        # Per-call head microbenchmark: one head application per record row,
+        # i.e. the host-loop serving shape (schema v3 field).
+        "decode_chunk": 1,
         "d_model": d_model, "vocab": vocab, "batch": batch,
         "head": {"kind": "sketch", "backend": backend},
         "head_config": {"n_rows": cfg.n_rows, "n_buckets": cfg.n_buckets,

@@ -148,7 +148,7 @@ class LM:
     def generate(self, prompts, max_new_tokens: int, *,
                  sampler: Optional[Sampler] = None,
                  eos_id: Optional[int] = None, pad_id: int = 0,
-                 encoder_states=None) -> jnp.ndarray:
+                 encoder_states=None, decode_chunk: int = 1) -> jnp.ndarray:
         """Bulk prefill + decode one (B, P) batch → (B, P + max_new_tokens).
 
         Args:
@@ -160,6 +160,10 @@ class LM:
             (parity with the engine's per-request retirement).
           pad_id: filler token for stopped rows.
           encoder_states: (B, T_enc, d) states for encoder-conditioned archs.
+          decode_chunk: tokens decoded per device dispatch — ``K > 1`` runs
+            the on-device ``lax.scan`` megastep with sampling and EOS
+            retirement fused in (launch/decode_loop.py, DESIGN.md §10);
+            1 (default) is the per-token host loop, bitwise reference.
 
         Returns:
           (B, P + max_new_tokens) int32 tokens (prompt included).
@@ -172,13 +176,13 @@ class LM:
         return generate(self.params, self.cfg, prompts, max_new_tokens,
                         encoder_states=encoder_states, head=self.head,
                         sampler=sampler, eos_id=eos_id, pad_id=pad_id,
-                        mesh=self.mesh)
+                        mesh=self.mesh, decode_chunk=decode_chunk)
 
     # -- continuous batching -------------------------------------------------
 
     def engine(self, n_slots: int, max_seq: int, *,
                sampler: Optional[Sampler] = None,
-               eos_id: Optional[int] = None):
+               eos_id: Optional[int] = None, decode_chunk: int = 1):
         """A fresh continuous-batching ServeEngine over this (model, head).
 
         Args:
@@ -186,6 +190,10 @@ class LM:
           max_seq: per-slot cache length (prompt + generation budget).
           sampler: token-selection policy (greedy if omitted).
           eos_id: optional early-retirement token.
+          decode_chunk: tokens decoded per occupied slot between admission
+            rounds — ``K > 1`` runs one on-device megastep per tick
+            (DESIGN.md §10); 1 (default) keeps the bitwise-parity
+            per-token tick.
 
         Returns:
           A ``repro.launch.engine.ServeEngine`` (mesh-aware when this LM
@@ -195,12 +203,14 @@ class LM:
 
         return make_engine(self.params, self.cfg, n_slots=n_slots,
                            max_seq=max_seq, head=self.head,
-                           sampler=sampler, eos_id=eos_id, mesh=self.mesh)
+                           sampler=sampler, eos_id=eos_id, mesh=self.mesh,
+                           decode_chunk=decode_chunk)
 
     def serve(self, requests: Iterable[RequestLike], *, n_slots: int = 4,
               max_seq: Optional[int] = None,
               sampler: Optional[Sampler] = None,
-              eos_id: Optional[int] = None) -> Dict[int, List[int]]:
+              eos_id: Optional[int] = None,
+              decode_chunk: int = 1) -> Dict[int, List[int]]:
         """Serve a request stream through the engine.
 
         Args:
@@ -210,6 +220,7 @@ class LM:
             if omitted).
           sampler: token-selection policy (greedy if omitted).
           eos_id: optional early-retirement token.
+          decode_chunk: engine megastep size (see :meth:`engine`).
 
         Returns:
           Per request id (submission order), the generated tokens (prompt
@@ -224,7 +235,8 @@ class LM:
             return {}
         if max_seq is None:
             max_seq = max(len(p) + g for p, g, _ in reqs)
-        engine = self.engine(n_slots, max_seq, sampler=sampler, eos_id=eos_id)
+        engine = self.engine(n_slots, max_seq, sampler=sampler, eos_id=eos_id,
+                             decode_chunk=decode_chunk)
         for prompt, max_new, arrival in reqs:
             engine.submit(prompt, max_new, arrival=arrival)
         return engine.run()

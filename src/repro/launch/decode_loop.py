@@ -1,0 +1,184 @@
+"""On-device decode megasteps: K tokens per dispatch (DESIGN.md §10).
+
+The per-token serving loop pays three host costs the paper's cheap sketched
+step cannot amortize: a Python-level jit dispatch per token, a device→host
+sync to sample (the old ``np.asarray`` in the loop), and — without buffer
+donation — a full decode-cache copy per step.  This module moves the loop
+onto the device: one jitted **megastep** runs K decode steps as a
+``jax.lax.scan`` whose carry is ``(cache, last_tok, pos, active, key)``,
+with the :class:`repro.api.Sampler` (temperature / top-k / top-p, split-key
+chain) and EOS → active-mask retirement fused *inside* the scan body.  Only
+a ``(K, B) int32`` token block (plus the small carry vectors) ever crosses
+back to the host.
+
+Semantics are bitwise-aligned with the host loop: each scan step feeds the
+previously sampled token through ``serve_step`` and samples from the
+resulting logits, splitting the carried PRNG key exactly once per non-greedy
+sample — the same (step, sample) sequence and the same key chain as the
+``for t in range(gen_len)`` loop it replaces, so one seed reproduces the
+same stream at any chunk size.  Rows that emit ``eos_id`` retire in-scan:
+their later block entries hold ``pad_id`` and their cache rows freeze via
+the same ``mask_cache_update`` active-mask discipline the engine uses for
+parked slots.
+
+Two flavors share one implementation, specialized by the ``pos`` rank:
+
+* **static generate** — scalar ``pos`` (all rows at the same depth),
+  advancing by 1 per step regardless of retirement, matching the host
+  loop's shared position counter;
+* **engine** — per-slot ``(B,)`` counters advancing only where a slot is
+  active, matching the engine's per-slot bookkeeping.
+
+Megasteps donate their cache argument (``donate_argnums``), so the decode
+cache is updated in place instead of copied per dispatch; callers must
+treat the passed-in cache as consumed (rebind to the returned one).  On a
+serving mesh the donation preserves the PR-4 sharding constraints —
+``serve_step`` re-constrains the cache every scan step, so input and output
+buffers alias shard-for-shard.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.heads import LogitHead
+from repro.api.sampler import Sampler, _sample_impl
+from repro.models.config import ModelConfig
+
+
+def jitted_megastep(cfg: ModelConfig, head: LogitHead, sampler: Sampler,
+                    k: int, *, mesh=None, eos_id: Optional[int] = None,
+                    pad_id: int = 0, masked: bool = False):
+    """The jitted K-step decode megastep for one serving spec.
+
+    Memoized on the full hashable spec ``(cfg, head, sampler, k, mesh,
+    eos_id, pad_id, masked)`` — every engine tick and every ``generate()``
+    chunk for the same spec dispatches one cached executable.
+
+    Args:
+      cfg: the model config.
+      head: a bare ``LogitHead`` spec (``head.without_params()``); frozen
+        arrays ride along per call as ``head_params``.
+      sampler: the ``Sampler`` spec fused into the scan body.
+      k: scan length — decode steps (= emitted tokens) per dispatch.
+      mesh: optional serving mesh; threads the shard_map head path and the
+        per-step cache sharding constraint through the scan.
+      eos_id: with ``masked=True``, rows that emit it retire in-scan.
+      pad_id: block filler for retired rows.
+      masked: carry a ``(B,)`` active mask (engine slots / EOS retirement);
+        ``False`` compiles the maskless fast path (static generate without
+        ``eos_id``), bitwise-matching the host loop's unmasked steps.
+
+    Returns:
+      A jitted ``megastep(params, cache, last_tok, pos, key, *,
+      head_params=None, active=None, encoder_states=None)`` returning
+      ``(block, cache, last_tok, pos, active, key)`` with ``block`` a
+      ``(k, B) int32`` token block.  The ``cache`` argument is **donated**.
+
+    Raises:
+      ValueError: on ``k < 1`` or ``eos_id`` without ``masked``.
+    """
+    if k < 1:
+        raise ValueError(f"megastep needs k >= 1, got {k}")
+    if eos_id is not None and not masked:
+        raise ValueError("eos_id retirement needs masked=True")
+    # Canonical all-positional key: lru_cache would otherwise key
+    # keyword and positional spellings of the same spec separately.
+    return _jitted_megastep(cfg, head, sampler, k, mesh, eos_id, pad_id,
+                            masked)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_megastep(cfg, head, sampler, k, mesh, eos_id, pad_id, masked):
+    from repro.launch.steps import serve_step
+
+    def megastep(params, cache, last_tok, pos, key, head_params=None,
+                 active=None, encoder_states=None):
+        def body(carry, _):
+            cache, tok, pos, active, key = carry
+            logits, cache = serve_step(
+                params, cache, tok[:, None], pos, cfg,
+                encoder_states=encoder_states, head=head,
+                head_params=head_params,
+                active=active if masked else None, mesh=mesh)
+            # Same math as the host loop's jitted Sampler.sample — one key
+            # split per non-greedy sample, none when greedy.
+            key, nxt = _sample_impl(sampler, key, logits)
+            if masked:
+                nxt = jnp.where(active, nxt, jnp.int32(pad_id))
+            if jnp.ndim(pos):       # per-slot counters: advance rows that
+                                    # decoded this step (incl. an EOS step,
+                                    # matching the host engine's += 1)
+                pos = pos + (active.astype(jnp.int32) if masked else 1)
+            else:                   # static generate: one shared depth
+                pos = pos + 1
+            if masked and eos_id is not None:
+                active = active & (nxt != eos_id)
+            return (cache, nxt, pos, active, key), nxt
+
+        (cache, last_tok, pos, active, key), block = jax.lax.scan(
+            body, (cache, last_tok, pos, active, key), None, length=k)
+        return block, cache, last_tok, pos, active, key
+
+    return jax.jit(megastep, donate_argnums=(1,))
+
+
+def decode_chunks(params, cache, first_logits, *, cfg: ModelConfig,
+                  head: LogitHead, sampler: Sampler, gen_len: int,
+                  start_pos: int, chunk: int, eos_id: Optional[int] = None,
+                  pad_id: int = 0, mesh=None, encoder_states=None):
+    """The static-batch decode loop as on-device megasteps.
+
+    Replaces ``generate()``'s per-token host loop for ``decode_chunk > 1``:
+    the first token is sampled from the prefill logits (the same first key
+    split as the host loop), then the remaining ``gen_len - 1`` steps run as
+    ``chunk``-sized megasteps (plus one remainder-sized chunk).  When
+    ``eos_id`` is set and every row retires, remaining chunks are skipped
+    and the tail is padding — the host loop's early exit at chunk
+    granularity.
+
+    Args:
+      params: backbone params.
+      cache: the prefilled decode cache — **consumed** (donated to the
+        first megastep); use the function's view of it only.
+      first_logits: (B, V) last-position prefill logits.
+      cfg / head / sampler / mesh / encoder_states: the serving spec, as in
+        ``launch.serve.generate``.
+      gen_len: total tokens to emit per row (including the first).
+      start_pos: prompt length P (tokens already cached).
+      chunk: megastep size K (>= 1).
+      eos_id / pad_id: optional early-retirement token and filler.
+
+    Returns:
+      ``(tokens, stats)`` — (B, gen_len) int32 generated tokens (prompt
+      excluded) and ``{"decode_steps": n}`` counting device decode steps.
+    """
+    b = first_logits.shape[0]
+    key = sampler.init_key()
+    key, tok0 = sampler.sample(key, first_logits)
+    tok0 = tok0.astype(jnp.int32)
+    masked = eos_id is not None
+    active = (tok0 != eos_id) if masked else None
+    spec = head.without_params()
+
+    blocks = [tok0[:, None]]
+    last_tok, pos = tok0, jnp.asarray(start_pos, jnp.int32)
+    todo, steps = gen_len - 1, 0
+    while todo > 0:
+        k = min(chunk, todo)
+        fn = jitted_megastep(cfg, spec, sampler, k, mesh=mesh,
+                             eos_id=eos_id, pad_id=pad_id, masked=masked)
+        block, cache, last_tok, pos, active, key = fn(
+            params, cache, last_tok, pos, key, head_params=head.params,
+            active=active, encoder_states=encoder_states)
+        blocks.append(block.T)
+        steps += k
+        todo -= k
+        if masked and todo > 0 and not bool(jax.device_get(active.any())):
+            blocks.append(jnp.full((b, todo), pad_id, jnp.int32))
+            break
+    return jnp.concatenate(blocks, axis=1), {"decode_steps": steps}

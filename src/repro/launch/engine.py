@@ -13,9 +13,21 @@ pool of ``n_slots`` decode-cache rows and a FIFO request queue instead:
 * **decode** — one ``serve_step`` per engine tick advances every occupied
   slot, with per-slot position counters (each sequence is at its own depth)
   and an active-slot mask so free slots keep their cache bitwise unchanged.
+  With ``decode_chunk=K`` the tick becomes an on-device *megastep*: K
+  steps, sampling, and EOS retirement fused into one ``lax.scan`` dispatch
+  (launch/decode_loop.py, DESIGN.md §10), clamped so no slot overshoots
+  its budget.  Greedy streams are bitwise K-invariant; seeded streams are
+  K-invariant unless a mid-chunk EOS delays a re-admission (a freed slot
+  refills only at the chunk boundary), which shifts the shared key chain
+  — reproducible per (seed, K), documented in docs/serving.md.
 * **retire** — a sequence leaves individually on EOS or its own
   ``max_new_tokens``; the slot is ``cache_slot_reset`` to a fresh (bitwise
   zero) row and immediately reusable on the next tick.
+
+The request queue is a heap ordered on (arrival, submission) —
+O(log n) per request — and the jitted decode/slot ops donate the pool
+(no per-token cache copy; the engine always rebinds ``self.pool`` to the
+returned one).
 
 The engine is head-agnostic through the ``repro.api`` objects: any
 registered ``LogitHead`` (dense unembed, fused sketch head, the two-kernel
@@ -28,8 +40,8 @@ without JAX in the loop (tests/test_engine_properties.py).
 
 from __future__ import annotations
 
-import bisect
 import dataclasses
+import heapq
 from typing import Dict, List, Optional
 
 import jax
@@ -51,6 +63,51 @@ class Request:
     prompt: np.ndarray          # (P,) int32
     max_new_tokens: int
     arrival: int = 0            # engine tick at which the request is visible
+
+
+class RequestQueue:
+    """Arrival-ordered request queue, FIFO on ties: a binary heap keyed on
+    ``(arrival, submission index)``.
+
+    Replaces the sorted list the engine used to keep (``bisect.insort`` +
+    ``list.pop(0)``): both ends of that were O(n) per request — O(n²) over a
+    long arrival stream — where the heap is O(log n) push/pop.  Semantics
+    are unchanged: ``pop`` returns the earliest arrival, and equal arrivals
+    leave in submission order (the tie-break index), exactly the old
+    insort-right behavior.
+    """
+
+    def __init__(self):
+        self._heap: List[tuple] = []
+        self._pushed = 0
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (req.arrival, self._pushed, req))
+        self._pushed += 1
+
+    def peek(self) -> Request:
+        return self._heap[0][2]
+
+    def pop(self) -> Request:
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __iter__(self):
+        """Pending requests in pop order (sorted snapshot — O(n log n);
+        for diagnostics, not the hot path)."""
+        return (entry[2] for entry in sorted(self._heap))
+
+    def __getitem__(self, i: int) -> Request:
+        # Legacy list-style indexing (``engine.queue[0]``); the head is the
+        # O(1) case, anything else sorts a snapshot.  Slices would silently
+        # return raw heap tuples — reject them.
+        if not isinstance(i, int):
+            raise TypeError(f"RequestQueue indices must be int, got {i!r}")
+        if i == 0:
+            return self.peek()
+        return sorted(self._heap)[i][2]
 
 
 class SlotScheduler:
@@ -159,6 +216,25 @@ class EngineBackend:
             active=jnp.asarray(active))
         return np.asarray(logits), pool
 
+    def megastep(self, pool, tokens: np.ndarray, pos: np.ndarray,
+                 active: np.ndarray, key, k: int, sampler: Sampler,
+                 eos_id: Optional[int]):
+        """K decode steps + in-scan sampling/EOS retirement in one dispatch
+        (launch/decode_loop.py).  ``pool`` is donated; only the (k, B) token
+        block and the small carry vectors cross back to host."""
+        from repro.launch.decode_loop import jitted_megastep
+
+        fn = jitted_megastep(self.cfg, self.head.without_params(), sampler,
+                             k, mesh=self.mesh, eos_id=eos_id, masked=True)
+        block, pool, last_tok, pos, active, key = fn(
+            self.params, pool, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32), key,
+            head_params=self.head.params, active=jnp.asarray(active))
+        # np.array (not asarray): the engine mutates pos/last_tok per slot
+        # on admission, and zero-copy views of jax arrays are read-only.
+        return (np.asarray(block), pool, np.array(last_tok, np.int32),
+                np.array(pos, np.int32), np.asarray(active), key)
+
 
 class ServeEngine:
     """Continuous-batching engine over a ``backend`` and ``n_slots`` cache rows.
@@ -172,21 +248,24 @@ class ServeEngine:
 
     def __init__(self, backend, n_slots: int, max_seq: int, *,
                  eos_id: Optional[int] = None,
-                 sampler: Optional[Sampler] = None,
+                 sampler: Optional[Sampler] = None, decode_chunk: int = 1,
                  greedy=None, seed=None):
         _, sampler = resolve_legacy_serving_kwargs(
             None, sampler, None, None, None, greedy, seed, "ServeEngine")
+        if decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
         self.backend = backend
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.sampler = sampler or Sampler()
+        self.decode_chunk = decode_chunk
         self.pool = backend.init_pool(n_slots, max_seq)
         self.sched = SlotScheduler(n_slots)
         self.pos = np.zeros(n_slots, np.int32)         # tokens cached per slot
         self.last_tok = np.zeros(n_slots, np.int32)    # sampled, not yet cached
         self.remaining = np.zeros(n_slots, np.int32)   # tokens still to emit
-        self.queue: List[Request] = []     # sorted by arrival, FIFO on ties
+        self.queue = RequestQueue()        # arrival-ordered, FIFO on ties
         self.outputs: Dict[int, List[int]] = {}
         self.finished: Dict[int, List[int]] = {}
         self.now = 0                                   # engine tick clock
@@ -195,7 +274,8 @@ class ServeEngine:
         self._pending_reset: List[int] = []            # slots retired this tick
         self._key = self.sampler.init_key()
         self.stats = {"decode_steps": 0, "active_slot_steps": 0,
-                      "admitted": 0, "retired": 0, "prefill_batches": 0}
+                      "admitted": 0, "retired": 0, "prefill_batches": 0,
+                      "megasteps": 0, "host_syncs": 0}
 
     # -- request intake ----------------------------------------------------
 
@@ -217,23 +297,23 @@ class ServeEngine:
             raise ValueError(f"request id {rid} already submitted")
         self._rids.add(rid)
         self._next_rid = max(self._next_rid, rid) + 1
-        bisect.insort(self.queue, Request(rid, prompt, max_new_tokens, arrival),
-                      key=lambda r: r.arrival)
+        self.queue.push(Request(rid, prompt, max_new_tokens, arrival))
         return rid
 
     # -- scheduling --------------------------------------------------------
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
         self._key, toks = self.sampler.sample(self._key, logits)
+        self.stats["host_syncs"] += 1
         return np.asarray(toks, np.int32)
 
     def _admit(self) -> None:
         """FIFO head-of-line admission into free slots; equal-length prompts
         arriving together prefill as one batch (the bulk-prefill path)."""
         batch: List[Request] = []
-        while (self.queue and self.queue[0].arrival <= self.now
+        while (self.queue and self.queue.peek().arrival <= self.now
                and self.sched.n_free > len(batch)):
-            batch.append(self.queue.pop(0))
+            batch.append(self.queue.pop())
         if not batch:
             return
         by_len: Dict[int, List[Request]] = {}
@@ -275,17 +355,84 @@ class ServeEngine:
 
     # -- the engine tick ---------------------------------------------------
 
+    def _chunk_for(self, active_slots: List[int]) -> int:
+        """The megastep length for this tick: ``decode_chunk`` clamped so no
+        occupied slot overshoots its budget (its remaining tokens) and —
+        when a slot is free to admit into — no queued arrival is kept
+        waiting past its arrival tick."""
+        chunk = min(self.decode_chunk,
+                    int(min(self.remaining[s] for s in active_slots)))
+        if self.queue and self.sched.n_free:
+            chunk = min(chunk, max(1, self.queue.peek().arrival - self.now))
+        return max(1, chunk)
+
+    def _decode_megastep(self, active_slots: List[int], chunk: int) -> None:
+        """Advance every occupied slot ``chunk`` tokens in one device
+        dispatch, then walk the returned (chunk, B) block for per-slot
+        retirement (EOS mid-chunk rows are frozen in-scan; their trailing
+        block entries are padding and are skipped here)."""
+        active = np.zeros(self.n_slots, bool)
+        active[active_slots] = True
+        if hasattr(self.backend, "megastep"):
+            (block, self.pool, self.last_tok, self.pos, _,
+             self._key) = self.backend.megastep(
+                self.pool, self.last_tok, self.pos, active, self._key,
+                chunk, self.sampler, self.eos_id)
+            # One block fetch per dispatch; the emulated path below counts
+            # its per-token syncs inside _sample instead.
+            self.stats["host_syncs"] += 1
+        else:
+            block = self._emulate_megastep(active, chunk)
+        self.stats["decode_steps"] += chunk
+        self.stats["megasteps"] += 1
+        for s in active_slots:
+            for i in range(chunk):
+                tok = int(block[i, s])
+                self.outputs[self.sched.owner[s]].append(tok)
+                self.remaining[s] -= 1
+                self.stats["active_slot_steps"] += 1
+                if (self.remaining[s] == 0
+                        or (self.eos_id is not None and tok == self.eos_id)):
+                    self._retire(s)
+                    break
+
+    def _emulate_megastep(self, active: np.ndarray, chunk: int) -> np.ndarray:
+        """Host-loop emulation of the fused megastep for backends without
+        one (e.g. the numpy fake in the property tests): same step→sample→
+        mask→retire sequence, one backend.decode per token."""
+        active = active.copy()
+        block = np.zeros((chunk, self.n_slots), np.int32)
+        for i in range(chunk):
+            step_active = active.copy()
+            logits, self.pool = self.backend.decode(
+                self.pool, self.last_tok, self.pos, step_active)
+            nxt = np.where(step_active, self._sample(logits), 0).astype(
+                np.int32)
+            if self.eos_id is not None:
+                active &= nxt != self.eos_id
+            block[i] = nxt
+            self.pos += step_active.astype(np.int32)
+            self.last_tok = nxt
+        return block
+
     def step(self) -> None:
-        """One tick: admit into free slots, then decode every occupied slot."""
+        """One tick: admit into free slots, then decode every occupied slot
+        — one token (``decode_chunk=1``, the bitwise-parity default) or a
+        ``decode_chunk``-clamped megastep block."""
         self._admit()
         active_slots = self.sched.active_slots()
-        if active_slots:
+        advanced = 1
+        if active_slots and self.decode_chunk > 1:
+            advanced = self._chunk_for(active_slots)
+            self._decode_megastep(active_slots, advanced)
+        elif active_slots:
             active = np.zeros(self.n_slots, bool)
             active[active_slots] = True
             logits, self.pool = self.backend.decode(
                 self.pool, self.last_tok, self.pos, active)
             nxt = self._sample(logits)
             self.stats["decode_steps"] += 1
+            self.stats["megasteps"] += 1
             self.stats["active_slot_steps"] += len(active_slots)
             for s in active_slots:
                 tok = int(nxt[s])
@@ -304,13 +451,13 @@ class ServeEngine:
                 self.n_slots - len(self._pending_reset))
             self.pool = self.backend.reset(self.pool, np.asarray(slots))
             self._pending_reset.clear()
-        self.now += 1
+        self.now += advanced
 
     def run(self) -> Dict[int, List[int]]:
         """Tick until the queue drains and every slot retires."""
         while self.queue or self.sched.n_active:
-            if not self.sched.n_active and self.queue[0].arrival > self.now:
-                self.now = self.queue[0].arrival  # idle: jump to next arrival
+            if not self.sched.n_active and self.queue.peek().arrival > self.now:
+                self.now = self.queue.peek().arrival  # idle: jump to arrival
             self.step()
         return self.finished
 
@@ -326,18 +473,22 @@ def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
                 head: Optional[LogitHead] = None,
                 sampler: Optional[Sampler] = None,
                 eos_id: Optional[int] = None, mesh=None,
+                decode_chunk: int = 1,
                 sketch_head=None, sketch_cfg: Optional[SketchHeadConfig] = None,
                 fused=None, greedy=None, seed=None) -> ServeEngine:
     """Engine over a real model: the serving entry point (see launch.serve
     and the ``LM.engine`` / ``LM.serve`` facade).  ``mesh`` makes the whole
     engine SPMD-sharded: the slot pool's cache rows batch-shard over
     ``data``, head count arrays over ``model``, and the slot ops preserve
-    those shardings across insert/reset (DESIGN.md §9).  The pre-redesign
-    ``sketch_head=/sketch_cfg=/fused=/greedy=/seed=`` kwargs keep working
-    behind a DeprecationWarning."""
+    those shardings across insert/reset (DESIGN.md §9).  ``decode_chunk=K``
+    decodes K tokens per occupied slot between admission rounds in one
+    on-device megastep (launch/decode_loop.py, DESIGN.md §10); the default
+    1 keeps the per-token tick, bitwise-identical to the pre-megastep
+    engine.  The pre-redesign ``sketch_head=/sketch_cfg=/fused=/greedy=/
+    seed=`` kwargs keep working behind a DeprecationWarning."""
     head, sampler = resolve_legacy_serving_kwargs(
         head, sampler, sketch_head, sketch_cfg, fused, greedy, seed,
         "make_engine")
     backend = EngineBackend(params, cfg, head=head, mesh=mesh)
     return ServeEngine(backend, n_slots, max_seq, eos_id=eos_id,
-                       sampler=sampler)
+                       sampler=sampler, decode_chunk=decode_chunk)

@@ -25,9 +25,16 @@ sketch count arrays over ``model`` with one psum per decode step —
 DESIGN.md §9); on CPU force devices first with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--decode-chunk K`` moves the decode loop on-device in either mode: K
+steps per dispatch as one ``lax.scan`` megastep with sampling and EOS
+retirement fused in (launch/decode_loop.py, DESIGN.md §10) — ~1/K the
+host syncs, with token streams bitwise K-invariant (static mode always;
+engine mode except seeded sampling when a mid-chunk EOS shifts a
+re-admission — docs/serving.md).
+
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
       --batch 4 --prompt-len 32 --gen 16 [--sketch-head] [--backend fused] \
-      [--temperature 0.8 --top-k 40 --top-p 0.95] \
+      [--temperature 0.8 --top-k 40 --top-p 0.95] [--decode-chunk 8] \
       [--engine --requests 8 --arrival-every 2] [--mesh 4x2]
 """
 
@@ -54,7 +61,7 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
              encoder_states=None, *, head: Optional[LogitHead] = None,
              sampler: Optional[Sampler] = None,
              eos_id: Optional[int] = None, pad_id: int = 0,
-             return_stats: bool = False, mesh=None,
+             return_stats: bool = False, mesh=None, decode_chunk: int = 1,
              sketch_head_params=None,
              sketch_cfg: Optional[SketchHeadConfig] = None,
              fused=None, greedy=None, seed=None):
@@ -68,6 +75,13 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
     (the engine's parked-slot discipline), and the loop exits early once
     every row is done — finished sequences stop counting toward decode
     work.  ``return_stats=True`` additionally returns ``{"decode_steps"}``.
+
+    ``decode_chunk=K`` (> 1) runs the decode loop on device: sampling and
+    EOS retirement fuse into K-step ``lax.scan`` megasteps
+    (launch/decode_loop.py, DESIGN.md §10) so only token blocks cross to
+    host — same streams, 1/K the host syncs and dispatches.  The default
+    ``decode_chunk=1`` keeps the per-token host loop (the bitwise-parity
+    reference the megastep is tested against).
 
     ``mesh`` serves SPMD over a ``(data, model)`` device mesh: params and
     head arrays are placed per ``sharding/rules.py`` (a no-op when the LM
@@ -84,6 +98,8 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
         "generate()")
     head = head or DenseHead()
     sampler = sampler or Sampler()
+    if decode_chunk < 1:
+        raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
     b, p = prompts.shape
     max_seq = p + gen_len
     cache = init_decode_cache(cfg, b, max_seq)
@@ -105,6 +121,15 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
     # online-softmax chunked path above the same thresholds as training.
     logits, cache = prefill(params, prompts, encoder_states=encoder_states,
                             cache=cache)
+
+    if decode_chunk > 1:
+        from repro.launch.decode_loop import decode_chunks
+        tail, stats = decode_chunks(
+            params, cache, logits, cfg=cfg, head=head, sampler=sampler,
+            gen_len=gen_len, start_pos=p, chunk=decode_chunk, eos_id=eos_id,
+            pad_id=pad_id, mesh=mesh, encoder_states=encoder_states)
+        tokens = jnp.concatenate([prompts.astype(jnp.int32), tail], axis=1)
+        return (tokens, stats) if return_stats else tokens
 
     key = sampler.init_key()
     out = [prompts]
@@ -194,7 +219,8 @@ def run_engine(lm, args, sampler: Sampler) -> None:
     engine: staggered arrivals, skewed generation lengths, recycled slots."""
     n_requests = args.requests or 2 * args.batch
     max_seq = args.prompt_len + args.gen
-    engine = lm.engine(n_slots=args.batch, max_seq=max_seq, sampler=sampler)
+    engine = lm.engine(n_slots=args.batch, max_seq=max_seq, sampler=sampler,
+                       decode_chunk=args.decode_chunk)
     rng = np.random.default_rng(args.seed)
     for i in range(n_requests):
         prompt = rng.integers(0, lm.cfg.vocab_size, args.prompt_len,
@@ -211,7 +237,9 @@ def run_engine(lm, args, sampler: Sampler) -> None:
           f"{len(finished)} requests over {args.batch} slots: "
           f"{n_generated} tokens in {dur:.1f}s "
           f"({n_generated / dur:.1f} tok/s incl. compile), "
-          f"{engine.stats['decode_steps']} decode steps, "
+          f"{engine.stats['decode_steps']} decode steps in "
+          f"{engine.stats['megasteps']} dispatches (chunk "
+          f"{engine.decode_chunk}), "
           f"slot utilization {engine.slot_utilization:.2f}")
     first = finished[min(finished)]
     print("sample token ids:", np.asarray(first[:24]))
@@ -249,6 +277,10 @@ def main() -> None:
                     help="engine mode: number of requests (default 2×batch)")
     ap.add_argument("--arrival-every", type=int, default=1,
                     help="engine mode: ticks between request arrivals")
+    ap.add_argument("--decode-chunk", type=int, default=1,
+                    help="decode K tokens per on-device megastep "
+                         "(launch/decode_loop.py, DESIGN.md §10); 1 = the "
+                         "per-token host loop (bitwise-parity default)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -292,7 +324,7 @@ def main() -> None:
 
     t0 = time.time()
     out = lm.generate(prompts, args.gen, sampler=sampler,
-                      encoder_states=enc)
+                      encoder_states=enc, decode_chunk=args.decode_chunk)
     dur = time.time() - t0
     total_tokens = args.batch * (args.prompt_len + args.gen)
     print(f"arch={cfg.name} head={lm.head.describe()} served {args.batch} "

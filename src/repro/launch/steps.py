@@ -226,20 +226,49 @@ def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
     return logits, new_cache
 
 
+class ServeFns(tuple):
+    """The jitted serving callables for one (cfg, head, mesh, chunk) spec.
+
+    Unpacks as the legacy 4-tuple ``(prefill, decode, insert, reset)``;
+    the on-device K-step decode loop is the extra ``megastep`` attribute
+    (``None`` at ``decode_chunk=1`` — the bitwise-parity host-loop default).
+    ``decode`` / ``insert`` / ``reset`` / ``megastep`` **donate** their
+    cache/pool argument: the passed-in cache is consumed and callers must
+    rebind to the returned one (launch/decode_loop.py).
+    """
+
+    def __new__(cls, prefill, decode, insert, reset, megastep=None):
+        self = super().__new__(cls, (prefill, decode, insert, reset))
+        self.prefill, self.decode = prefill, decode
+        self.insert, self.reset = insert, reset
+        self.megastep = megastep
+        return self
+
+
 def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
-                     fused=None, *, mesh=None):
-    """Jitted (prefill, decode, slot_insert, slot_reset) for one serving
-    config.  Memoized on ``(cfg, head spec, mesh)`` — all hashable — so
-    every ``generate()`` call and every engine instance for the same
-    (model, head, mesh) triple reuses one compile cache; a fresh
-    ``jax.jit(partial(...))`` per call would recompile each time.  The
+                     fused=None, *, mesh=None, sampler=None,
+                     decode_chunk: int = 1, eos_id: Optional[int] = None):
+    """Jitted (prefill, decode, slot_insert, slot_reset[, megastep]) for one
+    serving config.  Memoized on ``(cfg, head spec, mesh, sampler,
+    decode_chunk, eos_id)`` — all hashable — so every ``generate()`` call
+    and every engine instance for the same spec reuses one compile cache; a
+    fresh ``jax.jit(partial(...))`` per call would recompile each time.  The
     head's frozen arrays are *not* part of the key: pass them per call as
     ``head_params``.
+
+    ``decode`` and the slot ops **donate** their cache/pool argument —
+    the update happens in place instead of copying the full cache per
+    token — so a cache passed in is consumed; rebind to the returned one.
+    With ``decode_chunk > 1`` (needs ``sampler``), the returned struct's
+    ``megastep`` is the on-device K-step decode loop
+    (``launch.decode_loop.jitted_megastep``) fusing that sampler and the
+    ``eos_id`` retirement into one ``lax.scan`` dispatch.
 
     With ``mesh``, every returned fn is mesh-aware: prefill/decode constrain
     their output cache to the serving cache shardings, stateful heads run
     their shard_map path, and the slot ops preserve the pool's shardings
-    across insert/reset instead of letting rows gather to one device.
+    across insert/reset instead of letting rows gather to one device —
+    donation aliases buffers shard-for-shard under the same constraints.
 
     Accepts the pre-redesign ``(cfg, sketch_cfg, fused)`` calling convention
     behind a DeprecationWarning.
@@ -253,7 +282,22 @@ def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
         head = (_legacy_sketch_spec(sketch_cfg, fused)
                 if sketch_cfg is not None else DenseHead())
     head = (head or DenseHead()).without_params()
-    return _jitted_serve_fns(cfg, head, mesh)
+    if decode_chunk < 1:
+        raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
+    if decode_chunk > 1 and sampler is None:
+        raise ValueError("decode_chunk > 1 fuses sampling into the decode "
+                         "scan; pass sampler=repro.api.Sampler(...)")
+    # The four core fns don't depend on (sampler, decode_chunk, eos_id), so
+    # they memoize on (cfg, head, mesh) alone — a new sampler spec must not
+    # recompile the model steps.  The megastep has its own memo cache in
+    # decode_loop.py keyed on the full spec.
+    fns = _jitted_serve_fns(cfg, head, mesh)
+    if decode_chunk == 1:
+        return fns   # the memoized instance itself (stable identity)
+    from repro.launch.decode_loop import jitted_megastep
+    return ServeFns(*fns, jitted_megastep(cfg, head, sampler, decode_chunk,
+                                          mesh=mesh, eos_id=eos_id,
+                                          masked=True))
 
 
 @functools.lru_cache(maxsize=None)
@@ -262,17 +306,17 @@ def _jitted_serve_fns(cfg: ModelConfig, head: LogitHead, mesh=None):
 
     prefill = jax.jit(functools.partial(prefill_step, cfg=cfg, mesh=mesh))
     decode = jax.jit(functools.partial(serve_step, cfg=cfg, head=head,
-                                       mesh=mesh))
+                                       mesh=mesh), donate_argnums=(1,))
 
     def slot_op(fn):
-        def op(*args):
-            out = fn(cfg, *args)
+        def op(pool, *args):
+            out = fn(cfg, pool, *args)
             return out if mesh is None else _constrain_cache(out, mesh)
-        return jax.jit(op)
+        return jax.jit(op, donate_argnums=(0,))
 
     insert = slot_op(cache_slot_insert)
     reset = slot_op(cache_slot_reset)
-    return prefill, decode, insert, reset
+    return ServeFns(prefill, decode, insert, reset)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,263 @@
+"""Chunked-decode parity: on-device megasteps vs the per-token host loop.
+
+The megastep (launch/decode_loop.py, DESIGN.md §10) fuses K decode steps,
+the Sampler, and EOS retirement into one ``lax.scan`` dispatch.  Its whole
+contract is that chunking is *invisible* in the tokens: greedy and seeded
+streams must be bitwise-equal across K ∈ {1, 4, 16} — K=1 being the
+pre-megastep host loop — for the dense and fused-sketch heads, through both
+the static ``generate`` path and the continuous-batching engine, including
+EOS firing mid-chunk.  Donation is load-bearing here too: every one of
+these runs exercises the donated decode/megastep/slot-op paths, so a
+use-after-donate anywhere in the serving loop fails loudly (jax deletes
+donated buffers on CPU).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import LM, Sampler, SketchHead, SketchHeadConfig
+from repro.configs import get_config
+from repro.core.sketch_lm_head import freeze_head
+from repro.launch.serve import generate
+
+_CHUNKS = [1, 4, 16]
+_HEAD_CFG = SketchHeadConfig(n_rows=32, n_buckets=8, k=1, proj_dim=16,
+                             bandwidth=2.0)
+_SAMPLERS = {
+    "greedy": Sampler(),
+    "seeded": Sampler(temperature=0.9, top_k=12, seed=7),
+}
+
+
+@pytest.fixture(scope="module")
+def served():
+    from repro.models.model import init_model
+
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    kp, ka, kj, kf = jax.random.split(jax.random.PRNGKey(42), 4)
+    kparams = {
+        "points": jax.random.normal(kp, (128, _HEAD_CFG.proj_dim)),
+        "alphas": jax.random.normal(ka, (128, cfg.vocab_size)) * 0.01,
+        "proj": jax.random.normal(kj, (cfg.d_model, _HEAD_CFG.proj_dim))
+        / np.sqrt(cfg.d_model),
+    }
+    head = SketchHead(cfg=_HEAD_CFG, backend="fused",
+                      params=freeze_head(kf, kparams, _HEAD_CFG))
+    return cfg, params, head
+
+
+def _lm(served, kind):
+    cfg, params, head = served
+    return LM(params, cfg) if kind == "dense" else LM(params, cfg, head)
+
+
+def _prompts(cfg, b=3, p=5):
+    return jax.random.randint(jax.random.PRNGKey(1), (b, p), 0,
+                              cfg.vocab_size)
+
+
+# --------------------------------------------------------------------------
+# the parity grid: K × head × sampler × {generate, engine}
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampler", sorted(_SAMPLERS))
+@pytest.mark.parametrize("kind", ["dense", "sketch-fused"])
+def test_generate_bitwise_equal_across_chunks(served, kind, sampler):
+    """Static generate: megastep streams == host-loop streams, bitwise."""
+    lm = _lm(served, kind)
+    prompts = _prompts(lm.cfg)
+    outs = [np.asarray(lm.generate(prompts, 9, sampler=_SAMPLERS[sampler],
+                                   decode_chunk=k)) for k in _CHUNKS]
+    for k, out in zip(_CHUNKS[1:], outs[1:]):
+        np.testing.assert_array_equal(
+            out, outs[0], err_msg=f"decode_chunk={k} diverged from the "
+            f"host loop ({kind}, {sampler})")
+
+
+@pytest.mark.parametrize("sampler", sorted(_SAMPLERS))
+@pytest.mark.parametrize("kind", ["dense", "sketch-fused"])
+def test_engine_bitwise_equal_across_chunks(served, kind, sampler):
+    """Engine: chunked ticks emit exactly the per-token-tick streams
+    (synchronized arrivals keep the admission order — and so the seeded
+    key chain — identical across K)."""
+    lm = _lm(served, kind)
+    b, p, g = 3, 5, 9
+    prompts = _prompts(lm.cfg, b, p)
+    reqs = [(np.asarray(prompts[i]), g) for i in range(b)]
+    base = lm.serve(reqs, n_slots=b, sampler=_SAMPLERS[sampler])
+    for k in _CHUNKS[1:]:
+        got = lm.serve(reqs, n_slots=b, sampler=_SAMPLERS[sampler],
+                       decode_chunk=k)
+        assert got == base, (f"engine decode_chunk={k} diverged "
+                             f"({kind}, {sampler})")
+
+
+def test_engine_chunked_matches_static_generate(served):
+    """Cross-path: the chunked engine reproduces the host-loop static
+    generate (the tightest end-to-end invariant — scheduler, megastep, and
+    slot ops all in the loop)."""
+    lm = _lm(served, "sketch-fused")
+    b, p, g = 3, 5, 9
+    prompts = _prompts(lm.cfg, b, p)
+    expected = np.asarray(lm.generate(prompts, g))
+    finished = lm.serve([(np.asarray(prompts[i]), g) for i in range(b)],
+                        n_slots=b, decode_chunk=4)
+    for i in range(b):
+        np.testing.assert_array_equal(np.asarray(finished[i]),
+                                      expected[i, p:])
+
+
+def test_engine_chunked_staggered_matches_solo_generate(served):
+    """Slot recycling under chunked ticks: every request of a staggered,
+    mixed-length stream still emits exactly its solo-generate stream."""
+    lm = _lm(served, "dense")
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, lm.cfg.vocab_size, 4 + (i % 3), dtype=np.int32),
+             3 + 2 * (i % 3), i) for i in range(5)]
+    finished = lm.serve(reqs, n_slots=2, decode_chunk=4)
+    for rid, (prompt, gen, _) in enumerate(reqs):
+        solo = np.asarray(lm.generate(prompt[None], gen))
+        np.testing.assert_array_equal(np.asarray(finished[rid]),
+                                      solo[0, len(prompt):])
+
+
+# --------------------------------------------------------------------------
+# EOS mid-chunk
+# --------------------------------------------------------------------------
+
+def test_eos_mid_chunk_generate(served):
+    """An EOS inside a chunk retires the row in-scan: the stream matches
+    the host loop's (pad tail included) at every K."""
+    lm = _lm(served, "dense")
+    prompts = _prompts(lm.cfg)
+    plain = np.asarray(lm.generate(prompts, 9))
+    eos = int(plain[0, 5 + 3])           # emitted mid-way through chunk 1
+    base = np.asarray(lm.generate(prompts, 9, eos_id=eos, pad_id=0))
+    assert (base[0] == 0).any()          # the EOS actually fired
+    for k in (4, 16):
+        got = np.asarray(lm.generate(prompts, 9, eos_id=eos, pad_id=0,
+                                     decode_chunk=k))
+        np.testing.assert_array_equal(got, base)
+
+
+def test_eos_mid_chunk_engine(served):
+    """Engine: mid-chunk EOS retires the request with exactly the K=1
+    stream (trailing in-chunk block entries are discarded, the slot resets
+    and is reusable)."""
+    lm = _lm(served, "dense")
+    b, p, g = 3, 5, 9
+    prompts = _prompts(lm.cfg, b, p)
+    plain = np.asarray(lm.generate(prompts, g))
+    eos = int(plain[0, p + 3])
+    reqs = [(np.asarray(prompts[i]), g) for i in range(b)]
+    base = lm.serve(reqs, n_slots=b, eos_id=eos)
+    assert any(s[-1] == eos and len(s) < g for s in base.values())
+    for k in (4, 16):
+        engine = lm.engine(n_slots=b, max_seq=p + g, eos_id=eos,
+                           decode_chunk=k)
+        rids = [engine.submit(pr, mx) for pr, mx in reqs]
+        got = engine.run()
+        assert {r: got[r] for r in rids} == base
+        assert engine.stats["admitted"] == engine.stats["retired"] == b
+        assert engine.sched.n_free == b   # every slot recycled
+
+
+def test_eos_with_queued_requests_chunked(served):
+    """Mid-chunk EOS while requests queue: a K=1 engine refills the freed
+    slot next tick, a chunked one at the chunk boundary.  Greedy streams
+    are still K-invariant per request (each depends only on its own
+    prompt), and seeded runs are reproducible per (seed, K) — the across-K
+    seeded caveat documented in docs/serving.md."""
+    lm = _lm(served, "dense")
+    p, g = 5, 9
+    prompts = _prompts(lm.cfg, 4, p)
+    eos = int(np.asarray(lm.generate(prompts, g))[0, p + 3])
+    reqs = [(np.asarray(prompts[i % 4]), g) for i in range(6)]  # 6 > slots
+
+    base = lm.serve(reqs, n_slots=2, eos_id=eos)
+    for k in (4, 16):
+        got = lm.serve(reqs, n_slots=2, eos_id=eos, decode_chunk=k)
+        assert got == base, f"greedy streams must be K-invariant (K={k})"
+
+    seeded = Sampler(temperature=0.9, seed=11)
+    a = lm.serve(reqs, n_slots=2, eos_id=eos, sampler=seeded, decode_chunk=4)
+    b = lm.serve(reqs, n_slots=2, eos_id=eos, sampler=seeded, decode_chunk=4)
+    assert a == b, "seeded chunked runs must reproduce per (seed, K)"
+
+
+# --------------------------------------------------------------------------
+# donation: the cache is consumed, and the loop never reuses it
+# --------------------------------------------------------------------------
+
+def test_jitted_serve_fns_decode_chunk_knob(served):
+    """The public decode_chunk knob on jitted_serve_fns: the returned
+    struct unpacks as the legacy 4-tuple, shares the (cfg, head, mesh)
+    compile cache across sampler specs (a new sampler must not recompile
+    the model steps), and carries the memoized megastep."""
+    from repro.api.heads import DenseHead
+    from repro.launch.decode_loop import jitted_megastep
+    from repro.launch.steps import jitted_serve_fns
+
+    cfg, _, _ = served
+    base = jitted_serve_fns(cfg)
+    assert base is jitted_serve_fns(cfg)          # stable identity at K=1
+    a = jitted_serve_fns(cfg, sampler=Sampler(), decode_chunk=8)
+    b = jitted_serve_fns(cfg, sampler=Sampler(temperature=0.5, seed=2),
+                         decode_chunk=8)
+    prefill, decode, insert, reset = a            # legacy unpacking
+    assert (decode is base.decode) and (b.decode is base.decode)
+    assert a.megastep is jitted_megastep(cfg, DenseHead(), Sampler(), 8,
+                                         masked=True)
+    assert b.megastep is not a.megastep           # sampler is in its key
+    with pytest.raises(ValueError, match="sampler"):
+        jitted_serve_fns(cfg, decode_chunk=8)
+    with pytest.raises(ValueError, match="decode_chunk"):
+        jitted_serve_fns(cfg, decode_chunk=0)
+
+
+def test_decode_and_slot_ops_donate_cache(served):
+    """decode/insert/reset/megastep donate their cache argument: the
+    passed-in buffers are deleted (jax implements donation on CPU), so the
+    per-token full-cache copy is gone."""
+    from repro.launch.decode_loop import jitted_megastep
+    from repro.launch.steps import jitted_serve_fns
+    from repro.models.model import init_decode_cache
+
+    cfg, params, _ = served
+    prefill, decode, insert, reset = jitted_serve_fns(cfg)
+    deleted = lambda c: all(leaf.is_deleted() for leaf in jax.tree.leaves(c))
+
+    logits, cache = prefill(params, _prompts(cfg, 2, 4),
+                            cache=init_decode_cache(cfg, 2, 8))
+    old = cache
+    _, cache = decode(params, cache, jnp.ones((2, 1), jnp.int32),
+                      jnp.asarray(4, jnp.int32))
+    assert deleted(old)
+
+    old = cache
+    cache = reset(cache, jnp.asarray([0, 1]))
+    assert deleted(old)
+
+    fn = jitted_megastep(cfg, LM(params, cfg).head, Sampler(), 4,
+                         masked=True)
+    old = cache
+    _, cache, *_ = fn(params, cache, jnp.zeros(2, jnp.int32),
+                      jnp.full(2, 4, jnp.int32), Sampler().init_key(),
+                      active=jnp.asarray([True, True]))
+    assert deleted(old)
+
+
+def test_engine_survives_donation_end_to_end(served):
+    """A full chunked engine run over recycled slots: any use-after-donate
+    in admit → megastep → retire → reset would raise on CPU (donated
+    buffers are deleted), so completion + correct streams is the proof."""
+    lm = _lm(served, "sketch-fused")
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, lm.cfg.vocab_size, 5, dtype=np.int32),
+             4 + (i % 4), i % 3) for i in range(6)]
+    finished = lm.serve(reqs, n_slots=2, decode_chunk=4)
+    assert sorted(finished) == list(range(6))
+    assert all(len(finished[i]) == reqs[i][1] for i in range(6))

@@ -16,7 +16,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.sketch_lm_head import freeze_head
-from repro.launch.engine import make_engine
+from repro.launch.engine import ServeEngine, make_engine
 from repro.launch.serve import generate
 from repro.launch.steps import jitted_serve_fns
 from repro.models.config import SketchHeadConfig
@@ -120,12 +120,15 @@ def test_slot_insert_leaves_other_slots_bitwise_unchanged(arch, plen):
     pos = jnp.asarray([plen, plen, 0], jnp.int32)
     partial = jnp.asarray([True, True, False])
     # One decode step mid-stream, then branch: with vs without an admission.
+    # decode/insert donate their cache argument (DESIGN.md §10), so each
+    # branch gets its own copy of the shared mid-stream pool.
     l1, pool = decode(params, pool, tok, pos, active=partial)
     tok = jnp.concatenate([jnp.argmax(l1[:2], -1).astype(jnp.int32),
                            jnp.zeros((1,), jnp.int32)])[:, None]
     pos = jnp.asarray([plen + 1, plen + 1, 0], jnp.int32)
 
-    l_a, _ = decode(params, pool, tok, pos, active=partial)
+    l_a, _ = decode(params, jax.tree.map(jnp.copy, pool), tok, pos,
+                    active=partial)
 
     new_prompt = jax.random.randint(jax.random.PRNGKey(2), (1, plen), 0,
                                     cfg.vocab_size)
@@ -154,6 +157,93 @@ def test_retired_slots_reset_to_fresh_cache(arch):
     for got, want in zip(jax.tree.leaves(engine.pool),
                          jax.tree.leaves(fresh)):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class _CounterBackend:
+    """Numpy fake (mirrors test_engine_properties.FakeBackend): each slot's
+    "cache" is a counter, the emitted token is the (modded) counter — so a
+    request's stream has the closed form ``(last_prompt_tok + 1 + i) % V``
+    and 1k-request traces run without a model in the loop."""
+
+    vocab_size = 17
+
+    def init_pool(self, n_slots, max_seq):
+        return np.zeros(n_slots, np.int64)
+
+    def prefill(self, prompts, max_seq):
+        prompts = np.asarray(prompts)
+        state = prompts[:, -1].astype(np.int64) + 1
+        logits = np.zeros((prompts.shape[0], self.vocab_size), np.float32)
+        logits[np.arange(len(state)), state % self.vocab_size] = 1.0
+        return logits, state
+
+    def insert(self, pool, filled, slots):
+        pool = pool.copy()
+        pool[np.asarray(slots)] = filled
+        return pool
+
+    def reset(self, pool, slots):
+        pool = pool.copy()
+        pool[np.asarray(slots)] = 0
+        return pool
+
+    def decode(self, pool, tokens, pos, active):
+        nxt = (pool + 1) % self.vocab_size
+        logits = np.zeros((len(nxt), self.vocab_size), np.float32)
+        logits[np.arange(len(nxt)), nxt] = 1.0
+        return logits, np.where(active, pool + 1, pool)
+
+
+def test_request_queue_orders_1k_trace_fifo_on_ties():
+    """Regression for the O(n²) queue: ``bisect.insort`` + ``list.pop(0)``
+    became a heap.  Semantics pinned on a 1k-request trace with heavy
+    arrival ties: pops come out arrival-sorted, submission order preserved
+    within an arrival tick (the old insort-right behavior)."""
+    import itertools
+
+    from repro.launch.engine import Request, RequestQueue
+
+    rng = np.random.default_rng(0)
+    arrivals = rng.integers(0, 40, 1000)
+    q = RequestQueue()
+    for rid, a in enumerate(arrivals):
+        q.push(Request(rid, np.zeros(1, np.int32), 1, int(a)))
+    assert len(q) == 1000 and q.peek().arrival == int(arrivals.min())
+    # The legacy list-style views agree with pop order (and slices, which
+    # would silently leak raw heap tuples, are rejected).
+    snapshot = list(q)
+    assert q[0] is snapshot[0] and q[-1] is snapshot[-1]
+    with pytest.raises(TypeError):
+        q[:2]
+    order = [q.pop() for _ in range(len(q))]
+    assert not q
+    assert [r.rid for r in snapshot] == [r.rid for r in order]
+    assert [r.arrival for r in order] == sorted(arrivals.tolist())
+    for _, group in itertools.groupby(order, key=lambda r: r.arrival):
+        rids = [r.rid for r in group]
+        assert rids == sorted(rids), "FIFO tie-break broken"
+
+
+@pytest.mark.parametrize("decode_chunk", [1, 4])
+def test_engine_drains_1k_request_trace(decode_chunk):
+    """A 1k-request arrival stream through the real scheduler (numpy fake
+    backend): every request retires exactly once with its exact stream —
+    at the per-token tick and under chunked megastep ticks (the emulated
+    megastep path backends without a fused one fall back to)."""
+    engine = ServeEngine(_CounterBackend(), n_slots=4, max_seq=16,
+                         decode_chunk=decode_chunk)
+    rng = np.random.default_rng(1)
+    reqs = []
+    for _ in range(1000):
+        last = int(rng.integers(0, 17))
+        gen = int(rng.integers(1, 6))
+        arrival = int(rng.integers(0, 3000))
+        rid = engine.submit(np.full(2, last, np.int32), gen, arrival=arrival)
+        reqs.append((rid, last, gen))
+    finished = engine.run()
+    assert engine.stats["admitted"] == engine.stats["retired"] == 1000
+    for rid, last, gen in reqs:
+        assert finished[rid] == [(last + 1 + i) % 17 for i in range(gen)]
 
 
 def test_generate_sampling_seeded():

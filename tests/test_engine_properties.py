@@ -85,7 +85,8 @@ def _traffic(draw):
                      draw(st.integers(0, 10)),       # arrival tick
                      draw(st.integers(0, _VOCAB - 1))))  # last prompt token
     use_eos = draw(st.booleans())
-    return n_slots, reqs, use_eos
+    decode_chunk = draw(st.integers(1, 4))           # chunked ticks too
+    return n_slots, reqs, use_eos, decode_chunk
 
 
 def _expected_tokens(last, max_new, eos_id):
@@ -98,9 +99,10 @@ def _expected_tokens(last, max_new, eos_id):
 @_SMALL
 @given(_traffic())
 def test_engine_scheduler_invariants(traffic):
-    n_slots, reqs, use_eos = traffic
+    n_slots, reqs, use_eos, decode_chunk = traffic
     eos_id = 3 if use_eos else None
-    engine = ServeEngine(FakeBackend(), n_slots, max_seq=16, eos_id=eos_id)
+    engine = ServeEngine(FakeBackend(), n_slots, max_seq=16, eos_id=eos_id,
+                         decode_chunk=decode_chunk)
     rids = []
     for plen, max_new, arrival, last in reqs:
         prompt = np.full(plen, last, np.int32)  # only the last token matters

@@ -215,6 +215,34 @@ def test_engine_pool_shardings_preserved(served, mesh):
     check(engine.pool)
 
 
+def test_chunked_engine_on_mesh_matches_k1_and_keeps_shardings(served, mesh):
+    """Decode megasteps on the mesh (DESIGN.md §10): chunked engine streams
+    equal the per-token-tick streams bitwise ON the mesh, the donated pool
+    is never reused after a megastep (donation deletes buffers — any
+    use-after-donate raises), and the pool keeps its cache shardings
+    through admit → megastep → reset cycles."""
+    from repro.sharding.rules import cache_shardings
+
+    cfg, params, head_params = served
+    head = SketchHead(cfg=_HEAD_CFG, backend="ref", params=head_params)
+    lm = LM(params, cfg, head).with_mesh(mesh)
+    b, p, g = 4, 6, 5
+    rng = np.random.default_rng(2)
+    reqs = [(rng.integers(0, cfg.vocab_size, p, dtype=np.int32), g)
+            for _ in range(b)]
+    base = lm.serve(reqs, n_slots=b)
+    engine = lm.engine(n_slots=b, max_seq=p + g, decode_chunk=4)
+    for prompt, gen in reqs:
+        engine.submit(prompt, gen)
+    got = engine.run()
+    assert got == base
+    expected = cache_shardings(engine.pool, mesh)
+    ok = jax.tree.map(
+        lambda leaf, want: leaf.sharding.is_equivalent_to(want, leaf.ndim),
+        engine.pool, expected)
+    assert all(jax.tree.leaves(ok))
+
+
 # --------------------------------------------------------------------------
 # mesh spec parsing
 # --------------------------------------------------------------------------
