@@ -20,20 +20,33 @@ Version history:
                  dispatches), and BENCH_engine.json gains the ``megastep``
                  sweep: {str(K): engine run record} for K ∈ the swept
                  chunk sizes
+  4            — speculative self-decode (DESIGN.md §11):
+                 BENCH_engine.json gains the ``spec_decode`` sweep
+                 {str(K): spec run record} and a ``dense_megastep``
+                 baseline sweep at the same Ks; spec run records carry
+                 ``acceptance_rate`` and ``accepted_tokens_per_verify``;
+                 BENCH_sketch_serve.json gains a ``spec_decode`` section
+                 with the same two fields
 
 ``validate_engine_record`` / ``validate_serve_record`` are the structural
-checks the CI bench-smoke job runs on freshly emitted artifacts:
+checks the CI bench-smoke job runs on freshly emitted artifacts.  The CLI
+validates *every* path before exiting and reports all failures (exit 1 on
+any):
 
-  PYTHONPATH=src python -m benchmarks.schema BENCH_engine.json
+  PYTHONPATH=src python -m benchmarks.schema BENCH_engine.json \
+      BENCH_sketch_serve.json
 """
 
 from __future__ import annotations
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
-#: Fields every timed serving-run record must carry (schema v3).
+#: Fields every timed serving-run record must carry (schema v3+).
 _RUN_FIELDS = ("seconds", "tokens", "tok_s", "decode_steps")
 _ENGINE_RUN_FIELDS = _RUN_FIELDS + ("megasteps", "host_syncs_per_token")
+#: Extra fields a speculative-decode run record must carry (schema v4).
+_SPEC_RUN_FIELDS = _ENGINE_RUN_FIELDS + (
+    "spec_decode", "acceptance_rate", "accepted_tokens_per_verify")
 
 
 def mesh_record(mesh=None) -> dict:
@@ -63,15 +76,26 @@ def _validate_common(record: dict, name: str) -> None:
     _require(record["head"], ("kind", "backend"), f"{name}.head")
 
 
+def _validate_spec_run(run: dict, where: str) -> None:
+    """One speculative-decode run record (schema v4)."""
+    _require(run, _SPEC_RUN_FIELDS, where)
+    if not 0.0 <= run["acceptance_rate"] <= 1.0:
+        raise ValueError(f"{where}: acceptance_rate "
+                         f"{run['acceptance_rate']} outside [0, 1]")
+    if run["accepted_tokens_per_verify"] < 0:
+        raise ValueError(f"{where}: negative accepted_tokens_per_verify")
+
+
 def validate_engine_record(record: dict) -> None:
-    """Structural check for a BENCH_engine.json record (schema v3).
+    """Structural check for a BENCH_engine.json record (schema v4).
 
     Raises ``ValueError`` naming the first missing/mismatched field; used
     by the CI bench-smoke job on freshly emitted artifacts.
     """
     name = "BENCH_engine"
     _validate_common(record, name)
-    _require(record, ("decode_chunk", "static", "engine", "megastep"), name)
+    _require(record, ("decode_chunk", "static", "engine", "megastep",
+                      "spec_decode", "dense_megastep"), name)
     _require(record["static"], _RUN_FIELDS, f"{name}.static")
     _require(record["engine"], _ENGINE_RUN_FIELDS, f"{name}.engine")
     if not record["megastep"]:
@@ -84,16 +108,42 @@ def validate_engine_record(record: dict) -> None:
         if run["decode_chunk"] != int(k):
             raise ValueError(f"{name}.megastep[{k}]: decode_chunk "
                              f"{run['decode_chunk']} != key {k}")
+    if not record["spec_decode"]:
+        raise ValueError(f"{name}.spec_decode: empty sweep")
+    for k, run in record["spec_decode"].items():
+        if int(k) < 1:
+            raise ValueError(f"{name}.spec_decode[{k}]: bad draft length")
+        _validate_spec_run(run, f"{name}.spec_decode[{k}]")
+        if run["spec_decode"] != int(k):
+            raise ValueError(f"{name}.spec_decode[{k}]: spec_decode "
+                             f"{run['spec_decode']} != key {k}")
+    for k, run in record["dense_megastep"].items():
+        _require(run, _ENGINE_RUN_FIELDS + ("decode_chunk",),
+                 f"{name}.dense_megastep[{k}]")
 
 
 def validate_serve_record(record: dict) -> None:
-    """Structural check for a BENCH_sketch_serve.json record (schema v3)."""
-    _validate_common(record, "BENCH_sketch_serve")
-    _require(record, ("decode_chunk", "us_dense", "us_sketch"),
-             "BENCH_sketch_serve")
+    """Structural check for a BENCH_sketch_serve.json record (schema v4)."""
+    name = "BENCH_sketch_serve"
+    _validate_common(record, name)
+    _require(record, ("decode_chunk", "us_dense", "us_sketch",
+                      "spec_decode"), name)
+    spec = record["spec_decode"]
+    _require(spec, ("k", "acceptance_rate", "accepted_tokens_per_verify"),
+             f"{name}.spec_decode")
+    if not 0.0 <= spec["acceptance_rate"] <= 1.0:
+        raise ValueError(f"{name}.spec_decode: acceptance_rate "
+                         f"{spec['acceptance_rate']} outside [0, 1]")
 
 
-def main(argv=None) -> None:
+def main(argv=None) -> int:
+    """Validate every path, report all failures, exit non-zero on any.
+
+    Unlike a plain loop that lets the first ``ValueError`` propagate (which
+    would skip the remaining files), every artifact is checked and every
+    failure printed before the exit code is decided — CI gets the full
+    damage report in one run.
+    """
     import argparse
     import json
     from pathlib import Path
@@ -103,14 +153,26 @@ def main(argv=None) -> None:
                     f"v{SCHEMA_VERSION}")
     ap.add_argument("paths", nargs="+")
     args = ap.parse_args(argv)
+    failures = 0
     for path in args.paths:
-        record = json.loads(Path(path).read_text())
-        if "megastep" in record or "engine" in record:
-            validate_engine_record(record)
+        try:
+            record = json.loads(Path(path).read_text())
+            if "megastep" in record or "engine" in record:
+                validate_engine_record(record)
+            else:
+                validate_serve_record(record)
+        except (ValueError, KeyError, OSError,
+                json.JSONDecodeError) as exc:
+            print(f"{path}: INVALID — {exc}")
+            failures += 1
         else:
-            validate_serve_record(record)
-        print(f"{path}: valid (schema v{record['schema_version']})")
+            print(f"{path}: valid (schema v{record['schema_version']})")
+    if failures:
+        print(f"{failures} of {len(args.paths)} artifacts failed "
+              f"schema v{SCHEMA_VERSION} validation")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    sys.exit(main())

@@ -6,10 +6,15 @@ Times the three serving decode paths —
   2-kernel   lsh_hash → HBM (B, L) idx → sketch_head  (separate kernels)
   fused      one pallas_call: transform→hash→gather   (repro.kernels.fused_decode)
 
-— and emits ``BENCH_sketch_serve.json`` at the repo root.  Wall-clock is the
-jnp/ref path on CPU (interpret-mode Pallas timing is not a TPU proxy); the
-analytic FLOP/byte terms are the deployment-relevant comparison, including
-the HBM round trip on the index tensor that fusion eliminates.
+— and emits ``BENCH_sketch_serve.json`` (schema v4) at the repo root.
+Wall-clock is the jnp/ref path on CPU (interpret-mode Pallas timing is not
+a TPU proxy); the analytic FLOP/byte terms are the deployment-relevant
+comparison, including the HBM round trip on the index tensor that fusion
+eliminates.  The v4 ``spec_decode`` section measures the head as a
+*speculative draft model* (DESIGN.md §11): a distilled head's greedy
+agreement with the dense argmax over K-token blocks gives the
+``acceptance_rate`` / ``accepted_tokens_per_verify`` a spec-decode serving
+loop would see at this head quality.
 """
 
 from __future__ import annotations
@@ -49,6 +54,40 @@ def _time_group(fns, *args, n=20, reps=5):
             jax.block_until_ready(out)
             best[i] = min(best[i], (time.perf_counter() - t0) / n)
     return [b * 1e6 for b in best]
+
+
+def _spec_agreement(table, cfg, d_model, vocab, spec_k: int = 4,
+                    n_eval: int = 512, distill_steps: int = 300) -> dict:
+    """Greedy draft-acceptance stats for a distilled head (schema v4).
+
+    Distills a head against ``table`` (the quality path the serving loop's
+    in-process distillation uses), then measures argmax agreement with the
+    dense logits over ``n_eval`` hiddens grouped into K-token blocks: the
+    leading-match run per block is exactly what greedy spec-decode commits
+    per verify (DESIGN.md §11, minus the free bonus token).
+    """
+    from repro.core.distill import DistillConfig
+    from repro.core.sketch_lm_head import apply_head, distill_head
+
+    hiddens = jax.random.normal(jax.random.PRNGKey(11), (1024, d_model))
+    kparams, _ = distill_head(
+        jax.random.PRNGKey(12), table, hiddens, cfg, n_points=256,
+        distill_cfg=DistillConfig(n_steps=distill_steps, lr=5e-3))
+    frozen = freeze_head(jax.random.PRNGKey(13), kparams, cfg)
+
+    ev = jax.random.normal(jax.random.PRNGKey(14), (n_eval, d_model))
+    dense_tok = jnp.argmax(ev @ table.T, axis=-1)
+    sketch_tok = jnp.argmax(
+        apply_head(frozen, ev, cfg, backend="ref", kernel_backend="ref"),
+        axis=-1)
+    match = np.asarray(dense_tok == sketch_tok)
+    blocks = match[: (len(match) // spec_k) * spec_k].reshape(-1, spec_k)
+    leading = np.cumprod(blocks, axis=1).sum(axis=1)   # accepted per verify
+    return {"k": spec_k,
+            "acceptance_rate": float(leading.mean() / spec_k),
+            "accepted_tokens_per_verify": float(leading.mean()),
+            "argmax_agreement": float(match.mean()),
+            "distill_steps": distill_steps, "n_eval": int(n_eval)}
 
 
 def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
@@ -102,6 +141,7 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
                                                kernel_backend="ref",
                                                mesh=mesh))
         us_sharded = _time(sharded, hidden)
+    spec = _spec_agreement(table, cfg, d_model, vocab)
     costs = head_costs(cfg, d_model, vocab)
     # HBM traffic the fusion removes: write + read of the (B, L) int32 index
     # tensor between the lsh_hash and sketch_head kernel launches.
@@ -118,6 +158,10 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
           f"{costs['sketch_params']/1e6:.1f}M  ({costs['param_ratio']:.1f}x)")
     print(f"  flops/token: dense {costs['dense_flops']/1e6:.2f}M vs sketch "
           f"{costs['sketch_flops']/1e6:.2f}M  ({costs['flop_ratio']:.1f}x)")
+    print(f"  spec draft (K={spec['k']}, distilled): acceptance "
+          f"{spec['acceptance_rate']:.2f}, "
+          f"{spec['accepted_tokens_per_verify']:.2f} accepted tok/verify "
+          f"(argmax agreement {spec['argmax_agreement']:.2f})")
 
     result = {
         "schema_version": SCHEMA_VERSION,
@@ -140,11 +184,14 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
         "fused_vs_two_kernel_speedup": us_two / us_fused,
         "us_sharded": us_sharded,
         "idx_hbm_bytes_saved_per_step": idx_bytes,
+        "spec_decode": spec,
         "note": "us_two_kernel/us_fused are dispatch-level (kernel-boundary)"
                 " timings of the jnp reference paths on CPU; under one jit"
                 " both lower to the same graph, and interpret-mode Pallas is"
                 " not a TPU proxy — the analytic flop/byte terms are the"
-                " deployment comparison.",
+                " deployment comparison.  spec_decode measures a distilled"
+                " head's greedy draft acceptance against the dense argmax"
+                " over K-token blocks (DESIGN.md §11; schema v4).",
         **costs,
     }
     BENCH_JSON.write_text(json.dumps(result, indent=1))

@@ -148,7 +148,9 @@ class LM:
     def generate(self, prompts, max_new_tokens: int, *,
                  sampler: Optional[Sampler] = None,
                  eos_id: Optional[int] = None, pad_id: int = 0,
-                 encoder_states=None, decode_chunk: int = 1) -> jnp.ndarray:
+                 encoder_states=None, decode_chunk: int = 1,
+                 spec_decode: int = 0,
+                 return_stats: bool = False) -> jnp.ndarray:
         """Bulk prefill + decode one (B, P) batch → (B, P + max_new_tokens).
 
         Args:
@@ -164,9 +166,18 @@ class LM:
             the on-device ``lax.scan`` megastep with sampling and EOS
             retirement fused in (launch/decode_loop.py, DESIGN.md §10);
             1 (default) is the per-token host loop, bitwise reference.
+          spec_decode: speculative self-decode draft length — ``K > 0``
+            drafts K tokens per dispatch through this LM's ``head`` and
+            verifies the block with one batched dense pass (DESIGN.md
+            §11); the emitted stream is bitwise the dense stream.
+            Mutually exclusive with ``decode_chunk > 1``.
+          return_stats: also return the decode stats dict (with
+            ``spec_decode``: ``verify_calls`` / ``draft_tokens`` /
+            ``accepted_draft_tokens``).
 
         Returns:
-          (B, P + max_new_tokens) int32 tokens (prompt included).
+          (B, P + max_new_tokens) int32 tokens (prompt included); with
+          ``return_stats``, a ``(tokens, stats)`` pair.
         """
         from repro.launch.serve import generate
 
@@ -176,13 +187,15 @@ class LM:
         return generate(self.params, self.cfg, prompts, max_new_tokens,
                         encoder_states=encoder_states, head=self.head,
                         sampler=sampler, eos_id=eos_id, pad_id=pad_id,
-                        mesh=self.mesh, decode_chunk=decode_chunk)
+                        mesh=self.mesh, decode_chunk=decode_chunk,
+                        spec_decode=spec_decode, return_stats=return_stats)
 
     # -- continuous batching -------------------------------------------------
 
     def engine(self, n_slots: int, max_seq: int, *,
                sampler: Optional[Sampler] = None,
-               eos_id: Optional[int] = None, decode_chunk: int = 1):
+               eos_id: Optional[int] = None, decode_chunk: int = 1,
+               spec_decode: int = 0):
         """A fresh continuous-batching ServeEngine over this (model, head).
 
         Args:
@@ -194,6 +207,10 @@ class LM:
             rounds — ``K > 1`` runs one on-device megastep per tick
             (DESIGN.md §10); 1 (default) keeps the bitwise-parity
             per-token tick.
+          spec_decode: speculative self-decode draft length — every tick
+            drafts K tokens through this LM's ``head`` and dense-verifies
+            them (DESIGN.md §11); mutually exclusive with
+            ``decode_chunk > 1``.
 
         Returns:
           A ``repro.launch.engine.ServeEngine`` (mesh-aware when this LM
@@ -204,13 +221,14 @@ class LM:
         return make_engine(self.params, self.cfg, n_slots=n_slots,
                            max_seq=max_seq, head=self.head,
                            sampler=sampler, eos_id=eos_id, mesh=self.mesh,
-                           decode_chunk=decode_chunk)
+                           decode_chunk=decode_chunk,
+                           spec_decode=spec_decode)
 
     def serve(self, requests: Iterable[RequestLike], *, n_slots: int = 4,
               max_seq: Optional[int] = None,
               sampler: Optional[Sampler] = None,
-              eos_id: Optional[int] = None,
-              decode_chunk: int = 1) -> Dict[int, List[int]]:
+              eos_id: Optional[int] = None, decode_chunk: int = 1,
+              spec_decode: int = 0) -> Dict[int, List[int]]:
         """Serve a request stream through the engine.
 
         Args:
@@ -221,6 +239,7 @@ class LM:
           sampler: token-selection policy (greedy if omitted).
           eos_id: optional early-retirement token.
           decode_chunk: engine megastep size (see :meth:`engine`).
+          spec_decode: speculative draft length (see :meth:`engine`).
 
         Returns:
           Per request id (submission order), the generated tokens (prompt
@@ -236,7 +255,8 @@ class LM:
         if max_seq is None:
             max_seq = max(len(p) + g for p, g, _ in reqs)
         engine = self.engine(n_slots, max_seq, sampler=sampler, eos_id=eos_id,
-                             decode_chunk=decode_chunk)
+                             decode_chunk=decode_chunk,
+                             spec_decode=spec_decode)
         for prompt, max_new, arrival in reqs:
             engine.submit(prompt, max_new, arrival=arrival)
         return engine.run()

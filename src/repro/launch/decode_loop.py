@@ -127,6 +127,215 @@ def _jitted_megastep(cfg, head, sampler, k, mesh, eos_id, pad_id, masked):
     return jax.jit(megastep, donate_argnums=(1,))
 
 
+def jitted_spec_megastep(cfg: ModelConfig, head: LogitHead, sampler: Sampler,
+                         k: int, *, mesh=None, eos_id: Optional[int] = None,
+                         pad_id: int = 0, masked: bool = False):
+    """The jitted speculative two-head megastep (DESIGN.md §11).
+
+    ``head`` (normally the cheap sketch head) **drafts** ``k`` tokens
+    through the backbone inside a ``lax.scan``, recording each step's final
+    hidden, its pre-sample PRNG key, and a rollback snapshot of the
+    non-positional cache state.  One batched **dense verify** pass —
+    ``dense_verify_logits`` over the stacked hiddens, no extra backbone
+    work — then replays the sampler on the recorded keys, producing the
+    token pure dense decode would have drawn at every position.  Acceptance
+    is *common-random-numbers rejection sampling*: a draft survives iff it
+    equals the dense draw under the very randomness dense decode would have
+    used, and the emitted block is always the dense draws themselves — so
+    the output stream is **bitwise identical** to dense decode regardless
+    of how good the draft head is; the draft only sets how many of the
+    ``k`` backbone steps commit per dispatch.
+
+    Rows commit in lockstep at ``m = min`` over active rows of
+    ``min(accepted + 1, k)`` (the ``+1`` is the free bonus/correction
+    token, whose verify logits are conditioned only on the matched prefix).
+    The carry rewinds to the committed step: positional KV/MLA caches by
+    the position counter alone, ring/recurrent layers from the recorded
+    snapshots (``cache_rollback``), and the PRNG key to the post-sample key
+    of step ``m - 1`` — exactly the state dense decode would hold after
+    ``m`` tokens.  EOS retirement inside the committed block mirrors
+    ``jitted_megastep``: later entries pad, cache rows freeze.
+
+    Memoized on the full hashable spec like ``jitted_megastep``.
+
+    Returns:
+      A jitted ``spec_megastep(params, cache, last_tok, pos, key, *,
+      head_params=None, active=None, encoder_states=None)`` returning
+      ``(block, m, acc, adv, cache, last_tok, pos, active, key)`` where
+      ``block`` is the (k, B) int32 verify-token block of which only rows
+      ``< m`` are committed, ``acc`` (B,) counts committed accepted draft
+      tokens (for acceptance-rate stats) and ``adv`` (B,) the tokens each
+      row actually emitted (≤ m; less only past an in-block EOS).  The
+      ``cache`` argument is **donated**.
+
+    Raises:
+      ValueError: on ``k < 1``, ``eos_id`` without ``masked``, or a
+        ``DenseHead``-style spec without its own logits path when greedy
+        drafting is impossible (any LogitHead works; no check needed).
+    """
+    if k < 1:
+        raise ValueError(f"spec megastep needs k >= 1, got {k}")
+    if eos_id is not None and not masked:
+        raise ValueError("eos_id retirement needs masked=True")
+    return _jitted_spec_megastep(cfg, head, sampler, k, mesh, eos_id, pad_id,
+                                 masked)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_spec_megastep(cfg, head, sampler, k, mesh, eos_id, pad_id,
+                          masked):
+    from repro.launch.steps import serve_step
+    from repro.models.model import (cache_rollback, cache_snapshot,
+                                    dense_verify_logits)
+
+    def spec_megastep(params, cache, last_tok, pos, key, head_params=None,
+                      active=None, encoder_states=None):
+        pos_in = pos
+
+        # ---- draft: k cheap-head steps through the backbone -------------
+        # `active` is a closure constant for the whole draft (no carry):
+        # EOS can only be declared by the verify tokens, after the scan.
+        def draft_body(carry, _):
+            cache, tok, pos, key = carry
+            logits, cache, hidden = serve_step(
+                params, cache, tok[:, None], pos, cfg,
+                encoder_states=encoder_states, head=head,
+                head_params=head_params,
+                active=active if masked else None, mesh=mesh,
+                return_hidden=True)
+            pre_key = key
+            key, nxt = _sample_impl(sampler, key, logits)
+            if masked:
+                nxt = jnp.where(active, nxt, jnp.int32(pad_id))
+            if jnp.ndim(pos):
+                pos = pos + (active.astype(jnp.int32) if masked else 1)
+            else:
+                pos = pos + 1
+            return ((cache, nxt, pos, key),
+                    (hidden, pre_key, key, nxt, cache_snapshot(cfg, cache)))
+
+        (cache, _, _, _), (hiddens, pre_keys, post_keys, drafts, snaps) = \
+            jax.lax.scan(draft_body, (cache, last_tok, pos_in, key), None,
+                         length=k)
+
+        # ---- verify: ONE batched dense pass over the k hiddens ----------
+        # (B, k, d) layout so the sharding constraint inside
+        # dense_verify_logits sees forward()'s exact (B, S, V) axes — the
+        # partitioner must not treat the verify einsum differently from
+        # the in-forward unembed it must match bitwise.
+        dense = dense_verify_logits(params, jnp.swapaxes(hiddens, 0, 1), cfg)
+        dense = jnp.swapaxes(dense, 0, 1)                   # (k, B, V)
+
+        if sampler.is_greedy:
+            verify = jnp.argmax(dense, axis=-1).astype(jnp.int32)
+        else:
+            # Replay the sampler on the recorded pre-sample keys: at every
+            # position the committed prefix equals dense decode's, so the
+            # key chain — and hence the categorical draw — is the same.
+            def verify_body(_, xs):
+                pre_key, logits = xs
+                _, tok = _sample_impl(sampler, pre_key, logits)
+                return (), tok
+
+            _, verify = jax.lax.scan(verify_body, (), (pre_keys, dense))
+        if masked:
+            verify = jnp.where(active[None, :], verify, jnp.int32(pad_id))
+
+        # ---- acceptance: longest matching prefix + bonus token ----------
+        match = (drafts == verify).astype(jnp.int32)        # (k, B)
+        a = jnp.cumprod(match, axis=0).sum(0)               # leading matches
+        n = jnp.minimum(a + 1, k)                           # + bonus, capped
+        if masked:
+            n = jnp.where(active, n, k)   # parked rows don't constrain m
+        m = n.min()                       # lockstep commit (global key chain)
+
+        # ---- emission bookkeeping (mirrors jitted_megastep's EOS path) --
+        steps = jnp.arange(k)[:, None]                      # (k, 1)
+        if masked:
+            hits = ((verify == eos_id) if eos_id is not None
+                    else jnp.zeros(verify.shape, bool))
+            prior = jnp.cumsum(hits.astype(jnp.int32), axis=0) \
+                - hits.astype(jnp.int32)                    # EOS before i
+            alive = active[None, :] & (prior == 0)
+        else:
+            alive = jnp.ones(verify.shape, bool)
+        committed = alive & (steps < m)
+        block = jnp.where(committed, verify, jnp.int32(pad_id))
+        adv = committed.astype(jnp.int32).sum(0)            # emitted per row
+        acc = jnp.minimum(a, adv)                           # accepted drafts
+        if masked and eos_id is not None:
+            active = active & ~(hits & (steps < m)).any(0)
+
+        # ---- rewind the carry to the committed step ---------------------
+        # Cache: positional layers keep the draft-final buffers (their
+        # stale writes sit beyond the rewound position counter); ring and
+        # recurrent layers take the snapshot recorded after draft step
+        # m - 1 — whose processed inputs (last_tok, drafts[:m-1]) all
+        # matched the committed stream, because m - 1 <= accepted count.
+        sel = lambda s: jax.lax.dynamic_index_in_dim(s, m - 1, 0,
+                                                     keepdims=False)
+        cache = cache_rollback(cfg, cache, jax.tree.map(sel, snaps))
+        last_tok = sel(block)
+        key = sel(post_keys)              # dense decode's key after m draws
+        pos = pos_in + (adv if jnp.ndim(pos_in) else m)
+        return block, m, acc, adv, cache, last_tok, pos, active, key
+
+    return jax.jit(spec_megastep, donate_argnums=(1,))
+
+
+def spec_decode_chunks(params, cache, first_logits, *, cfg: ModelConfig,
+                       head: LogitHead, sampler: Sampler, gen_len: int,
+                       start_pos: int, spec_k: int,
+                       eos_id: Optional[int] = None, pad_id: int = 0,
+                       mesh=None, encoder_states=None):
+    """The static-batch speculative decode loop (``generate(spec_decode=K)``).
+
+    Mirrors :func:`decode_chunks`: the first token comes from the prefill
+    logits — which are always *dense* logits, so the stream starts on the
+    dense chain — then each iteration dispatches one
+    :func:`jitted_spec_megastep` and commits its ``m`` verified tokens.
+    ``m`` is data-dependent, so the loop syncs one scalar per dispatch (the
+    same cost class as the engine's per-tick retirement sync).
+
+    Returns ``(tokens, stats)`` with stats counting backbone draft steps
+    (``decode_steps``), ``verify_calls``, ``draft_tokens`` and
+    ``accepted_draft_tokens`` — acceptance rate is
+    ``accepted_draft_tokens / draft_tokens``.
+    """
+    b = first_logits.shape[0]
+    key = sampler.init_key()
+    key, tok0 = sampler.sample(key, first_logits)
+    tok0 = tok0.astype(jnp.int32)
+    masked = eos_id is not None
+    active = (tok0 != eos_id) if masked else None
+    spec = head.without_params()
+
+    blocks = [tok0[:, None]]
+    last_tok, pos = tok0, jnp.asarray(start_pos, jnp.int32)
+    todo = gen_len - 1
+    stats = {"decode_steps": 0, "verify_calls": 0, "draft_tokens": 0,
+             "accepted_draft_tokens": 0}
+    while todo > 0:
+        kk = min(spec_k, todo)
+        fn = jitted_spec_megastep(cfg, spec, sampler, kk, mesh=mesh,
+                                  eos_id=eos_id, pad_id=pad_id,
+                                  masked=masked)
+        block, m, acc, adv, cache, last_tok, pos, active, key = fn(
+            params, cache, last_tok, pos, key, head_params=head.params,
+            active=active, encoder_states=encoder_states)
+        m = int(jax.device_get(m))
+        blocks.append(jnp.asarray(block[:m]).T)
+        stats["decode_steps"] += kk
+        stats["verify_calls"] += 1
+        stats["draft_tokens"] += kk * b
+        stats["accepted_draft_tokens"] += int(jax.device_get(acc.sum()))
+        todo -= m
+        if masked and todo > 0 and not bool(jax.device_get(active.any())):
+            blocks.append(jnp.full((b, todo), pad_id, jnp.int32))
+            break
+    return jnp.concatenate(blocks, axis=1), stats
+
+
 def decode_chunks(params, cache, first_logits, *, cfg: ModelConfig,
                   head: LogitHead, sampler: Sampler, gen_len: int,
                   start_pos: int, chunk: int, eos_id: Optional[int] = None,

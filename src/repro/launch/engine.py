@@ -235,6 +235,27 @@ class EngineBackend:
         return (np.asarray(block), pool, np.array(last_tok, np.int32),
                 np.array(pos, np.int32), np.asarray(active), key)
 
+    def spec_megastep(self, pool, tokens: np.ndarray, pos: np.ndarray,
+                      active: np.ndarray, key, k: int, sampler: Sampler,
+                      eos_id: Optional[int]):
+        """One speculative two-head dispatch: the engine's head drafts ``k``
+        tokens, one batched dense pass verifies, and ``m`` lockstep-commit
+        (DESIGN.md §11).  ``pool`` is donated.  Returns the (k, B) verify
+        block, the committed step count ``m`` (host int), the per-slot
+        accepted-draft counts, and the rewound carry."""
+        from repro.launch.decode_loop import jitted_spec_megastep
+
+        fn = jitted_spec_megastep(self.cfg, self.head.without_params(),
+                                  sampler, k, mesh=self.mesh, eos_id=eos_id,
+                                  masked=True)
+        block, m, acc, _adv, pool, last_tok, pos, active, key = fn(
+            self.params, pool, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32), key,
+            head_params=self.head.params, active=jnp.asarray(active))
+        return (np.asarray(block), int(jax.device_get(m)), np.asarray(acc),
+                pool, np.array(last_tok, np.int32), np.array(pos, np.int32),
+                np.asarray(active), key)
+
 
 class ServeEngine:
     """Continuous-batching engine over a ``backend`` and ``n_slots`` cache rows.
@@ -249,17 +270,28 @@ class ServeEngine:
     def __init__(self, backend, n_slots: int, max_seq: int, *,
                  eos_id: Optional[int] = None,
                  sampler: Optional[Sampler] = None, decode_chunk: int = 1,
-                 greedy=None, seed=None):
+                 spec_decode: int = 0, greedy=None, seed=None):
         _, sampler = resolve_legacy_serving_kwargs(
             None, sampler, None, None, None, greedy, seed, "ServeEngine")
         if decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
+        if spec_decode < 0:
+            raise ValueError(f"spec_decode must be >= 0, got {spec_decode}")
+        if spec_decode and decode_chunk > 1:
+            raise ValueError("spec_decode and decode_chunk > 1 are mutually "
+                             "exclusive: the speculative megastep already "
+                             "advances up to K tokens per tick")
+        if spec_decode and not hasattr(backend, "spec_megastep"):
+            raise ValueError("spec_decode needs a backend with a "
+                             "spec_megastep (the fused draft/verify "
+                             "dispatch); this backend has none")
         self.backend = backend
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.sampler = sampler or Sampler()
         self.decode_chunk = decode_chunk
+        self.spec_decode = spec_decode
         self.pool = backend.init_pool(n_slots, max_seq)
         self.sched = SlotScheduler(n_slots)
         self.pos = np.zeros(n_slots, np.int32)         # tokens cached per slot
@@ -275,7 +307,8 @@ class ServeEngine:
         self._key = self.sampler.init_key()
         self.stats = {"decode_steps": 0, "active_slot_steps": 0,
                       "admitted": 0, "retired": 0, "prefill_batches": 0,
-                      "megasteps": 0, "host_syncs": 0}
+                      "megasteps": 0, "host_syncs": 0, "verify_calls": 0,
+                      "draft_tokens": 0, "accepted_draft_tokens": 0}
 
     # -- request intake ----------------------------------------------------
 
@@ -355,12 +388,13 @@ class ServeEngine:
 
     # -- the engine tick ---------------------------------------------------
 
-    def _chunk_for(self, active_slots: List[int]) -> int:
-        """The megastep length for this tick: ``decode_chunk`` clamped so no
-        occupied slot overshoots its budget (its remaining tokens) and —
-        when a slot is free to admit into — no queued arrival is kept
-        waiting past its arrival tick."""
-        chunk = min(self.decode_chunk,
+    def _chunk_for(self, active_slots: List[int],
+                   base: Optional[int] = None) -> int:
+        """The megastep length for this tick: ``base`` (``decode_chunk``, or
+        the speculative draft length) clamped so no occupied slot overshoots
+        its budget (its remaining tokens) and — when a slot is free to admit
+        into — no queued arrival is kept waiting past its arrival tick."""
+        chunk = min(base or self.decode_chunk,
                     int(min(self.remaining[s] for s in active_slots)))
         if self.queue and self.sched.n_free:
             chunk = min(chunk, max(1, self.queue.peek().arrival - self.now))
@@ -396,6 +430,37 @@ class ServeEngine:
                     self._retire(s)
                     break
 
+    def _decode_spec_megastep(self, active_slots: List[int],
+                              draft_k: int) -> int:
+        """One speculative tick: draft ``draft_k`` tokens through the
+        engine's head, dense-verify the block, and commit the ``m``
+        lockstep-accepted steps — then walk the committed rows exactly like
+        ``_decode_megastep`` (EOS mid-block retires; trailing entries of a
+        retired row are padding).  Returns ``m`` (the tick clock advance)."""
+        active = np.zeros(self.n_slots, bool)
+        active[active_slots] = True
+        (block, m, acc, self.pool, self.last_tok, self.pos, _,
+         self._key) = self.backend.spec_megastep(
+            self.pool, self.last_tok, self.pos, active, self._key,
+            draft_k, self.sampler, self.eos_id)
+        self.stats["host_syncs"] += 1
+        self.stats["decode_steps"] += draft_k      # backbone (draft) steps
+        self.stats["megasteps"] += 1
+        self.stats["verify_calls"] += 1
+        self.stats["draft_tokens"] += draft_k * len(active_slots)
+        self.stats["accepted_draft_tokens"] += int(acc[active_slots].sum())
+        for s in active_slots:
+            for i in range(m):
+                tok = int(block[i, s])
+                self.outputs[self.sched.owner[s]].append(tok)
+                self.remaining[s] -= 1
+                self.stats["active_slot_steps"] += 1
+                if (self.remaining[s] == 0
+                        or (self.eos_id is not None and tok == self.eos_id)):
+                    self._retire(s)
+                    break
+        return m
+
     def _emulate_megastep(self, active: np.ndarray, chunk: int) -> np.ndarray:
         """Host-loop emulation of the fused megastep for backends without
         one (e.g. the numpy fake in the property tests): same step→sample→
@@ -422,7 +487,10 @@ class ServeEngine:
         self._admit()
         active_slots = self.sched.active_slots()
         advanced = 1
-        if active_slots and self.decode_chunk > 1:
+        if active_slots and self.spec_decode:
+            draft_k = self._chunk_for(active_slots, base=self.spec_decode)
+            advanced = self._decode_spec_megastep(active_slots, draft_k)
+        elif active_slots and self.decode_chunk > 1:
             advanced = self._chunk_for(active_slots)
             self._decode_megastep(active_slots, advanced)
         elif active_slots:
@@ -473,7 +541,7 @@ def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
                 head: Optional[LogitHead] = None,
                 sampler: Optional[Sampler] = None,
                 eos_id: Optional[int] = None, mesh=None,
-                decode_chunk: int = 1,
+                decode_chunk: int = 1, spec_decode: int = 0,
                 sketch_head=None, sketch_cfg: Optional[SketchHeadConfig] = None,
                 fused=None, greedy=None, seed=None) -> ServeEngine:
     """Engine over a real model: the serving entry point (see launch.serve
@@ -484,11 +552,16 @@ def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
     decodes K tokens per occupied slot between admission rounds in one
     on-device megastep (launch/decode_loop.py, DESIGN.md §10); the default
     1 keeps the per-token tick, bitwise-identical to the pre-megastep
-    engine.  The pre-redesign ``sketch_head=/sketch_cfg=/fused=/greedy=/
-    seed=`` kwargs keep working behind a DeprecationWarning."""
+    engine.  ``spec_decode=K`` makes every tick a speculative two-head
+    megastep instead: the engine's ``head`` drafts K tokens and one batched
+    dense pass verifies them, emitting the dense stream bitwise (DESIGN.md
+    §11; mutually exclusive with ``decode_chunk > 1``).  The pre-redesign
+    ``sketch_head=/sketch_cfg=/fused=/greedy=/seed=`` kwargs keep working
+    behind a DeprecationWarning."""
     head, sampler = resolve_legacy_serving_kwargs(
         head, sampler, sketch_head, sketch_cfg, fused, greedy, seed,
         "make_engine")
     backend = EngineBackend(params, cfg, head=head, mesh=mesh)
     return ServeEngine(backend, n_slots, max_seq, eos_id=eos_id,
-                       sampler=sampler, decode_chunk=decode_chunk)
+                       sampler=sampler, decode_chunk=decode_chunk,
+                       spec_decode=spec_decode)

@@ -62,7 +62,7 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
              sampler: Optional[Sampler] = None,
              eos_id: Optional[int] = None, pad_id: int = 0,
              return_stats: bool = False, mesh=None, decode_chunk: int = 1,
-             sketch_head_params=None,
+             spec_decode: int = 0, sketch_head_params=None,
              sketch_cfg: Optional[SketchHeadConfig] = None,
              fused=None, greedy=None, seed=None):
     """Bulk prefill + decode. prompts: (B, P) → tokens (B, P+gen_len).
@@ -83,6 +83,14 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
     ``decode_chunk=1`` keeps the per-token host loop (the bitwise-parity
     reference the megastep is tested against).
 
+    ``spec_decode=K`` (> 0; mutually exclusive with ``decode_chunk > 1``)
+    decodes speculatively: ``head`` drafts K tokens per dispatch and one
+    batched dense pass verifies them (launch/decode_loop.py, DESIGN.md
+    §11).  The emitted stream is bitwise-identical to dense decode with the
+    same ``sampler`` — the head only sets how many drafts commit per
+    verify; stats gain ``verify_calls`` / ``draft_tokens`` /
+    ``accepted_draft_tokens``.
+
     ``mesh`` serves SPMD over a ``(data, model)`` device mesh: params and
     head arrays are placed per ``sharding/rules.py`` (a no-op when the LM
     facade already placed them), the decode cache batch-shards over
@@ -100,6 +108,12 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
     sampler = sampler or Sampler()
     if decode_chunk < 1:
         raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
+    if spec_decode < 0:
+        raise ValueError(f"spec_decode must be >= 0, got {spec_decode}")
+    if spec_decode and decode_chunk > 1:
+        raise ValueError("spec_decode and decode_chunk > 1 are mutually "
+                         "exclusive: the speculative megastep already "
+                         "advances up to K tokens per dispatch")
     b, p = prompts.shape
     max_seq = p + gen_len
     cache = init_decode_cache(cfg, b, max_seq)
@@ -121,6 +135,15 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
     # online-softmax chunked path above the same thresholds as training.
     logits, cache = prefill(params, prompts, encoder_states=encoder_states,
                             cache=cache)
+
+    if spec_decode:
+        from repro.launch.decode_loop import spec_decode_chunks
+        tail, stats = spec_decode_chunks(
+            params, cache, logits, cfg=cfg, head=head, sampler=sampler,
+            gen_len=gen_len, start_pos=p, spec_k=spec_decode, eos_id=eos_id,
+            pad_id=pad_id, mesh=mesh, encoder_states=encoder_states)
+        tokens = jnp.concatenate([prompts.astype(jnp.int32), tail], axis=1)
+        return (tokens, stats) if return_stats else tokens
 
     if decode_chunk > 1:
         from repro.launch.decode_loop import decode_chunks
@@ -220,7 +243,8 @@ def run_engine(lm, args, sampler: Sampler) -> None:
     n_requests = args.requests or 2 * args.batch
     max_seq = args.prompt_len + args.gen
     engine = lm.engine(n_slots=args.batch, max_seq=max_seq, sampler=sampler,
-                       decode_chunk=args.decode_chunk)
+                       decode_chunk=args.decode_chunk,
+                       spec_decode=args.spec_decode)
     rng = np.random.default_rng(args.seed)
     for i in range(n_requests):
         prompt = rng.integers(0, lm.cfg.vocab_size, args.prompt_len,
@@ -241,6 +265,13 @@ def run_engine(lm, args, sampler: Sampler) -> None:
           f"{engine.stats['megasteps']} dispatches (chunk "
           f"{engine.decode_chunk}), "
           f"slot utilization {engine.slot_utilization:.2f}")
+    if engine.spec_decode:
+        drafted = engine.stats["draft_tokens"]
+        accepted = engine.stats["accepted_draft_tokens"]
+        print(f"speculative: K={engine.spec_decode}, "
+              f"{engine.stats['verify_calls']} verify calls, "
+              f"acceptance {accepted}/{drafted} "
+              f"({accepted / max(1, drafted):.2f})")
     first = finished[min(finished)]
     print("sample token ids:", np.asarray(first[:24]))
 
@@ -281,6 +312,12 @@ def main() -> None:
                     help="decode K tokens per on-device megastep "
                          "(launch/decode_loop.py, DESIGN.md §10); 1 = the "
                          "per-token host loop (bitwise-parity default)")
+    ap.add_argument("--spec-decode", type=int, default=0,
+                    help="speculative self-decode: the serving head drafts "
+                         "K tokens per dispatch, one batched dense pass "
+                         "verifies (DESIGN.md §11; output is bitwise the "
+                         "dense stream; mutually exclusive with "
+                         "--decode-chunk > 1)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -324,12 +361,22 @@ def main() -> None:
 
     t0 = time.time()
     out = lm.generate(prompts, args.gen, sampler=sampler,
-                      encoder_states=enc, decode_chunk=args.decode_chunk)
+                      encoder_states=enc, decode_chunk=args.decode_chunk,
+                      spec_decode=args.spec_decode,
+                      return_stats=bool(args.spec_decode))
+    stats = None
+    if args.spec_decode:
+        out, stats = out
     dur = time.time() - t0
     total_tokens = args.batch * (args.prompt_len + args.gen)
     print(f"arch={cfg.name} head={lm.head.describe()} served {args.batch} "
           f"seqs, {total_tokens} tokens in {dur:.1f}s "
           f"({total_tokens / dur:.1f} tok/s incl. compile)")
+    if stats is not None:
+        print(f"speculative: K={args.spec_decode}, "
+              f"{stats['verify_calls']} verify calls, acceptance "
+              f"{stats['accepted_draft_tokens']}/{stats['draft_tokens']} "
+              f"({stats['accepted_draft_tokens'] / max(1, stats['draft_tokens']):.2f})")
     print("sample token ids:", np.asarray(out[0, :24]))
 
 

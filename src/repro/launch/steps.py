@@ -180,7 +180,8 @@ def _resolve_head_shim(head, head_params, sketch_head, sketch_cfg, fused):
 
 def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
                encoder_states=None, head: Optional[LogitHead] = None,
-               head_params=None, active=None, mesh=None, sketch_head=None,
+               head_params=None, active=None, mesh=None,
+               return_hidden: bool = False, sketch_head=None,
                sketch_cfg: Optional[SketchHeadConfig] = None, fused=None):
     """One decode step (one new token per sequence against the cache).
 
@@ -202,12 +203,19 @@ def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
     Sharded serving: ``mesh`` (static; threaded by ``jitted_serve_fns``)
     routes stateful heads through their shard_map path and re-constrains the
     updated cache to the serving cache shardings every step.
+
+    ``return_hidden=True`` additionally returns the (B, d_model) final
+    hidden as a third element — the input a speculative verify pass consumes
+    (DESIGN.md §11).  A ``DenseHead`` under this flag produces its logits
+    via ``dense_verify_logits`` on that hidden, bitwise-identical to the
+    in-backbone unembed it normally takes.
     """
     from repro.models.model import mask_cache_update
 
     head, head_params = _resolve_head_shim(head, head_params, sketch_head,
                                            sketch_cfg, fused)
-    if not head.needs_hidden:
+    hidden = None
+    if not head.needs_hidden and not return_hidden:
         logits, new_cache = decode_step(params, cache, tokens, pos, cfg,
                                         encoder_states=encoder_states)
     else:
@@ -216,13 +224,19 @@ def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
         hidden, new_cache = decode_step(params, cache, tokens, pos, cfg,
                                         encoder_states=encoder_states,
                                         return_hidden=True)
-        logits = head.apply(head_params, hidden, mesh=mesh)
-        if cfg.final_logit_softcap:
-            logits = softcap(logits, cfg.final_logit_softcap)
+        if head.needs_hidden:
+            logits = head.apply(head_params, hidden, mesh=mesh)
+            if cfg.final_logit_softcap:
+                logits = softcap(logits, cfg.final_logit_softcap)
+        else:
+            from repro.models.model import dense_verify_logits
+            logits = dense_verify_logits(params, hidden, cfg)
     if active is not None:
         new_cache = mask_cache_update(cfg, cache, new_cache, active)
     if mesh is not None:
         new_cache = _constrain_cache(new_cache, mesh)
+    if return_hidden:
+        return logits, new_cache, hidden
     return logits, new_cache
 
 
@@ -231,23 +245,28 @@ class ServeFns(tuple):
 
     Unpacks as the legacy 4-tuple ``(prefill, decode, insert, reset)``;
     the on-device K-step decode loop is the extra ``megastep`` attribute
-    (``None`` at ``decode_chunk=1`` — the bitwise-parity host-loop default).
-    ``decode`` / ``insert`` / ``reset`` / ``megastep`` **donate** their
-    cache/pool argument: the passed-in cache is consumed and callers must
-    rebind to the returned one (launch/decode_loop.py).
+    (``None`` at ``decode_chunk=1`` — the bitwise-parity host-loop default)
+    and the speculative two-head megastep is ``spec_megastep`` (``None``
+    unless requested via ``spec_decode=K``).  ``decode`` / ``insert`` /
+    ``reset`` / ``megastep`` / ``spec_megastep`` **donate** their cache/pool
+    argument: the passed-in cache is consumed and callers must rebind to
+    the returned one (launch/decode_loop.py).
     """
 
-    def __new__(cls, prefill, decode, insert, reset, megastep=None):
+    def __new__(cls, prefill, decode, insert, reset, megastep=None,
+                spec_megastep=None):
         self = super().__new__(cls, (prefill, decode, insert, reset))
         self.prefill, self.decode = prefill, decode
         self.insert, self.reset = insert, reset
         self.megastep = megastep
+        self.spec_megastep = spec_megastep
         return self
 
 
 def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
                      fused=None, *, mesh=None, sampler=None,
-                     decode_chunk: int = 1, eos_id: Optional[int] = None):
+                     decode_chunk: int = 1, spec_decode: int = 0,
+                     eos_id: Optional[int] = None):
     """Jitted (prefill, decode, slot_insert, slot_reset[, megastep]) for one
     serving config.  Memoized on ``(cfg, head spec, mesh, sampler,
     decode_chunk, eos_id)`` — all hashable — so every ``generate()`` call
@@ -263,6 +282,14 @@ def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
     ``megastep`` is the on-device K-step decode loop
     (``launch.decode_loop.jitted_megastep``) fusing that sampler and the
     ``eos_id`` retirement into one ``lax.scan`` dispatch.
+
+    With ``spec_decode = K > 0`` (needs ``sampler``; mutually exclusive with
+    ``decode_chunk > 1``), the returned struct's ``spec_megastep`` is the
+    speculative two-head megastep
+    (``launch.decode_loop.jitted_spec_megastep``): the ``head`` drafts K
+    tokens through the backbone and one batched dense pass verifies the
+    block, emitting a stream bitwise-identical to pure dense decode
+    (DESIGN.md §11).
 
     With ``mesh``, every returned fn is mesh-aware: prefill/decode constrain
     their output cache to the serving cache shardings, stateful heads run
@@ -287,13 +314,28 @@ def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
     if decode_chunk > 1 and sampler is None:
         raise ValueError("decode_chunk > 1 fuses sampling into the decode "
                          "scan; pass sampler=repro.api.Sampler(...)")
+    if spec_decode < 0:
+        raise ValueError(f"spec_decode must be >= 0, got {spec_decode}")
+    if spec_decode and decode_chunk > 1:
+        raise ValueError("spec_decode and decode_chunk > 1 are mutually "
+                         "exclusive: the speculative megastep already "
+                         "advances up to K tokens per dispatch")
+    if spec_decode and sampler is None:
+        raise ValueError("spec_decode fuses sampling into the draft/verify "
+                         "scan; pass sampler=repro.api.Sampler(...)")
     # The four core fns don't depend on (sampler, decode_chunk, eos_id), so
     # they memoize on (cfg, head, mesh) alone — a new sampler spec must not
-    # recompile the model steps.  The megastep has its own memo cache in
+    # recompile the model steps.  The megasteps have their own memo caches in
     # decode_loop.py keyed on the full spec.
     fns = _jitted_serve_fns(cfg, head, mesh)
-    if decode_chunk == 1:
+    if decode_chunk == 1 and not spec_decode:
         return fns   # the memoized instance itself (stable identity)
+    if spec_decode:
+        from repro.launch.decode_loop import jitted_spec_megastep
+        return ServeFns(*fns, None,
+                        jitted_spec_megastep(cfg, head, sampler, spec_decode,
+                                             mesh=mesh, eos_id=eos_id,
+                                             masked=True))
     from repro.launch.decode_loop import jitted_megastep
     return ServeFns(*fns, jitted_megastep(cfg, head, sampler, decode_chunk,
                                           mesh=mesh, eos_id=eos_id,

@@ -101,6 +101,29 @@ def slot_insert_cache(kind: str, cache, src, slots):
     raise ValueError(kind)
 
 
+def cache_needs_snapshot(cfg: ModelConfig, kind: str, cache) -> bool:
+    """True when a speculative rollback must keep per-step history of this
+    layer's cache (DESIGN.md §11).
+
+    Recurrent state (mamba / rwkv) has no positional axis to rewind.  A
+    rolling SWA ring is positional but *destructive*: a draft step's write at
+    ``pos % size`` overwrites the previous lap's entry, which is still inside
+    the attention window after a rollback — so the ring needs snapshots too.
+    Plain KV / MLA caches are append-only and masked by position
+    (``k_pos < cache_pos + 1``), so rewinding the position counter alone
+    makes stale draft writes invisible; they return False.
+    """
+    if cache is None:
+        return False
+    if kind in ("mamba", "rwkv"):
+        return True
+    if kind in ATTN_KINDS:
+        a = _attn_cfg(cfg, kind)
+        # Mirrors the decode-path ring test: size = min(max_seq, window).
+        return bool(a.window) and a.window <= cache.k.shape[1]
+    return False
+
+
 def slot_reset_cache(kind: str, cache, slots):
     """Slot-wise reset for one layer's cache (dispatch on block kind)."""
     if cache is None:

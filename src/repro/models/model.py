@@ -138,6 +138,63 @@ def mask_cache_update(cfg: ModelConfig, old: dict, new: dict,
     return _map_layer_caches(cfg, merge, old, new)
 
 
+def cache_snapshot(cfg: ModelConfig, cache: dict) -> dict:
+    """The per-step rollback state speculative decode must keep (§11).
+
+    Returns a tree of the same layer structure as ``cache`` where every leaf
+    that cannot be rewound by position alone (recurrent mamba/rwkv state,
+    rolling SWA rings — ``blocks.cache_needs_snapshot``) is the layer's
+    current cache, and every positionally-rewindable layer is an empty
+    ``()`` placeholder.  Stacked over the draft scan, these snapshots let
+    ``cache_rollback`` commit the exact post-step-``m`` state.
+    """
+    def pick(kind, c):
+        return c if blocks.cache_needs_snapshot(cfg, kind, c) else ()
+
+    return _map_layer_caches(cfg, pick, cache)
+
+
+def cache_rollback(cfg: ModelConfig, cache: dict, snap: dict) -> dict:
+    """Commit a speculative block: merge a selected step's snapshot leaves
+    back over the draft-final ``cache``.
+
+    Snapshot-kind layers take the snapshot (the bitwise state after the
+    accepted step); positional layers keep the draft-final buffers — their
+    stale entries beyond the rewound position counter are masked by the
+    ``k_pos < cache_pos + 1`` decode check and overwritten before they can
+    ever be attended (models/attention.py, models/mla.py).
+    """
+    def merge(kind, c, s):
+        return s if blocks.cache_needs_snapshot(cfg, kind, c) else c
+
+    return _map_layer_caches(cfg, merge, cache, snap)
+
+
+def dense_verify_logits(params: dict, hidden: jnp.ndarray,
+                        cfg: ModelConfig) -> jnp.ndarray:
+    """``forward()``'s dense unembed tail on externally-carried hiddens.
+
+    ``hidden`` is the f32 output of ``return_hidden=True`` — it round-trips
+    exactly to the bf16 final-norm activations it came from (bf16→f32 is
+    injective), so casting back to the table dtype reproduces the very
+    einsum ``forward`` would have run.  A 2-D (B, d) input is lifted to the
+    (B, 1, d) decode shape before the contraction: XLA's 2-D matmul is *not*
+    bitwise-identical to the 3-D einsum rows, and bitwise parity with the
+    in-forward path is the whole point (tests/test_spec_decode.py).  A 3-D
+    (K, B, d) block — the stacked hiddens of a speculative draft scan — maps
+    row-for-row to the per-step logits.
+    """
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    squeeze = hidden.ndim == 2
+    if squeeze:
+        hidden = hidden[:, None, :]
+    logits = unembed(hidden.astype(table.dtype), table).astype(jnp.float32)
+    logits = constrain(logits, "dp", None, "tp")  # vocab-parallel logits
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits[:, 0] if squeeze else logits
+
+
 # --------------------------------------------------------------------------
 # forward
 # --------------------------------------------------------------------------

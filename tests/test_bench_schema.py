@@ -1,0 +1,99 @@
+"""The benchmarks.schema CLI and validators (EXPERIMENTS.md §Bench schema).
+
+The committed BENCH_*.json artifacts must validate against the current
+schema version (stale artifacts fail here, not in CI archaeology), and the
+CLI must check *every* path before exiting: the regression is the
+multi-file invalid case — an early invalid file used to raise and skip the
+rest, so CI saw one failure per run instead of the full damage report.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from benchmarks.schema import (SCHEMA_VERSION, main, validate_engine_record,
+                               validate_serve_record)
+
+_ROOT = Path(__file__).resolve().parents[1]
+_ENGINE = _ROOT / "BENCH_engine.json"
+_SERVE = _ROOT / "BENCH_sketch_serve.json"
+
+
+def test_committed_artifacts_validate(capsys):
+    """The checked-in artifacts match the current schema (v4: spec_decode
+    sweeps with acceptance_rate / accepted_tokens_per_verify)."""
+    assert main([str(_ENGINE), str(_SERVE)]) == 0
+    out = capsys.readouterr().out
+    assert out.count(f"valid (schema v{SCHEMA_VERSION})") == 2
+
+
+def test_engine_artifact_has_nonzero_acceptance():
+    """The v4 spec sweep is real measurement, not a zeroed placeholder: the
+    distilled draft head must beat the ~1/V random-agreement floor."""
+    record = json.loads(_ENGINE.read_text())
+    for k, run in record["spec_decode"].items():
+        assert run["acceptance_rate"] > 0, f"spec_decode[{k}] zero acceptance"
+        assert run["accepted_tokens_per_verify"] > 0
+
+
+def test_cli_validates_every_path_and_reports_all(tmp_path, capsys):
+    """Multi-file invalid case: every path is checked, every failure is
+    printed, and the exit code is non-zero — the first bad file must not
+    mask the rest."""
+    bad_missing = tmp_path / "bad_missing.json"
+    record = json.loads(_ENGINE.read_text())
+    del record["static"]
+    bad_missing.write_text(json.dumps(record))
+    bad_parse = tmp_path / "bad_parse.json"
+    bad_parse.write_text("{not json")
+    good = tmp_path / "good.json"
+    good.write_text(_SERVE.read_text())
+
+    rc = main([str(bad_missing), str(good), str(bad_parse)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert f"{bad_missing}: INVALID" in out and "static" in out
+    assert f"{bad_parse}: INVALID" in out
+    assert f"{good}: valid" in out            # later files still validated
+    assert "2 of 3 artifacts failed" in out
+
+
+def test_cli_exit_codes_subprocess(tmp_path):
+    """python -m benchmarks.schema exits 0 on valid input, 1 on any invalid
+    path — the contract the CI bench-smoke job scripts against."""
+    bad = tmp_path / "bad.json"
+    bad.write_text("{}")
+    run = lambda *paths: subprocess.run(
+        [sys.executable, "-m", "benchmarks.schema", *paths],
+        cwd=_ROOT, capture_output=True, text=True)
+    ok = run(str(_ENGINE), str(_SERVE))
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    fail = run(str(_ENGINE), str(bad))
+    assert fail.returncode == 1
+    assert "INVALID" in fail.stdout
+    assert f"{_ENGINE}: valid" in fail.stdout
+
+
+def test_spec_run_range_checks():
+    """Out-of-range spec stats are rejected, not just missing fields."""
+    record = json.loads(_ENGINE.read_text())
+    k = next(iter(record["spec_decode"]))
+    record["spec_decode"][k]["acceptance_rate"] = 1.5
+    with pytest.raises(ValueError, match="acceptance_rate"):
+        validate_engine_record(record)
+
+    serve = json.loads(_SERVE.read_text())
+    serve["spec_decode"]["acceptance_rate"] = -0.1
+    with pytest.raises(ValueError, match="acceptance_rate"):
+        validate_serve_record(serve)
+
+
+def test_version_mismatch_rejected():
+    """An artifact from an older schema fails with a regenerate hint."""
+    record = json.loads(_SERVE.read_text())
+    record["schema_version"] = SCHEMA_VERSION - 1
+    with pytest.raises(ValueError, match="schema_version"):
+        validate_serve_record(record)

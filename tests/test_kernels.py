@@ -68,6 +68,45 @@ def test_race_update_matches_ref(m, c, l, r):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,c,l,r,g", [(5, 3, 24, 12, 6),    # all non-pow2
+                                       (33, 2, 18, 10, 1),   # g=1: plain mean
+                                       (130, 4, 50, 6, 5)])  # b > block_b
+def test_race_query_pallas_vs_ref_explicit(b, c, l, r, g, dtype):
+    """Explicit backend pin: the pallas kernel against the jnp oracle, both
+    resolved by name — immune to REPRO_KERNEL_BACKEND / default-backend
+    flips — over non-power-of-two shapes and reduced-precision sketches."""
+    key = jax.random.PRNGKey(b * 7 + c)
+    sketch = jax.random.normal(key, (c, l, r)).astype(dtype)
+    idx = jax.random.randint(key, (b, l), 0, r)
+    got = race_query(sketch, idx, n_groups=g, block_b=16, backend="pallas")
+    want = race_query(sketch, idx, n_groups=g, backend="ref")
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,c,l,r", [(37, 3, 12, 6),     # all non-pow2
+                                     (129, 2, 25, 10),   # m % block_m != 0
+                                     (64, 5, 18, 12)])
+def test_race_update_pallas_vs_ref_explicit(m, c, l, r, dtype):
+    """Explicit backend pin for the construction kernel: pallas scatter-add
+    vs the jnp oracle over ragged point counts and reduced precision (the
+    accumulate path the distillation freeze runs)."""
+    key = jax.random.PRNGKey(m * 3 + c)
+    sketch = jax.random.normal(key, (c, l, r)).astype(dtype)
+    idx = jax.random.randint(key, (m, l), 0, r)
+    alphas = jax.random.normal(key, (m, c)).astype(dtype)
+    got = race_update(sketch, idx, alphas, block_m=32, backend="pallas")
+    want = race_update(sketch, idx, alphas, backend="ref")
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
 @pytest.mark.parametrize("b,l,r,v", [(2, 8, 4, 16), (9, 64, 16, 100),
                                      (16, 32, 8, 2048)])
 def test_sketch_head_matches_ref(b, l, r, v):

@@ -147,6 +147,34 @@ def test_engine_staggered_matches_solo_on_mesh(served, mesh):
                                       solo[0, len(prompt):])
 
 
+@pytest.mark.parametrize("kind", ["sketch-ref", "sketch-fused"])
+def test_spec_decode_matches_dense_on_mesh(served, mesh, kind):
+    """Speculative self-decode ON the mesh (DESIGN.md §11): drafts run the
+    sharded sketch-head path (count arrays over ``model``, one psum per
+    step), the batched verify runs under the same constraint layout as the
+    forward pass — and the emitted streams equal the pure dense streams on
+    the same mesh, bitwise, static and engine, greedy and seeded, with the
+    random head rejecting mid-block nearly every megastep."""
+    cfg, params, head_params = served
+    head = _heads(head_params)[kind]
+    lm = LM(params, cfg, head).with_mesh(mesh)
+    dense = LM(params, cfg).with_mesh(mesh)
+    b, p, g = 4, 6, 5
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (b, p), 0,
+                                 cfg.vocab_size)
+    for sampler in (Sampler(), Sampler(temperature=0.9, top_k=12, seed=7)):
+        base = np.asarray(dense.generate(prompts, g, sampler=sampler))
+        for k in (1, 4):
+            got = np.asarray(lm.generate(prompts, g, sampler=sampler,
+                                         spec_decode=k))
+            np.testing.assert_array_equal(
+                got, base,
+                err_msg=f"on-mesh spec_decode={k} diverged ({kind})")
+    reqs = [(np.asarray(prompts[i]), g) for i in range(b)]
+    ebase = dense.serve(reqs, n_slots=b)
+    assert lm.serve(reqs, n_slots=b, spec_decode=4) == ebase
+
+
 # --------------------------------------------------------------------------
 # the sharded head: logits parity + actual placement
 # --------------------------------------------------------------------------

@@ -1,0 +1,261 @@
+"""Speculative self-decode parity: sketch drafts, dense verifies, bitwise.
+
+The speculative megastep (launch/decode_loop.py, DESIGN.md §11) drafts K
+tokens through the cheap sketch head and verifies the block with one
+batched dense pass.  Its whole contract is that speculation is *invisible*
+in the tokens: every emitted token is the dense head's draw under the same
+split-key chain the plain decode loop walks, so greedy and seeded streams
+must be bitwise-equal to pure dense decode across K ∈ {1, 4, 16}, through
+both the static ``generate`` path and the continuous-batching engine, for
+every draft-head backend (fused / two_kernel / ref), including EOS firing
+mid-block and — since the random test head is rejected almost every block —
+rejection mid-block as the steady state.  Draft quality may only ever
+change *throughput* (how many drafts commit per verify), never a single
+token.  Donation is in the loop throughout: the spec megastep donates its
+cache like the plain megastep, so any use-after-donate raises on CPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import LM, Sampler, SketchHead, SketchHeadConfig
+from repro.configs import get_config
+from repro.core.sketch_lm_head import HEAD_BACKENDS, freeze_head
+
+_KS = [1, 4, 16]
+_HEAD_CFG = SketchHeadConfig(n_rows=32, n_buckets=8, k=1, proj_dim=16,
+                             bandwidth=2.0)
+_SAMPLERS = {
+    "greedy": Sampler(),
+    "seeded": Sampler(temperature=0.9, top_k=12, seed=7),
+}
+
+
+@pytest.fixture(scope="module")
+def served():
+    from repro.models.model import init_model
+
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    kp, ka, kj, kf = jax.random.split(jax.random.PRNGKey(42), 4)
+    kparams = {
+        "points": jax.random.normal(kp, (128, _HEAD_CFG.proj_dim)),
+        "alphas": jax.random.normal(ka, (128, cfg.vocab_size)) * 0.01,
+        "proj": jax.random.normal(kj, (cfg.d_model, _HEAD_CFG.proj_dim))
+        / np.sqrt(cfg.d_model),
+    }
+    frozen = freeze_head(kf, kparams, _HEAD_CFG)
+    heads = {be: SketchHead(cfg=_HEAD_CFG, backend=be, params=frozen)
+             for be in HEAD_BACKENDS}
+    return cfg, params, heads
+
+
+def _lms(served, backend):
+    """(drafting LM, pure-dense baseline LM) sharing params."""
+    cfg, params, heads = served
+    return LM(params, cfg, heads[backend]), LM(params, cfg)
+
+
+def _prompts(cfg, b=3, p=5):
+    return jax.random.randint(jax.random.PRNGKey(1), (b, p), 0,
+                              cfg.vocab_size)
+
+
+# --------------------------------------------------------------------------
+# the parity grid: K × backend × sampler × {generate, engine}
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampler", sorted(_SAMPLERS))
+@pytest.mark.parametrize("backend", HEAD_BACKENDS)
+def test_generate_bitwise_equal_to_dense(served, backend, sampler):
+    """Static generate: spec-decode streams == pure dense streams, bitwise,
+    at every K — the random head rejects nearly every draft, so this grid
+    is the rejection-mid-block path almost every megastep."""
+    lm, dense = _lms(served, backend)
+    prompts = _prompts(lm.cfg)
+    base = np.asarray(dense.generate(prompts, 9, sampler=_SAMPLERS[sampler]))
+    for k in _KS:
+        got = np.asarray(lm.generate(prompts, 9, sampler=_SAMPLERS[sampler],
+                                     spec_decode=k))
+        np.testing.assert_array_equal(
+            got, base, err_msg=f"spec_decode={k} diverged from dense "
+            f"({backend}, {sampler})")
+
+
+@pytest.mark.parametrize("sampler", sorted(_SAMPLERS))
+@pytest.mark.parametrize("backend", HEAD_BACKENDS)
+def test_engine_bitwise_equal_to_dense(served, backend, sampler):
+    """Engine: speculative ticks emit exactly the dense per-token-tick
+    streams (synchronized arrivals keep the admission order — and so the
+    seeded key chain — identical across K)."""
+    lm, dense = _lms(served, backend)
+    b, p, g = 3, 5, 9
+    prompts = _prompts(lm.cfg, b, p)
+    reqs = [(np.asarray(prompts[i]), g) for i in range(b)]
+    base = dense.serve(reqs, n_slots=b, sampler=_SAMPLERS[sampler])
+    for k in _KS:
+        got = lm.serve(reqs, n_slots=b, sampler=_SAMPLERS[sampler],
+                       spec_decode=k)
+        assert got == base, (f"engine spec_decode={k} diverged "
+                             f"({backend}, {sampler})")
+
+
+def test_engine_spec_matches_static_generate(served):
+    """Cross-path: the speculative engine reproduces the dense host-loop
+    static generate (scheduler, spec megastep, rollback, and slot ops all
+    in the loop)."""
+    lm, dense = _lms(served, "fused")
+    b, p, g = 3, 5, 9
+    prompts = _prompts(lm.cfg, b, p)
+    expected = np.asarray(dense.generate(prompts, g))
+    finished = lm.serve([(np.asarray(prompts[i]), g) for i in range(b)],
+                        n_slots=b, spec_decode=4)
+    for i in range(b):
+        np.testing.assert_array_equal(np.asarray(finished[i]),
+                                      expected[i, p:])
+
+
+def test_engine_spec_staggered_matches_solo_generate(served):
+    """Slot recycling under speculative ticks: every request of a
+    staggered, mixed-length stream still emits exactly its solo dense
+    stream (the draft clamp tracks arrivals and per-slot budgets)."""
+    lm, dense = _lms(served, "ref")
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, lm.cfg.vocab_size, 4 + (i % 3), dtype=np.int32),
+             3 + 2 * (i % 3), i) for i in range(5)]
+    finished = lm.serve(reqs, n_slots=2, spec_decode=4)
+    for rid, (prompt, gen, _) in enumerate(reqs):
+        solo = np.asarray(dense.generate(prompt[None], gen))
+        np.testing.assert_array_equal(np.asarray(finished[rid]),
+                                      solo[0, len(prompt):])
+
+
+# --------------------------------------------------------------------------
+# EOS + rejection mid-block
+# --------------------------------------------------------------------------
+
+def test_eos_mid_block_generate(served):
+    """An EOS inside a draft block retires the row in-megastep: the stream
+    matches the dense host loop's (pad tail included) at every K."""
+    lm, dense = _lms(served, "fused")
+    prompts = _prompts(lm.cfg)
+    plain = np.asarray(dense.generate(prompts, 9))
+    eos = int(plain[0, 5 + 3])           # emitted mid-way through block 1
+    base = np.asarray(dense.generate(prompts, 9, eos_id=eos, pad_id=0))
+    assert (base[0] == 0).any()          # the EOS actually fired
+    for k in (4, 16):
+        got = np.asarray(lm.generate(prompts, 9, eos_id=eos, pad_id=0,
+                                     spec_decode=k))
+        np.testing.assert_array_equal(got, base)
+
+
+def test_eos_mid_block_engine(served):
+    """Engine: a verify-pass EOS mid-block retires the request with exactly
+    the dense stream (uncommitted block entries are discarded, the slot
+    resets and is reusable)."""
+    lm, dense = _lms(served, "fused")
+    b, p, g = 3, 5, 9
+    prompts = _prompts(lm.cfg, b, p)
+    plain = np.asarray(dense.generate(prompts, g))
+    eos = int(plain[0, p + 3])
+    reqs = [(np.asarray(prompts[i]), g) for i in range(b)]
+    base = dense.serve(reqs, n_slots=b, eos_id=eos)
+    assert any(s[-1] == eos and len(s) < g for s in base.values())
+    for k in (4, 16):
+        engine = lm.engine(n_slots=b, max_seq=p + g, eos_id=eos,
+                           spec_decode=k)
+        rids = [engine.submit(pr, mx) for pr, mx in reqs]
+        got = engine.run()
+        assert {r: got[r] for r in rids} == base
+        assert engine.stats["admitted"] == engine.stats["retired"] == b
+        assert engine.sched.n_free == b   # every slot recycled
+
+
+def test_rejection_mid_block_accounting(served):
+    """The random head's drafts are mostly rejected: the stats must show
+    real rejections (accepted < drafted), at least one commit per verify
+    (the verify pass itself always yields the next dense token), and the
+    stream is unchanged — rejection costs throughput, never tokens."""
+    lm, dense = _lms(served, "fused")
+    prompts = _prompts(lm.cfg)
+    base = np.asarray(dense.generate(prompts, 9))
+    got, stats = lm.generate(prompts, 9, spec_decode=4, return_stats=True)
+    np.testing.assert_array_equal(np.asarray(got), base)
+    assert stats["verify_calls"] >= 2          # rejections forced re-drafts
+    assert stats["accepted_draft_tokens"] < stats["draft_tokens"]
+    # every megastep commits >= 1 token: 8 post-prefill tokens emitted in
+    # verify_calls dispatches of <= 4 drafts each
+    assert stats["verify_calls"] <= 8
+
+
+# --------------------------------------------------------------------------
+# the serve-fns knob, validation, donation
+# --------------------------------------------------------------------------
+
+def test_jitted_serve_fns_spec_decode_knob(served):
+    """The spec_decode knob on jitted_serve_fns: the returned struct still
+    unpacks as the legacy 4-tuple, shares the (cfg, head, mesh) compile
+    cache (a spec sampler must not recompile the model steps), and carries
+    the memoized speculative megastep."""
+    from repro.launch.decode_loop import jitted_spec_megastep
+    from repro.launch.steps import jitted_serve_fns
+
+    cfg, _, heads = served
+    spec = heads["fused"].without_params()
+    base = jitted_serve_fns(cfg, heads["fused"])
+    a = jitted_serve_fns(cfg, heads["fused"], sampler=Sampler(),
+                         spec_decode=4, eos_id=3)
+    prefill, decode, insert, reset = a            # legacy unpacking
+    assert decode is base.decode                  # shared compile cache
+    assert a.megastep is None
+    assert a.spec_megastep is jitted_spec_megastep(
+        cfg, spec, Sampler(), 4, eos_id=3, masked=True)
+    with pytest.raises(ValueError, match="sampler"):
+        jitted_serve_fns(cfg, heads["fused"], spec_decode=4)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        jitted_serve_fns(cfg, heads["fused"], sampler=Sampler(),
+                         spec_decode=4, decode_chunk=4)
+    with pytest.raises(ValueError, match="spec_decode"):
+        jitted_serve_fns(cfg, heads["fused"], sampler=Sampler(),
+                         spec_decode=-1)
+
+
+def test_spec_decode_validation_surfaces(served):
+    """generate / engine / serve all reject spec_decode × decode_chunk and
+    negative K — the contract is uniform across the stack."""
+    cfg, params, heads = served
+    lm = LM(params, cfg, heads["fused"])
+    prompts = _prompts(cfg, 1, 4)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        lm.generate(prompts, 4, spec_decode=4, decode_chunk=4)
+    with pytest.raises(ValueError, match="spec_decode"):
+        lm.generate(prompts, 4, spec_decode=-2)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        lm.engine(n_slots=2, max_seq=8, spec_decode=4, decode_chunk=4)
+    with pytest.raises(ValueError, match="spec_decode"):
+        lm.engine(n_slots=2, max_seq=8, spec_decode=-1)
+
+
+def test_spec_megastep_donates_cache(served):
+    """The speculative megastep donates its cache argument like the plain
+    megastep: the passed-in buffers are deleted on CPU, so draft K steps +
+    verify + rollback cost zero extra cache copies."""
+    from repro.launch.decode_loop import jitted_spec_megastep
+    from repro.launch.steps import jitted_serve_fns
+    from repro.models.model import init_decode_cache
+
+    cfg, params, heads = served
+    head = heads["fused"]
+    prefill, decode, insert, reset = jitted_serve_fns(cfg, head)
+    logits, cache = prefill(params, _prompts(cfg, 2, 4),
+                            cache=init_decode_cache(cfg, 2, 8))
+    fn = jitted_spec_megastep(cfg, head.without_params(), Sampler(), 4,
+                              masked=True)
+    old = cache
+    out = fn(params, cache, jnp.zeros(2, jnp.int32),
+             jnp.full(2, 4, jnp.int32), Sampler().init_key(),
+             head_params=head.params, active=jnp.asarray([True, True]))
+    jax.block_until_ready(out[0])
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(old))

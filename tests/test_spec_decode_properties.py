@@ -1,0 +1,124 @@
+"""Property-based invariants for speculative self-decode (DESIGN.md §11).
+
+Two families, under random traffic (draft lengths × generation budgets ×
+sampler seeds × draft-head seeds):
+
+* **Token accounting** — the emitted stream is exactly what the megasteps
+  committed: every verify commits at least one token (the verify pass
+  itself always yields the next dense token) and at most one *bonus* token
+  beyond the accepted drafts, so
+
+      accepted  <=  emitted  <=  accepted + verify_calls
+      accepted  <=  drafted  ==  sum(draft block sizes)
+
+  with the emitted stream still bitwise the dense stream — draft quality
+  (here: a random head, i.e. near-zero acceptance) moves only the stats.
+
+* **Self-verification fixed point** — when the draft head *is* the dense
+  head, every draft is its own verify draw, so the acceptance rate is
+  exactly 1.0: ``accepted == drafted`` for any K, greedy or seeded.
+
+Marked slow: tier-1 (-m "not slow") stays fast.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: property tests are skipped without hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.api import LM, Sampler, SketchHead, SketchHeadConfig
+from repro.configs import get_config
+from repro.core.sketch_lm_head import freeze_head
+
+pytestmark = pytest.mark.slow
+
+# Few examples, no deadline: each example is a real (smoke-scale) serving
+# run; draft lengths are capped so the jitted-megastep memo cache bounds
+# compiles across examples.
+_SETTINGS = settings(max_examples=10, deadline=None)
+_HEAD_CFG = SketchHeadConfig(n_rows=32, n_buckets=8, k=1, proj_dim=16,
+                             bandwidth=2.0)
+
+
+@pytest.fixture(scope="module")
+def served():
+    from repro.models.model import init_model
+
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _random_head(cfg, seed):
+    kp, ka, kj, kf = jax.random.split(jax.random.PRNGKey(seed), 4)
+    kparams = {
+        "points": jax.random.normal(kp, (64, _HEAD_CFG.proj_dim)),
+        "alphas": jax.random.normal(ka, (64, cfg.vocab_size)) * 0.01,
+        "proj": jax.random.normal(kj, (cfg.d_model, _HEAD_CFG.proj_dim))
+        / np.sqrt(cfg.d_model),
+    }
+    return SketchHead(cfg=_HEAD_CFG, backend="ref",
+                      params=freeze_head(kf, kparams, _HEAD_CFG))
+
+
+def _sampler(seed):
+    # seed == 0 → greedy; else a seeded categorical chain
+    return Sampler() if seed == 0 else Sampler(temperature=0.9, top_k=12,
+                                               seed=seed)
+
+
+@_SETTINGS
+@given(gen_len=st.integers(2, 12), spec_k=st.integers(1, 4),
+       head_seed=st.integers(0, 2 ** 16), sampler_seed=st.integers(0, 3))
+def test_token_accounting(served, gen_len, spec_k, head_seed, sampler_seed):
+    """accepted <= emitted <= accepted + verify_calls, accepted <= drafted,
+    drafted == the sum of clamped draft blocks — and the stream is still
+    bitwise dense."""
+    cfg, params = served
+    lm = LM(params, cfg, _random_head(cfg, head_seed))
+    sampler = _sampler(sampler_seed)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                 cfg.vocab_size)
+    out, stats = lm.generate(prompts, gen_len, sampler=sampler,
+                             spec_decode=spec_k, return_stats=True)
+    base = np.asarray(LM(params, cfg).generate(prompts, gen_len,
+                                               sampler=sampler))
+    np.testing.assert_array_equal(np.asarray(out), base)
+
+    b = prompts.shape[0]
+    emitted = b * (gen_len - 1)          # first token comes from prefill
+    accepted = stats["accepted_draft_tokens"]
+    drafted = stats["draft_tokens"]
+    verifies = stats["verify_calls"]
+    assert 0 <= accepted <= drafted
+    assert drafted == b * stats["decode_steps"]   # every draft is a step
+    assert stats["decode_steps"] <= verifies * spec_k
+    # each verify commits >= 1 and <= spec_k tokens per row (lockstep):
+    assert accepted <= emitted <= accepted + b * verifies
+    if gen_len > 1:
+        assert verifies >= 1
+
+
+@_SETTINGS
+@given(gen_len=st.integers(2, 12), spec_k=st.integers(1, 4),
+       sampler_seed=st.integers(0, 3))
+def test_dense_draft_accepts_everything(served, gen_len, spec_k,
+                                        sampler_seed):
+    """When the draft head IS the dense head, every draft is its own verify
+    draw: acceptance rate is exactly 1.0 and every megastep commits its
+    full block."""
+    cfg, params = served
+    lm = LM(params, cfg)                 # DenseHead drafts AND verifies
+    sampler = _sampler(sampler_seed)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                 cfg.vocab_size)
+    out, stats = lm.generate(prompts, gen_len, sampler=sampler,
+                             spec_decode=spec_k, return_stats=True)
+    assert stats["accepted_draft_tokens"] == stats["draft_tokens"]
+    base = np.asarray(lm.generate(prompts, gen_len, sampler=sampler))
+    np.testing.assert_array_equal(np.asarray(out), base)
