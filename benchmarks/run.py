@@ -30,6 +30,9 @@ def main() -> None:
                          "benchmarks (e.g. 4x2; needs XLA_FLAGS forced "
                          "devices on CPU).  Recorded in every BENCH_*.json "
                          "record's mesh field; default single-device 1x1")
+    ap.add_argument("--quant", default=None, choices=["int8", "int4"],
+                    help="serve the sketch-head benchmark from quantized "
+                         "count-array storage (DESIGN.md §12)")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
     csv_rows = []
@@ -76,13 +79,20 @@ def main() -> None:
     if want("sketch_head"):
         print("== Sketched LM head vs dense head ==")
         from benchmarks import sketch_head_bench
-        r = sketch_head_bench.run(backend=args.backend, mesh=args.mesh)
+        r = sketch_head_bench.run(backend=args.backend, mesh=args.mesh,
+                                  quant=args.quant)
         csv_rows.append(("sketch_head/dense", r["us_dense"],
                          f"flops={r['dense_flops']}"))
         csv_rows.append((f"sketch_head/{r['head']['backend']}",
                          r["us_sketch"],
                          f"flops={r['sketch_flops']};"
-                         f"flop_ratio={r['flop_ratio']:.1f}x"))
+                         f"flop_ratio={r['flop_ratio']:.1f}x;"
+                         f"bytes_ratio={r['bytes_ratio']:.2f}x"))
+        for mode, e in r["quant_curve"].items():
+            csv_rows.append((f"sketch_head/quant_{mode}", 0.0,
+                             f"logit_mae={e['logit_mae']:.4f};"
+                             f"top1={e['top1_agreement']:.3f};"
+                             f"bytes_ratio={e['bytes_ratio']:.2f}x"))
         print()
 
     if want("engine"):

@@ -27,6 +27,13 @@ Version history:
                  ``acceptance_rate`` and ``accepted_tokens_per_verify``;
                  BENCH_sketch_serve.json gains a ``spec_decode`` section
                  with the same two fields
+  5            — quantized count-array storage (DESIGN.md §12):
+                 BENCH_sketch_serve.json gains the ``quant_curve``
+                 accuracy-vs-bits section ({f32, int8, int4}, each with
+                 ``logit_mae`` / ``top1_agreement`` / ``bytes_ratio``) and
+                 the dtype-aware ``dense_bytes`` / ``sketch_bytes`` /
+                 ``bytes_ratio`` cost fields; head records may carry
+                 ``quant`` (null / "int8" / "int4")
 
 ``validate_engine_record`` / ``validate_serve_record`` are the structural
 checks the CI bench-smoke job runs on freshly emitted artifacts.  The CLI
@@ -39,7 +46,11 @@ any):
 
 from __future__ import annotations
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
+
+#: Count-array storage modes of the serve record's ``quant_curve`` (v5).
+_QUANT_CURVE_MODES = ("f32", "int8", "int4")
+_QUANT_CURVE_FIELDS = ("logit_mae", "top1_agreement", "bytes_ratio")
 
 #: Fields every timed serving-run record must carry (schema v3+).
 _RUN_FIELDS = ("seconds", "tokens", "tok_s", "decode_steps")
@@ -123,17 +134,29 @@ def validate_engine_record(record: dict) -> None:
 
 
 def validate_serve_record(record: dict) -> None:
-    """Structural check for a BENCH_sketch_serve.json record (schema v4)."""
+    """Structural check for a BENCH_sketch_serve.json record (schema v5)."""
     name = "BENCH_sketch_serve"
     _validate_common(record, name)
     _require(record, ("decode_chunk", "us_dense", "us_sketch",
-                      "spec_decode"), name)
+                      "spec_decode", "quant_curve",
+                      "dense_bytes", "sketch_bytes", "bytes_ratio"), name)
     spec = record["spec_decode"]
     _require(spec, ("k", "acceptance_rate", "accepted_tokens_per_verify"),
              f"{name}.spec_decode")
     if not 0.0 <= spec["acceptance_rate"] <= 1.0:
         raise ValueError(f"{name}.spec_decode: acceptance_rate "
                          f"{spec['acceptance_rate']} outside [0, 1]")
+    curve = record["quant_curve"]
+    _require(curve, _QUANT_CURVE_MODES, f"{name}.quant_curve")
+    for mode in _QUANT_CURVE_MODES:
+        entry = curve[mode]
+        _require(entry, _QUANT_CURVE_FIELDS, f"{name}.quant_curve[{mode}]")
+        if not 0.0 <= entry["top1_agreement"] <= 1.0:
+            raise ValueError(f"{name}.quant_curve[{mode}]: top1_agreement "
+                             f"{entry['top1_agreement']} outside [0, 1]")
+        if entry["bytes_ratio"] <= 0:
+            raise ValueError(f"{name}.quant_curve[{mode}]: non-positive "
+                             f"bytes_ratio {entry['bytes_ratio']}")
 
 
 def main(argv=None) -> int:

@@ -6,7 +6,7 @@ Times the three serving decode paths —
   2-kernel   lsh_hash → HBM (B, L) idx → sketch_head  (separate kernels)
   fused      one pallas_call: transform→hash→gather   (repro.kernels.fused_decode)
 
-— and emits ``BENCH_sketch_serve.json`` (schema v4) at the repo root.
+— and emits ``BENCH_sketch_serve.json`` (schema v5) at the repo root.
 Wall-clock is the jnp/ref path on CPU (interpret-mode Pallas timing is not
 a TPU proxy); the analytic FLOP/byte terms are the deployment-relevant
 comparison, including the HBM round trip on the index tensor that fusion
@@ -14,7 +14,15 @@ eliminates.  The v4 ``spec_decode`` section measures the head as a
 *speculative draft model* (DESIGN.md §11): a distilled head's greedy
 agreement with the dense argmax over K-token blocks gives the
 ``acceptance_rate`` / ``accepted_tokens_per_verify`` a spec-decode serving
-loop would see at this head quality.
+loop would see at this head quality.  The v5 ``quant_curve`` section is
+the accuracy-vs-bits trade-off of quantized count-array storage
+(DESIGN.md §12): per mode (f32 / int8 / int4), the logit MAE and argmax
+agreement against the f32 head plus the dtype-aware storage ratio vs the
+dense unembed — the paper's storage-reduction claim in one table.
+``--quant int8|int4`` additionally *serves* the timed sketch paths from
+quantized storage:
+
+  PYTHONPATH=src python -m benchmarks.sketch_head_bench --quant int8
 """
 
 from __future__ import annotations
@@ -27,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sketch_lm_head import apply_head, freeze_head, head_costs
+from repro.core.sketch_lm_head import (apply_head, freeze_head, head_costs,
+                                       quantize_head)
 from repro.models.config import SketchHeadConfig
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_sketch_serve.json"
@@ -90,8 +99,33 @@ def _spec_agreement(table, cfg, d_model, vocab, spec_k: int = 4,
             "distill_steps": distill_steps, "n_eval": int(n_eval)}
 
 
+def _quant_curve(head: dict, cfg, d_model: int, vocab: int,
+                 n_eval: int = 256) -> dict:
+    """Accuracy-vs-bits table for quantized count storage (schema v5).
+
+    Per storage mode: logit MAE and argmax agreement vs the f32 head on a
+    shared eval batch, plus the dtype-aware dense/sketch bytes ratio.
+    """
+    ev = jax.random.normal(jax.random.PRNGKey(21), (n_eval, d_model))
+    base = apply_head(head, ev, cfg, backend="ref")
+    base_tok = jnp.argmax(base, axis=-1)
+    curve = {}
+    for quant in (None, "int8", "int4"):
+        qhead = quantize_head(head, quant)
+        out = apply_head(qhead, ev, cfg, backend="ref", quant=quant)
+        costs = head_costs(cfg, d_model, vocab, quant=quant)
+        curve["f32" if quant is None else quant] = {
+            "logit_mae": float(jnp.abs(out - base).mean()),
+            "top1_agreement": float(
+                (jnp.argmax(out, axis=-1) == base_tok).mean()),
+            "sketch_bytes": costs["sketch_bytes"],
+            "bytes_ratio": costs["bytes_ratio"],
+        }
+    return curve
+
+
 def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
-        backend: str = "fused", mesh=None):
+        backend: str = "fused", mesh=None, quant=None):
     from benchmarks.schema import SCHEMA_VERSION, mesh_record
     from repro.launch.mesh import parse_mesh
 
@@ -111,19 +145,23 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
         / np.sqrt(d_model),
     }
     head = freeze_head(key, kparams, cfg)
+    # ``quant`` serves the timed sketch paths from quantized storage —
+    # the deployable artifact of DESIGN.md §12 (f32 counts stay around
+    # only to build the accuracy curve below).
+    qhead = quantize_head(head, quant)
 
     dense = jax.jit(lambda h: h @ table.T)
     sketch_jit = jax.jit(
-        lambda h: apply_head(head, h, cfg, backend=backend,
-                             kernel_backend="ref"))
+        lambda h: apply_head(qhead, h, cfg, backend=backend,
+                             kernel_backend="ref", quant=quant))
     # Dispatch-level comparison: what fusion actually removes is the kernel
     # boundary — two launches with the (B, L) idx tensor materialized
     # between them vs one launch.  (Under a single outer jit the two ref
     # paths compile to the same graph, so they are *not* compared there.)
-    two_kernel = lambda h: apply_head(head, h, cfg, backend="two_kernel",
-                                      kernel_backend="ref")
-    fused = lambda h: apply_head(head, h, cfg, backend="fused",
-                                 kernel_backend="ref")
+    two_kernel = lambda h: apply_head(qhead, h, cfg, backend="two_kernel",
+                                      kernel_backend="ref", quant=quant)
+    fused = lambda h: apply_head(qhead, h, cfg, backend="fused",
+                                 kernel_backend="ref", quant=quant)
 
     us_dense = _time(dense, hidden)
     us_sketch, us_two, us_fused = _time_group(
@@ -135,14 +173,15 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
         # forced-CPU devices this measures dispatch overhead, not a TPU
         # win; the record's mesh field is the point.
         from repro.sharding.rules import head_param_shardings
-        placed = jax.device_put(head, head_param_shardings(head, mesh))
+        placed = jax.device_put(qhead, head_param_shardings(qhead, mesh))
         sharded = jax.jit(lambda h: apply_head(placed, h, cfg,
                                                backend=backend,
                                                kernel_backend="ref",
-                                               mesh=mesh))
+                                               quant=quant, mesh=mesh))
         us_sharded = _time(sharded, hidden)
     spec = _spec_agreement(table, cfg, d_model, vocab)
-    costs = head_costs(cfg, d_model, vocab)
+    curve = _quant_curve(head, cfg, d_model, vocab)
+    costs = head_costs(cfg, d_model, vocab, quant=quant)
     # HBM traffic the fusion removes: write + read of the (B, L) int32 index
     # tensor between the lsh_hash and sketch_head kernel launches.
     idx_bytes = 2 * batch * cfg.n_rows * 4
@@ -156,6 +195,13 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
           f"  [1 launch; idx round trip saved: {idx_bytes} B/step]")
     print(f"  params: dense {costs['dense_params']/1e6:.1f}M vs sketch "
           f"{costs['sketch_params']/1e6:.1f}M  ({costs['param_ratio']:.1f}x)")
+    print(f"  bytes (quant={quant}): dense {costs['dense_bytes']/1e6:.1f}MB "
+          f"vs sketch {costs['sketch_bytes']/1e6:.1f}MB  "
+          f"({costs['bytes_ratio']:.2f}x)")
+    for mode, e in curve.items():
+        print(f"  quant_curve[{mode}]: logit_mae {e['logit_mae']:.4f}, "
+              f"top1_agreement {e['top1_agreement']:.3f}, "
+              f"bytes_ratio {e['bytes_ratio']:.2f}x")
     print(f"  flops/token: dense {costs['dense_flops']/1e6:.2f}M vs sketch "
           f"{costs['sketch_flops']/1e6:.2f}M  ({costs['flop_ratio']:.1f}x)")
     print(f"  spec draft (K={spec['k']}, distilled): acceptance "
@@ -170,7 +216,7 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
         # i.e. the host-loop serving shape (schema v3 field).
         "decode_chunk": 1,
         "d_model": d_model, "vocab": vocab, "batch": batch,
-        "head": {"kind": "sketch", "backend": backend},
+        "head": {"kind": "sketch", "backend": backend, "quant": quant},
         "head_config": {"n_rows": cfg.n_rows, "n_buckets": cfg.n_buckets,
                         "k": cfg.k, "proj_dim": cfg.proj_dim,
                         "bandwidth": cfg.bandwidth},
@@ -185,15 +231,43 @@ def run(d_model: int = 1024, vocab: int = 32768, batch: int = 8,
         "us_sharded": us_sharded,
         "idx_hbm_bytes_saved_per_step": idx_bytes,
         "spec_decode": spec,
+        "quant_curve": curve,
         "note": "us_two_kernel/us_fused are dispatch-level (kernel-boundary)"
                 " timings of the jnp reference paths on CPU; under one jit"
                 " both lower to the same graph, and interpret-mode Pallas is"
                 " not a TPU proxy — the analytic flop/byte terms are the"
                 " deployment comparison.  spec_decode measures a distilled"
                 " head's greedy draft acceptance against the dense argmax"
-                " over K-token blocks (DESIGN.md §11; schema v4).",
+                " over K-token blocks (DESIGN.md §11; schema v4)."
+                "  quant_curve is the accuracy-vs-bits trade-off of"
+                " quantized count storage vs the f32 head on a shared eval"
+                " batch; bytes fields are the dtype-aware storage"
+                " comparison at this record's serving quant mode"
+                " (DESIGN.md §12; schema v5).",
         **costs,
     }
     BENCH_JSON.write_text(json.dumps(result, indent=1))
     print(f"  wrote {BENCH_JSON}")
     return result
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="sketched-head serving microbenchmark "
+                    "(BENCH_sketch_serve.json)")
+    ap.add_argument("--backend", default="fused",
+                    choices=["fused", "two_kernel", "ref"])
+    ap.add_argument("--quant", default=None, choices=["int8", "int4"],
+                    help="serve the timed sketch paths from quantized "
+                         "count-array storage (DESIGN.md §12); the "
+                         "quant_curve section is emitted either way")
+    ap.add_argument("--mesh", default=None,
+                    help="'<data>x<model>' serving mesh (e.g. 4x2)")
+    args = ap.parse_args(argv)
+    run(backend=args.backend, mesh=args.mesh, quant=args.quant)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional, Type
 import jax.numpy as jnp
 
 from repro.core.sketch_lm_head import HEAD_BACKENDS as SKETCH_BACKENDS
+from repro.core.sketch_lm_head import QUANT_MODES
 from repro.models.config import SketchHeadConfig
 
 HEAD_KINDS: Dict[str, Type["LogitHead"]] = {}
@@ -173,8 +174,17 @@ class SketchHead(LogitHead):
     shard_map path: count arrays partitioned over ``model`` on the
     repetition axis, one psum per decode step (DESIGN.md §9).
 
+    ``quant`` declares the count-array storage (``None`` = f32,
+    ``"int8"``/``"int4"`` = per-row symmetric quantized with an extra
+    ``"scale"`` leaf in ``params``; DESIGN.md §12).  It is a *compare*
+    field: an int8 head and an f32 head of the same config are different
+    specs and compile different kernels, so the jit memo caches
+    (``launch.steps.jitted_serve_fns``) key on it automatically.
+
     >>> SketchHead(backend="ref").describe()
     'sketch/ref'
+    >>> SketchHead(quant="int8").describe()
+    'sketch/fused/int8'
     >>> SketchHead().with_backend("two_kernel").backend
     'two_kernel'
     >>> SketchHead(backend="nope")
@@ -188,6 +198,7 @@ class SketchHead(LogitHead):
 
     cfg: SketchHeadConfig = dataclasses.field(default_factory=SketchHeadConfig)
     backend: str = "fused"
+    quant: Optional[str] = None
     params: Optional[dict] = dataclasses.field(
         default=None, compare=False, repr=False)
 
@@ -196,6 +207,10 @@ class SketchHead(LogitHead):
             raise ValueError(
                 f"unknown sketch-head backend {self.backend!r}; "
                 f"expected one of {SKETCH_BACKENDS}")
+        if self.quant not in QUANT_MODES:
+            raise ValueError(
+                f"unknown sketch-head quant mode {self.quant!r}; "
+                f"expected one of {QUANT_MODES}")
 
     def apply(self, params: dict, hidden: jnp.ndarray,
               mesh=None) -> jnp.ndarray:
@@ -220,7 +235,7 @@ class SketchHead(LogitHead):
                 "with freeze_head/distill_head or load them with "
                 "SketchHead.load")
         return apply_head(params, hidden, self.cfg, backend=self.backend,
-                          mesh=mesh)
+                          quant=self.quant, mesh=mesh)
 
     def without_params(self) -> "SketchHead":
         """The bare spec — what jit memo caches should key on."""
@@ -244,9 +259,37 @@ class SketchHead(LogitHead):
         """
         return dataclasses.replace(self, backend=backend)
 
+    def quantized(self, quant: Optional[str]) -> "SketchHead":
+        """This head with its count array quantized to ``quant`` storage.
+
+        Args:
+          quant: ``"int8"`` / ``"int4"`` (per-row symmetric, DESIGN.md §12)
+            or ``None`` for a no-op on an f32 head.
+
+        Returns:
+          A new spec; when params are attached they are quantized in the
+          same step (``quantize_head``), so the result serves immediately.
+
+        Raises:
+          ValueError: if this head is already quantized (re-quantization
+            would compound rounding error; dequantize first) — unless
+            ``quant`` equals the current mode, which is a no-op.
+        """
+        if quant == self.quant:
+            return self
+        if self.quant is not None:
+            raise ValueError(
+                f"head is already {self.quant}-quantized; cannot "
+                f"re-quantize to {quant!r}")
+        from repro.core.sketch_lm_head import quantize_head
+        params = (quantize_head(self.params, quant)
+                  if self.params is not None else None)
+        return dataclasses.replace(self, quant=quant, params=params)
+
     def describe(self) -> str:
-        """``"sketch/<backend>"`` — the registry identity."""
-        return f"sketch/{self.backend}"
+        """``"sketch/<backend>[/<quant>]"`` — the registry identity."""
+        base = f"sketch/{self.backend}"
+        return base if self.quant is None else f"{base}/{self.quant}"
 
     # -- persistence (round-trips kind + backend, DESIGN.md §8) ------------
 
@@ -263,7 +306,7 @@ class SketchHead(LogitHead):
         if self.params is None:
             raise ValueError("cannot save a SketchHead without params")
         save_head(path, self.params, self.cfg,
-                  kind=self.kind, backend=self.backend)
+                  kind=self.kind, backend=self.backend, quant=self.quant)
 
     @classmethod
     def load(cls, path) -> "SketchHead":
@@ -278,7 +321,8 @@ class SketchHead(LogitHead):
         """
         from repro.core.sketch_lm_head import load_head_full
         params, cfg, meta = load_head_full(path)
-        return cls(cfg=cfg, backend=meta["backend"], params=params)
+        return cls(cfg=cfg, backend=meta["backend"], quant=meta["quant"],
+                   params=params)
 
 
 def load_head(path) -> LogitHead:

@@ -10,7 +10,11 @@ with *shared* anchors x_j and a shared asymmetric projection A (§4.3 of the
 paper), distilled from the dense head's logits by MSE.  Freezing gives one
 (L, R, V) sketch whose decode cost is L·V adds + a d×d' projection —
 replacing 2·d·V multiplies.  The paper's noted limitation (memory linear in
-V) is explicit here: memory = L·R·V vs d·V dense, a win iff L·R < d.
+V) is explicit here: memory = L·R·V vs d·V dense, a win iff L·R < d — and
+the *storage* claim (up to 114×) additionally needs the counts narrower
+than f32: ``quant="int8"|"int4"`` stores per-row symmetric-quantized counts
+plus (L, R) f32 scales, dequantized in-register by the decode kernels
+(DESIGN.md §12).
 
 Decode-path kernels: repro.kernels.fused_decode (transform → hash → gather in
 one pallas_call — the serving default), or the two-kernel composition of
@@ -21,6 +25,8 @@ repro.kernels.lsh_hash (projection+hash) and repro.kernels.sketch_head
 from __future__ import annotations
 
 import dataclasses
+import types
+import typing
 import warnings
 from pathlib import Path
 from typing import Dict, Optional, Tuple
@@ -32,10 +38,20 @@ import numpy as np
 from repro.core.distill import DistillConfig, distill
 from repro.core.kernel_model import KernelModel, KernelModelConfig
 from repro.core.lsh import L2LSH, LSHConfig
+from repro.kernels.common import pack_int4_rows, unpack_int4_rows
 from repro.kernels.fused_decode.ops import fused_decode_logits
 from repro.kernels.lsh_hash.ops import lsh_hash
 from repro.kernels.sketch_head.ops import sketch_head_logits
 from repro.models.config import SketchHeadConfig
+from repro.optim.compress import quantize_symmetric
+
+#: Count-array storage modes.  ``quant`` is *static* everywhere (it selects
+#: kernel code paths); the scales travel in the head dict as a traced leaf.
+QUANT_MODES = (None, "int8", "int4")
+
+#: Current .npz archive format.  v1 = pre-version f32-only archives (still
+#: loadable); v2 adds ``meta_format_version`` / ``meta_quant`` / ``scale``.
+HEAD_FORMAT_VERSION = 2
 
 
 def distill_head(
@@ -58,9 +74,76 @@ def distill_head(
     return params, metrics
 
 
+def _check_quant(quant: Optional[str]) -> None:
+    if quant not in QUANT_MODES:
+        raise ValueError(f"unknown quant mode {quant!r}; "
+                         f"expected one of {QUANT_MODES}")
+
+
+def quantize_counts(array: jnp.ndarray, quant: str,
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row symmetric quantization of an (L, R, V) count array.
+
+    Returns ``(store, scale)``: the int8 storage carrier — (L, R, V) int8
+    for ``"int8"``, (⌈L/2⌉, R, V) packed bytes for ``"int4"`` — and the
+    (L, R) f32 per-row scales.  One scale per gathered V-row keeps the
+    dequant a single multiply inside the decode kernels.
+    """
+    _check_quant(quant)
+    bits = {"int8": 8, "int4": 4}[quant]
+    q, scale = quantize_symmetric(array, bits=bits, axis=-1)
+    if quant == "int4":
+        q = pack_int4_rows(q)
+    return q, scale
+
+
+def quantize_head(head: dict, quant: Optional[str]) -> dict:
+    """Quantize a frozen f32 head's count array in place of ``"array"``.
+
+    Adds the ``"scale"`` leaf; hash/transform params stay f32 (they are
+    negligible next to the counts — see :func:`head_costs`).  ``None`` is a
+    no-op copy, so callers can thread a config switch straight through.
+    """
+    _check_quant(quant)
+    if "scale" in head:
+        raise ValueError("head is already quantized (has a 'scale' leaf)")
+    if quant is None:
+        return dict(head)
+    store, scale = quantize_counts(head["array"], quant)
+    out = dict(head)
+    out["array"] = store
+    out["scale"] = scale
+    return out
+
+
+def dequantize_head(head: dict, quant: Optional[str],
+                    n_rows: Optional[int] = None) -> dict:
+    """Materialize the f32 head back from quantized storage (debug/eval).
+
+    ``n_rows`` (true L) is needed for int4 only when it cannot be read off
+    the hash bank ``head["w"]``.
+    """
+    _check_quant(quant)
+    if quant is None:
+        return dict(head)
+    store = head["array"]
+    if quant == "int4":
+        l = n_rows if n_rows is not None else head["w"].shape[0]
+        store = unpack_int4_rows(store, l)
+    out = {k: v for k, v in head.items() if k != "scale"}
+    out["array"] = store.astype(jnp.float32) * head["scale"][:, :, None]
+    return out
+
+
 def freeze_head(key: jax.Array, kernel_params: dict,
-                cfg: SketchHeadConfig) -> dict:
-    """Build the deployable sketch-head params from distilled kernel params."""
+                cfg: SketchHeadConfig, *,
+                quant: Optional[str] = None) -> dict:
+    """Build the deployable sketch-head params from distilled kernel params.
+
+    ``quant`` quantizes the count array on freeze (int8/int4 per-row
+    symmetric; adds a ``"scale"`` leaf) — the deployable artifact never
+    materializes f32 counts again.
+    """
     points = kernel_params["points"]      # (M, d')
     alphas = kernel_params["alphas"]      # (M, V)
     lsh = L2LSH(LSHConfig(n_rows=cfg.n_rows, n_buckets=cfg.n_buckets,
@@ -70,12 +153,13 @@ def freeze_head(key: jax.Array, kernel_params: dict,
     onehot = jax.nn.one_hot(idx, cfg.n_buckets, dtype=jnp.float32)  # (M,L,R)
     # (L, R, V) — class-shared layout for the decode kernel.
     array = jnp.einsum("mlr,mv->lrv", onehot, alphas.astype(jnp.float32))
-    return {
+    head = {
         "proj": kernel_params["proj"],            # (d, d')
         "w": hash_params["w"],                    # (L, K, d')
         "b": hash_params["b"],                    # (L, K)
         "array": array,                           # (L, R, V)
     }
+    return quantize_head(head, quant)
 
 
 #: Decode backends of the sketched head (see repro.api.heads.SketchHead).
@@ -85,6 +169,7 @@ HEAD_BACKENDS = ("fused", "two_kernel", "ref")
 def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
                *, backend: Optional[str] = None,
                kernel_backend: Optional[str] = None,
+               quant: Optional[str] = None,
                mesh=None, use_pallas=None, fused=None) -> jnp.ndarray:
     """Sketched logits for (B, d) final hiddens → (B, V).
 
@@ -98,11 +183,15 @@ def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
 
     ``kernel_backend`` optionally forces the kernel registry's pallas/ref
     choice for this call (otherwise ``REPRO_KERNEL_BACKEND`` / the registry
-    default applies).  ``mesh`` (a ``jax.sharding.Mesh`` with a ``model``
-    axis) runs the head on the row-sharded shard_map path: count arrays
-    partitioned over ``model`` on the repetition axis, one psum of the
-    (B, V) partials per step (DESIGN.md §9) — any ``backend`` composes with
-    it.  ``use_pallas=`` / ``fused=`` are deprecated aliases.
+    default applies); ``backend="ref"`` already pins it to ``"ref"``, so
+    combining it with ``kernel_backend="pallas"`` is a contradiction and
+    raises.  ``quant`` declares the head's count-array storage (static;
+    must match the presence of the head's ``"scale"`` leaf).  ``mesh`` (a
+    ``jax.sharding.Mesh`` with a ``model`` axis) runs the head on the
+    row-sharded shard_map path: count arrays partitioned over ``model`` on
+    the repetition axis, scales with their rows, one psum of the (B, V)
+    partials per step (DESIGN.md §9) — any ``backend`` composes with it.
+    ``use_pallas=`` / ``fused=`` are deprecated aliases.
     """
     if fused is not None or use_pallas is not None:
         warnings.warn(
@@ -117,55 +206,140 @@ def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
     if backend is None:
         backend = "fused"
     if backend == "ref":
+        if kernel_backend not in (None, "ref"):
+            raise ValueError(
+                "apply_head(backend='ref') is the pure-jnp oracle and always "
+                f"runs kernel_backend='ref'; got kernel_backend="
+                f"{kernel_backend!r} — drop it or use backend='fused'/"
+                "'two_kernel' to pick the kernel implementation")
         backend, kernel_backend = "two_kernel", "ref"
+    _check_quant(quant)
+    if (quant is not None) != ("scale" in head):
+        raise ValueError(
+            f"quant={quant!r} inconsistent with head params: a quantized "
+            "head carries a 'scale' leaf and needs the matching quant= "
+            "(got scale " + ("present" if "scale" in head else "absent") + ")")
+    scale = head.get("scale")
     if backend == "fused":
         return fused_decode_logits(
             hidden.astype(jnp.float32), head["proj"], head["w"], head["b"],
             head["array"], bandwidth=cfg.bandwidth, n_buckets=cfg.n_buckets,
-            backend=kernel_backend, mesh=mesh)
+            scale=scale, quant=quant, backend=kernel_backend, mesh=mesh)
     if backend != "two_kernel":
         raise ValueError(f"unknown sketch-head backend {backend!r}; "
                          f"expected one of {HEAD_BACKENDS}")
     q = hidden.astype(jnp.float32) @ head["proj"]
     idx = lsh_hash(q, head["w"], head["b"], bandwidth=cfg.bandwidth,
                    n_buckets=cfg.n_buckets, backend=kernel_backend)
-    return sketch_head_logits(head["array"], idx, backend=kernel_backend,
-                              mesh=mesh)
+    return sketch_head_logits(head["array"], idx, scale=scale, quant=quant,
+                              backend=kernel_backend, mesh=mesh)
 
 
 def save_head(path, head: dict, cfg: SketchHeadConfig, *,
-              kind: str = "sketch", backend: str = "fused") -> None:
-    """Persist a frozen head (+ its static config) as an .npz archive.
+              kind: str = "sketch", backend: str = "fused",
+              quant: Optional[str] = None) -> None:
+    """Persist a frozen head (+ its static config) as a compressed .npz.
 
-    ``kind`` / ``backend`` are the head-registry identity (repro.api.heads);
-    they round-trip through :func:`load_head_meta` so a loaded head serves
-    on the same decode path it was saved with.
+    ``kind`` / ``backend`` / ``quant`` are the head-registry identity
+    (repro.api.heads); they round-trip through :func:`load_head_meta` so a
+    loaded head serves on the same decode path it was saved with.  Archives
+    carry ``meta_format_version`` (= :data:`HEAD_FORMAT_VERSION`); config
+    fields whose value is ``None`` are skipped and restored from the
+    dataclass defaults on load.
     """
+    _check_quant(quant)
+    if (quant is not None) != ("scale" in head):
+        raise ValueError(f"quant={quant!r} inconsistent with head params "
+                         "(see apply_head)")
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    np.savez(path, **{k: np.asarray(v) for k, v in head.items()},
-             meta_kind=np.asarray(kind), meta_backend=np.asarray(backend),
-             **{f"cfg_{f.name}": getattr(cfg, f.name)
-                for f in dataclasses.fields(cfg)})
+    np.savez_compressed(
+        path, **{k: np.asarray(v) for k, v in head.items()},
+        meta_format_version=np.asarray(HEAD_FORMAT_VERSION),
+        meta_kind=np.asarray(kind), meta_backend=np.asarray(backend),
+        meta_quant=np.asarray("none" if quant is None else quant),
+        **{f"cfg_{f.name}": getattr(cfg, f.name)
+           for f in dataclasses.fields(cfg)
+           if getattr(cfg, f.name) is not None})
 
 
-def load_head_full(path) -> Tuple[dict, SketchHeadConfig, Dict[str, str]]:
+def _coerce_config_value(value, typ):
+    """Coerce one archived config value to its dataclass field type.
+
+    Handles the types a config dataclass actually uses — int, float, bool,
+    str, and Optional[...] of those — from the 0-d numpy arrays an .npz
+    round-trip produces.  bool is checked before int (a bool *is* an int);
+    unknown types fall back to the raw ``.item()`` value.
+    """
+    origin = typing.get_origin(typ)
+    if origin is typing.Union or origin is getattr(types, "UnionType", None):
+        args = [a for a in typing.get_args(typ) if a is not type(None)]
+        if len(args) == 1:                  # Optional[T] → T (None values
+            typ = args[0]                   # are never written, see save)
+    v = value.item() if isinstance(value, np.ndarray) and value.ndim == 0 \
+        else value
+    if typ is bool:
+        return bool(v)
+    if typ is int:
+        return int(v)
+    if typ is float:
+        return float(v)
+    if typ is str:
+        return str(v)
+    return v
+
+
+def coerce_config(cls, raw: Dict[str, object]):
+    """Build a config dataclass from raw archive values, field-typed.
+
+    ``raw`` maps field names to archived values; missing fields fall back
+    to the dataclass defaults (forward compat for fields added after the
+    archive was written).  Field types are resolved through
+    ``typing.get_type_hints`` — the config module uses
+    ``from __future__ import annotations``, so ``field.type`` is a string.
+    """
+    hints = typing.get_type_hints(cls)
+    kwargs = {}
+    for f in dataclasses.fields(cls):
+        if f.name in raw:
+            kwargs[f.name] = _coerce_config_value(raw[f.name], hints[f.name])
+    return cls(**kwargs)
+
+
+def _meta_from_archive(data) -> Dict[str, object]:
+    quant = str(data["meta_quant"]) if "meta_quant" in data else "none"
+    return {
+        "format_version": (int(data["meta_format_version"])
+                           if "meta_format_version" in data else 1),
+        "kind": str(data["meta_kind"]) if "meta_kind" in data else "sketch",
+        "backend": (str(data["meta_backend"])
+                    if "meta_backend" in data else "fused"),
+        "quant": None if quant == "none" else quant,
+    }
+
+
+def load_head_full(path) -> Tuple[dict, SketchHeadConfig, Dict[str, object]]:
     """One archive read → (frozen params, config, registry metadata).
 
-    Archives written before the metadata existed load as the historical
-    default, the fused sketch head.
+    Accepts every archive version: v1 (pre-version, pre-quant, uncompressed)
+    archives load unchanged as the historical default — the fused f32
+    sketch head.  Metadata keys: ``format_version``, ``kind``, ``backend``,
+    ``quant`` (``None`` for f32 heads).
     """
     with np.load(Path(path)) as data:
-        head = {k: jnp.asarray(data[k]) for k in ("proj", "w", "b", "array")}
-        fields = {f.name: f.type
-                  for f in dataclasses.fields(SketchHeadConfig)}
-        cfg = SketchHeadConfig(**{
-            name: (float if "float" in str(typ) else int)(data[f"cfg_{name}"])
-            for name, typ in fields.items()})
-        meta = {"kind": (str(data["meta_kind"])
-                         if "meta_kind" in data else "sketch"),
-                "backend": (str(data["meta_backend"])
-                            if "meta_backend" in data else "fused")}
+        keys = ["proj", "w", "b", "array"]
+        if "scale" in data:
+            keys.append("scale")
+        head = {k: jnp.asarray(data[k]) for k in keys}
+        cfg = coerce_config(SketchHeadConfig, {
+            f.name: data[f"cfg_{f.name}"]
+            for f in dataclasses.fields(SketchHeadConfig)
+            if f"cfg_{f.name}" in data})
+        meta = _meta_from_archive(data)
+    if (meta["quant"] is not None) != ("scale" in head):
+        raise ValueError(f"corrupt head archive {path}: meta_quant="
+                         f"{meta['quant']!r} but scale leaf "
+                         + ("present" if "scale" in head else "missing"))
     return head, cfg, meta
 
 
@@ -175,29 +349,50 @@ def load_head(path) -> Tuple[dict, SketchHeadConfig]:
     return head, cfg
 
 
-def load_head_meta(path) -> Dict[str, str]:
-    """Head-registry metadata of a saved head: ``{"kind", "backend"}``."""
+def load_head_meta(path) -> Dict[str, object]:
+    """Registry metadata of a saved head: ``{"format_version", "kind",
+    "backend", "quant"}``."""
     with np.load(Path(path)) as data:
-        return {"kind": (str(data["meta_kind"])
-                         if "meta_kind" in data else "sketch"),
-                "backend": (str(data["meta_backend"])
-                            if "meta_backend" in data else "fused")}
+        return _meta_from_archive(data)
 
 
-def head_costs(cfg: SketchHeadConfig, d_model: int, vocab: int) -> dict:
-    """Analytic memory/FLOP comparison vs the dense head (paper §4.3 model)."""
+def head_costs(cfg: SketchHeadConfig, d_model: int, vocab: int,
+               *, quant: Optional[str] = None) -> dict:
+    """Analytic memory/FLOP comparison vs the dense head (paper §4.3 model).
+
+    ``dense_params`` / ``sketch_params`` count *elements* (the historical
+    fields — identical under quantization, which is why they understate the
+    storage win); ``dense_bytes`` / ``sketch_bytes`` / ``bytes_ratio`` are
+    dtype-aware: f32 counts are 4 B, int8 counts 1 B, packed int4 counts
+    ½ B (+ the (L, R) f32 scales), hash/transform params always f32.
+    """
+    _check_quant(quant)
     dense_params = d_model * vocab
-    sketch_params = (cfg.n_rows * cfg.n_buckets * vocab
-                     + d_model * cfg.proj_dim
-                     + cfg.n_rows * cfg.k * cfg.proj_dim)
+    n_counts = cfg.n_rows * cfg.n_buckets * vocab
+    aux_params = (d_model * cfg.proj_dim            # asymmetric transform A
+                  + cfg.n_rows * cfg.k * cfg.proj_dim)  # hash bank w
+    sketch_params = n_counts + aux_params
     dense_flops = 2 * d_model * vocab
     sketch_flops = (2 * d_model * cfg.proj_dim            # projection
                     + 2 * cfg.proj_dim * cfg.k * cfg.n_rows  # hashing
                     + cfg.n_rows * vocab)                 # gather-mean adds
+
+    if quant == "int8":
+        count_bytes = n_counts                            # 1 B/count
+    elif quant == "int4":
+        count_bytes = -(-cfg.n_rows // 2) * cfg.n_buckets * vocab  # ½ B
+    else:
+        count_bytes = 4 * n_counts
+    scale_bytes = 4 * cfg.n_rows * cfg.n_buckets if quant else 0
+    dense_bytes = 4 * dense_params
+    sketch_bytes = count_bytes + scale_bytes + 4 * aux_params
     return {
         "dense_params": dense_params,
         "sketch_params": sketch_params,
         "param_ratio": dense_params / sketch_params,
+        "dense_bytes": dense_bytes,
+        "sketch_bytes": sketch_bytes,
+        "bytes_ratio": dense_bytes / sketch_bytes,
         "dense_flops": dense_flops,
         "sketch_flops": sketch_flops,
         "flop_ratio": dense_flops / sketch_flops,

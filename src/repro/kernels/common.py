@@ -36,3 +36,42 @@ def pad_axis(x: jnp.ndarray, axis: int, multiple: int, value=0) -> jnp.ndarray:
     pads = [(0, 0)] * x.ndim
     pads[axis] = (0, target - size)
     return jnp.pad(x, pads, constant_values=value)
+
+
+def pack_int4_rows(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4-valued int8 rows pairwise along axis 0: (N, …) → (⌈N/2⌉, …).
+
+    Byte ``i`` holds row ``2i`` in its low nibble and row ``2i+1`` in its
+    high nibble (odd N gets a zero pad row).  Packing along the *leading*
+    axis — not the trailing lane axis — keeps the minor (V) dimension of the
+    sketch count arrays intact, so the quantized decode kernels tile V
+    exactly like the f32 kernels and the true row count is always
+    recoverable from the (B, L) index / (L, K, d') hash-bank shapes (no
+    ambiguity at odd V; DESIGN.md §12).
+
+    Args:
+      q: int8 array with values in [-8, 7]; axis 0 is the packed axis.
+
+    Returns:
+      int8 array of packed bytes, shape ``(⌈N/2⌉, …)``.
+    """
+    if q.shape[0] % 2:
+        q = pad_axis(q, 0, 2)
+    lo = q[0::2].astype(jnp.uint8) & jnp.uint8(0x0F)
+    hi = q[1::2].astype(jnp.uint8) & jnp.uint8(0x0F)
+    return jax.lax.bitcast_convert_type(
+        lo | (hi << jnp.uint8(4)), jnp.int8)
+
+
+def unpack_int4_rows(packed: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4_rows`: (⌈N/2⌉, …) bytes → (n_rows, …) int8.
+
+    Sign-extends each nibble ((x << 4) >> 4 arithmetic-shift trick, all in
+    int8 registers) and interleaves low/high back to row order; ``n_rows``
+    slices off the pad row of an odd-N pack.  Cheap enough to run inside a
+    kernel body per tile — the dequantized values never touch HBM.
+    """
+    lo = jnp.right_shift(jnp.left_shift(packed, 4), 4)
+    hi = jnp.right_shift(packed, 4)
+    rows = jnp.stack([lo, hi], axis=1).reshape(-1, *packed.shape[1:])
+    return rows[:n_rows]

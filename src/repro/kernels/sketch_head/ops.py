@@ -6,6 +6,13 @@ repetition axis L, every shard runs the same kernel on its local rows, and
 the per-shard partial means finish with a single ``psum`` of the (B, V)
 logits.  Falls back to the single-device path when L does not divide the
 ``model`` axis size.
+
+Quantized storage (``quant="int8"|"int4"``, DESIGN.md §12) threads the
+(L, R) f32 ``scale`` alongside the integer count array; under the mesh the
+scales partition with their rows (``P("model", None)``).  int4 packs two
+L-rows per byte, so its storage axis is ⌈L/2⌉ — the sharded path
+additionally requires shard boundaries to land on byte boundaries
+(L/msize even) and falls back to the replicated path otherwise.
 """
 
 from __future__ import annotations
@@ -25,22 +32,25 @@ from repro.kernels.sketch_head.ref import sketch_head_ref
 
 
 @registry.register("sketch_head", "pallas")
-@partial(jax.jit, static_argnames=("block_b", "block_v"))
-def _pallas(sketch, idx, *, block_b, block_v):
-    return sketch_head_pallas(sketch, idx, block_b=block_b, block_v=block_v)
+@partial(jax.jit, static_argnames=("quant", "block_b", "block_v"))
+def _pallas(sketch, idx, scale=None, *, quant=None, block_b, block_v):
+    return sketch_head_pallas(sketch, idx, scale, quant=quant,
+                              block_b=block_b, block_v=block_v)
 
 
 @registry.register("sketch_head", "ref")
-@partial(jax.jit, static_argnames=("block_b", "block_v"))
-def _ref(sketch, idx, *, block_b, block_v):
+@partial(jax.jit, static_argnames=("quant", "block_b", "block_v"))
+def _ref(sketch, idx, scale=None, *, quant=None, block_b, block_v):
     del block_b, block_v  # tiling is a pallas concern
-    return sketch_head_ref(sketch, idx)
+    return sketch_head_ref(sketch, idx, scale, quant)
 
 
 def sketch_head_logits(
-    sketch: jnp.ndarray,   # (L, R, V)
+    sketch: jnp.ndarray,   # (L, R, V) f32 | (Lstore, R, V) int8 when quant
     idx: jnp.ndarray,      # (B, L)
     *,
+    scale: Optional[jnp.ndarray] = None,   # (L, R) f32 when quantized
+    quant: Optional[str] = None,           # None | "int8" | "int4"
     block_b: int = 8,
     block_v: int = 2048,
     use_pallas: Optional[bool] = None,
@@ -50,8 +60,13 @@ def sketch_head_logits(
     """Estimate (B, V) logits from precomputed bucket indices.
 
     Args:
-      sketch: the (L, R, V) per-class RACE count arrays.
+      sketch: the per-class RACE count arrays — (L, R, V) f32, or for
+        ``quant`` the int8 carrier ((L, R, V) int8 / (⌈L/2⌉, R, V) packed
+        int4 bytes).
       idx: (B, L) int32 bucket indices from ``lsh_hash``.
+      scale: (L, R) f32 per-row dequantization scales (required iff
+        ``quant`` is set).
+      quant: ``None`` (f32 counts), ``"int8"`` or ``"int4"`` — static.
       block_b / block_v: pallas VMEM tile sizes.
       use_pallas: deprecated pallas/ref switch (prefer ``backend``).
       backend: kernel registry backend (``"pallas"`` / ``"ref"``); ``None``
@@ -62,10 +77,19 @@ def sketch_head_logits(
     Returns:
       (B, V) f32 logit estimates (the row-mean over L sketch reads).
     """
+    if (scale is None) != (quant is None):
+        raise ValueError("quant and scale must be passed together "
+                         f"(quant={quant!r}, scale is "
+                         f"{'None' if scale is None else 'set'})")
     impl = registry.resolve("sketch_head", backend, use_pallas)
-    l = sketch.shape[0]
+    l = idx.shape[1]
+    l_store = sketch.shape[0]
     msize = mesh_axis_size(mesh, "model")
-    if msize > 1 and l % msize == 0:
+    shardable = msize > 1 and l % msize == 0 and l_store % msize == 0
+    if quant == "int4":
+        # Byte-aligned shards only: no pad row, even true rows per shard.
+        shardable = shardable and 2 * l_store == l
+    if shardable:
         l_shard = l // msize
         # Keep the batch sharded over data when it divides (decode caches
         # already are): each device reads only its rows' indices and the
@@ -73,14 +97,26 @@ def sketch_head_logits(
         dsize = mesh_axis_size(mesh, "data")
         bspec = "data" if dsize > 1 and idx.shape[0] % dsize == 0 else None
 
-        def local(sk, ix):
-            part = impl(sk, ix, block_b=block_b, block_v=block_v)
-            return jax.lax.psum(part * (l_shard / l), "model")
+        if quant is None:
+            def local(sk, ix):
+                part = impl(sk, ix, block_b=block_b, block_v=block_v)
+                return jax.lax.psum(part * (l_shard / l), "model")
+            in_specs = (P("model", None, None), P(bspec, "model"))
+            operands = (sketch, idx)
+        else:
+            def local(sk, ix, sc):
+                part = impl(sk, ix, sc, quant=quant,
+                            block_b=block_b, block_v=block_v)
+                return jax.lax.psum(part * (l_shard / l), "model")
+            in_specs = (P("model", None, None), P(bspec, "model"),
+                        P("model", None))
+            operands = (sketch, idx, scale)
 
         # check_rep=False: pallas_call has no replication rule; the psum
         # makes the output replicated over model by construction.
         return shard_map(
             local, mesh=mesh,
-            in_specs=(P("model", None, None), P(bspec, "model")),
-            out_specs=P(bspec, None), check_rep=False)(sketch, idx)
-    return impl(sketch, idx, block_b=block_b, block_v=block_v)
+            in_specs=in_specs,
+            out_specs=P(bspec, None), check_rep=False)(*operands)
+    return impl(sketch, idx, scale, quant=quant,
+                block_b=block_b, block_v=block_v)

@@ -7,17 +7,43 @@ row-mean (the paper notes mean ≈ MoM empirically; the mean keeps the head a
 single matvec-like reduction on TPU — see kernel.py):
 
     logits[b, v] = 1/L · Σ_l  S[l, h_l(q_b), v]
+
+Quantized storage (DESIGN.md §12): ``sketch`` may arrive int8 (per-row
+symmetric quantization) or packed int4 (two L-rows per byte) with an
+``(L, R)`` f32 ``scale``.  The oracle simply materializes the dequantized
+f32 array and reuses the f32 path — it is the *oracle*; the Pallas kernel is
+the one that must keep dequantization in-register.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
+
+from repro.kernels.common import unpack_int4_rows
+
+
+def dequantize_sketch_ref(
+    sketch: jnp.ndarray,     # int8: (L, R, V) or int4-packed (⌈L/2⌉, R, V)
+    scale: jnp.ndarray,      # (L, R) f32 per-row scales
+    quant: str,              # "int8" | "int4"
+) -> jnp.ndarray:            # (L, R, V) f32
+    """Materialized f32 counts from quantized storage (oracle/debug only)."""
+    n_rows = scale.shape[0]
+    if quant == "int4":
+        sketch = unpack_int4_rows(sketch, n_rows)
+    return sketch.astype(jnp.float32) * scale[:, :, None]
 
 
 def sketch_head_ref(
-    sketch: jnp.ndarray,   # (L, R, V) f32
+    sketch: jnp.ndarray,   # (L, R, V) f32 | quantized (see dequantize)
     idx: jnp.ndarray,      # (B, L) int32
+    scale: Optional[jnp.ndarray] = None,   # (L, R) f32 when quantized
+    quant: Optional[str] = None,           # None | "int8" | "int4"
 ) -> jnp.ndarray:          # (B, V)
+    if quant is not None:
+        sketch = dequantize_sketch_ref(sketch, scale, quant)
     l, r, v = sketch.shape
     # reads[b, l, v] = sketch[l, idx[b, l], v]
     reads = jnp.take_along_axis(

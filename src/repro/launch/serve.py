@@ -17,7 +17,10 @@ head (the paper's technique as a first-class serving feature — DESIGN.md §4)
 in either mode; ``--backend fused|two_kernel|ref`` picks its decode path
 (one fused Pallas call by default).  The head is distilled offline by
 examples/serve_sketch_head.py and loaded via ``--head-path``; without a
-saved head a quick in-process distillation builds one.
+saved head a quick in-process distillation builds one.  ``--quant
+int8|int4`` serves the head from quantized count-array storage (per-row
+symmetric scales, dequantized in-register by the decode kernels —
+DESIGN.md §12); a ``--head-path`` archive saved quantized loads as-is.
 
 ``--mesh <data>x<model>`` serves SPMD over a device mesh in either mode
 (params via ``sharding/rules.py``, caches batch-sharded over ``data``,
@@ -34,6 +37,7 @@ re-admission — docs/serving.md).
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
       --batch 4 --prompt-len 32 --gen 16 [--sketch-head] [--backend fused] \
+      [--quant int8] \
       [--temperature 0.8 --top-k 40 --top-p 0.95] [--decode-chunk 8] \
       [--engine --requests 8 --arrival-every 2] [--mesh 4x2]
 """
@@ -187,7 +191,8 @@ def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
 
 def build_or_load_head(params, cfg, head_path: str | None,
                        backend: str | None = None,
-                       distill_steps: int = 300) -> SketchHead:
+                       distill_steps: int = 300,
+                       quant: str | None = None) -> SketchHead:
     """Load a frozen sketch head, or distill one from the dense head now.
 
     The offline path (examples/serve_sketch_head.py) distills at a real
@@ -195,7 +200,10 @@ def build_or_load_head(params, cfg, head_path: str | None,
     distillation so ``--sketch-head`` is self-contained at smoke scale.
     Returns a ready-to-serve :class:`repro.api.SketchHead`.  ``backend=None``
     keeps a loaded head on the decode backend it was saved with (the
-    kind/backend round-trip); an explicit value overrides it.
+    kind/backend round-trip); an explicit value overrides it.  ``quant``
+    quantizes the count array post-load/post-freeze (``int8``/``int4``,
+    DESIGN.md §12); it is a no-op when a loaded archive already carries the
+    requested mode, and an error if it carries a different one.
     """
     from repro.core.distill import DistillConfig
     from repro.core.sketch_lm_head import distill_head, freeze_head
@@ -216,9 +224,11 @@ def build_or_load_head(params, cfg, head_path: str | None,
                 f"sketch head {head_path} was frozen for (d_model={d}, "
                 f"vocab={v}) but --arch {cfg.name} has "
                 f"(d_model={cfg.d_model}, vocab={cfg.vocab_size})")
+        if quant is not None and head.quant != quant:
+            head = head.quantized(quant)   # raises on a conflicting mode
         print(f"loaded sketch head from {head_path} "
               f"(L={head.cfg.n_rows}, R={head.cfg.n_buckets}, "
-              f"backend={head.backend})")
+              f"backend={head.backend}, quant={head.quant})")
         return head
 
     head_cfg = cfg.sketch_head or SketchHeadConfig(
@@ -232,9 +242,9 @@ def build_or_load_head(params, cfg, head_path: str | None,
         jax.random.PRNGKey(12), table, hiddens, head_cfg, n_points=256,
         distill_cfg=DistillConfig(n_steps=distill_steps, lr=5e-3))
     print(f"  distill MSE: {metrics['final_mse']:.5f}")
-    return SketchHead(cfg=head_cfg, backend=backend or "fused",
+    return SketchHead(cfg=head_cfg, backend=backend or "fused", quant=quant,
                       params=freeze_head(jax.random.PRNGKey(13), kparams,
-                                         head_cfg))
+                                         head_cfg, quant=quant))
 
 
 def run_engine(lm, args, sampler: Sampler) -> None:
@@ -298,6 +308,10 @@ def main() -> None:
                     help="sketch-head decode backend (DESIGN.md §8); "
                          "default: the backend a --head-path head was saved "
                          "with, else fused")
+    ap.add_argument("--quant", default=None, choices=["int8", "int4"],
+                    help="serve the sketch head from quantized count-array "
+                         "storage (per-row symmetric scales, in-register "
+                         "dequant — DESIGN.md §12)")
     ap.add_argument("--no-fused", action="store_true",
                     help="deprecated: alias for --backend two_kernel")
     ap.add_argument("--engine", action="store_true",
@@ -336,9 +350,12 @@ def main() -> None:
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_model(jax.random.PRNGKey(0), cfg)
+    if args.quant and not args.sketch_head:
+        ap.error("--quant only applies to the sketch head; add --sketch-head")
     head = DenseHead()
     if args.sketch_head:
-        head = build_or_load_head(params, cfg, args.head_path, backend)
+        head = build_or_load_head(params, cfg, args.head_path, backend,
+                                  quant=args.quant)
     lm = LM(params, cfg, head)
     if args.mesh:
         lm = lm.with_mesh(args.mesh)

@@ -1,23 +1,60 @@
-"""Int8 gradient compression with error feedback (distributed-opt trick).
+"""Symmetric integer quantization helpers + int8 gradient compression.
 
-For bandwidth-bound DP all-reduces: each replica quantizes its local
-gradient to int8 with a per-tensor scale, the all-reduce (``jax.lax.psum``
-inside ``shard_map``) runs on the int8 payload (~4× less ICI traffic), and
-the quantization residual is carried in an *error-feedback* buffer added to
-the next step's gradient — the EF-SGD construction that keeps convergence
-unbiased in the limit.
+Two consumers share the symmetric-scale construction:
 
-Used by launch/train.py when ``grad_compress=True``; validated for
-correctness-in-expectation in tests/test_optim.py.
+* **Gradient compression** (``compressed_psum``): per-tensor int8 scales for
+  bandwidth-bound DP all-reduces, with an error-feedback buffer carrying the
+  residual into the next step (EF-SGD; used by launch/train.py when
+  ``grad_compress=True``, validated in tests/test_optim.py).
+* **Quantized sketch-head storage** (``core.sketch_lm_head.quantize_head``):
+  per-*row* int8/int4 scales over the (L, R, V) count arrays — the paper's
+  storage-reduction claim (DESIGN.md §12).  ``quantize_symmetric`` is the
+  shared generalization: reduce |x| over ``axis`` instead of the whole
+  tensor, guard all-zero rows so no scale is 0/inf/nan.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+
+
+def quantize_symmetric(
+    x: jnp.ndarray,
+    *,
+    bits: int = 8,
+    axis: Optional[Union[int, Tuple[int, ...]]] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric signed quantization with per-``axis``-slice scales.
+
+    Args:
+      x: the float array to quantize.
+      bits: target signed bit width (8 → values in [-127, 127]; 4 → values
+        in [-7, 7], stored in an int8 carrier — pack with
+        ``kernels.common.pack_int4_rows`` for 2×/byte storage).
+      axis: the reduction axis/axes of the amax. ``None`` gives one
+        per-tensor scale (a 0-d array); an axis gives one scale per
+        remaining slice ("per-row": for an (L, R, V) count array,
+        ``axis=-1`` yields (L, R) scales, one per gathered V-row).
+
+    Returns:
+      ``(q, scale)`` — ``q`` int8 with values in [-qmax, qmax], ``scale``
+      f32 with the ``axis`` dims squeezed out, such that ``q * scale ≈ x``.
+      All-zero (and hence constant-zero) slices get scale 1.0, not 0: the
+      guard keeps both ``x / scale`` here and any downstream
+      ``1 / scale`` finite (no inf/nan rows — tests/test_quant.py).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    ax = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(ax), axis=axis, keepdims=axis is not None)
+    scale = jnp.where(amax > 0, amax, 1.0) / qmax
+    q = jnp.clip(jnp.round(ax / scale), -qmax, qmax).astype(jnp.int8)
+    if axis is not None:
+        scale = jnp.squeeze(scale, axis)
+    return q, scale.astype(jnp.float32)
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:

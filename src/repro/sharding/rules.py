@@ -94,6 +94,7 @@ _PARAM_RULES: Tuple[Tuple[str, P], ...] = (
     # sketch head embedded in a model tree (same layout as _HEAD_RULES:
     # count arrays over model on the repetition axis, hash params replicated)
     (r"sketch/array$",                P("model", None, None)),
+    (r"sketch/scale$",                P("model", None)),
     (r"sketch/.*$",                   P(None)),
 )
 
@@ -109,6 +110,11 @@ _PARAM_RULES: Tuple[Tuple[str, P], ...] = (
 # (tests/test_sharding.py).
 _HEAD_RULES: Tuple[Tuple[str, P], ...] = (
     (r"(^|/)array$",                  P("model", None, None)),
+    # Quantized heads: (L, R) per-row scales partition with their rows
+    # (DESIGN.md §12).  int4 heads store a packed (⌈L/2⌉, R, V) array —
+    # the same rule applies; _fit_spec falls back to replication when the
+    # packed dim does not divide the model axis.
+    (r"(^|/)scale$",                  P("model", None)),
     (r"(^|/)proj$",                   P(None, None)),
     (r"(^|/)w$",                      P(None, None, None)),
     (r"(^|/)b$",                      P(None, None)),

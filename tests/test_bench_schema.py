@@ -23,8 +23,8 @@ _SERVE = _ROOT / "BENCH_sketch_serve.json"
 
 
 def test_committed_artifacts_validate(capsys):
-    """The checked-in artifacts match the current schema (v4: spec_decode
-    sweeps with acceptance_rate / accepted_tokens_per_verify)."""
+    """The checked-in artifacts match the current schema (v5: quant_curve
+    accuracy-vs-bits section + dtype-aware bytes fields)."""
     assert main([str(_ENGINE), str(_SERVE)]) == 0
     out = capsys.readouterr().out
     assert out.count(f"valid (schema v{SCHEMA_VERSION})") == 2
@@ -89,6 +89,41 @@ def test_spec_run_range_checks():
     serve["spec_decode"]["acceptance_rate"] = -0.1
     with pytest.raises(ValueError, match="acceptance_rate"):
         validate_serve_record(serve)
+
+
+def test_quant_curve_required_and_checked():
+    """Schema v5: the serve record must carry the full quant_curve and the
+    dtype-aware bytes fields, with per-mode range checks."""
+    serve = json.loads(_SERVE.read_text())
+    missing = json.loads(_SERVE.read_text())
+    del missing["quant_curve"]
+    with pytest.raises(ValueError, match="quant_curve"):
+        validate_serve_record(missing)
+    for field in ("dense_bytes", "sketch_bytes", "bytes_ratio"):
+        broken = json.loads(_SERVE.read_text())
+        del broken[field]
+        with pytest.raises(ValueError, match=field):
+            validate_serve_record(broken)
+    partial = json.loads(_SERVE.read_text())
+    del partial["quant_curve"]["int4"]
+    with pytest.raises(ValueError, match="int4"):
+        validate_serve_record(partial)
+    serve["quant_curve"]["int8"]["top1_agreement"] = 1.2
+    with pytest.raises(ValueError, match="top1_agreement"):
+        validate_serve_record(serve)
+
+
+def test_serve_artifact_quant_curve_monotone():
+    """The committed curve is real measurement: the f32 row is exact,
+    accuracy degrades with fewer bits while the storage ratio climbs past
+    the acceptance floors (≥3.9× int8, ≥7.8× int4 at bench scale)."""
+    curve = json.loads(_SERVE.read_text())["quant_curve"]
+    assert curve["f32"]["logit_mae"] == 0.0
+    assert curve["f32"]["top1_agreement"] == 1.0
+    assert curve["int8"]["logit_mae"] <= curve["int4"]["logit_mae"]
+    assert curve["int8"]["top1_agreement"] >= curve["int4"]["top1_agreement"]
+    assert curve["int8"]["bytes_ratio"] >= 3.9
+    assert curve["int4"]["bytes_ratio"] >= 7.8
 
 
 def test_version_mismatch_rejected():

@@ -1,0 +1,337 @@
+"""Quantized count-array storage (DESIGN.md §12): numerics edge cases,
+int4 packing, pallas-vs-ref parity grids, the quantize/save/load/serve
+plumbing, and the satellite bugfixes (apply_head backend conflict, robust
+config coercion, versioned archives)."""
+
+import dataclasses
+import zipfile
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sketch_lm_head import (HEAD_FORMAT_VERSION, apply_head,
+                                       coerce_config, dequantize_head,
+                                       head_costs, load_head_full,
+                                       load_head_meta, quantize_counts,
+                                       quantize_head, save_head)
+from repro.kernels.common import pack_int4_rows, unpack_int4_rows
+from repro.kernels.fused_decode.ops import fused_decode_logits
+from repro.kernels.sketch_head.ops import sketch_head_logits
+from repro.models.config import SketchHeadConfig
+from repro.optim.compress import quantize_symmetric
+
+DATA = Path(__file__).parent / "data"
+
+
+def _head(key, d_model, vocab, cfg):
+    """Direct-construction frozen head (the bench/test pattern)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "proj": jax.random.normal(k1, (d_model, cfg.proj_dim)),
+        "w": jax.random.normal(k2, (cfg.n_rows, cfg.k, cfg.proj_dim)),
+        "b": jax.random.uniform(k3, (cfg.n_rows, cfg.k)) * cfg.bandwidth,
+        "array": jax.random.normal(k4, (cfg.n_rows, cfg.n_buckets, vocab))
+        * 3.0,
+    }
+
+
+# ---------------------------------------------------------------- numerics
+
+def test_quantize_symmetric_all_zero_rows_finite():
+    # The scale guard must keep all-zero (and constant-zero) rows finite:
+    # scale 1/qmax, q == 0, dequant == 0 — no inf/nan anywhere.
+    x = jnp.zeros((4, 3, 16))
+    for bits in (8, 4):
+        q, scale = quantize_symmetric(x, bits=bits, axis=-1)
+        assert bool(jnp.all(jnp.isfinite(scale)))
+        assert bool(jnp.all(scale > 0))
+        assert bool(jnp.all(q == 0))
+        assert bool(jnp.all(jnp.isfinite(q.astype(jnp.float32)
+                                         * scale[:, :, None])))
+
+
+def test_quantize_symmetric_constant_rows():
+    # A constant row quantizes to ±qmax exactly and dequantizes exactly.
+    x = jnp.full((2, 2, 8), -1.5)
+    q, scale = quantize_symmetric(x, bits=8, axis=-1)
+    np.testing.assert_array_equal(np.asarray(q), -127)
+    deq = q.astype(jnp.float32) * scale[:, :, None]
+    np.testing.assert_allclose(np.asarray(deq), -1.5, rtol=1e-6)
+
+
+def test_quantize_symmetric_mixed_zero_rows():
+    # Zero rows coexisting with live rows: per-row scales keep them apart.
+    x = jnp.concatenate([jnp.zeros((1, 2, 8)),
+                         jnp.ones((1, 2, 8)) * 5.0], axis=0)
+    q, scale = quantize_symmetric(x, bits=8, axis=-1)
+    assert bool(jnp.all(jnp.isfinite(scale)))
+    deq = q.astype(jnp.float32) * scale[:, :, None]
+    np.testing.assert_allclose(np.asarray(deq[0]), 0.0)
+    np.testing.assert_allclose(np.asarray(deq[1]), 5.0, rtol=1e-6)
+
+
+def test_int8_round_trip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 5, 64)) * 2.0
+    q, scale = quantize_symmetric(x, bits=8, axis=-1)
+    deq = q.astype(jnp.float32) * scale[:, :, None]
+    # Max error of symmetric rounding is scale/2 per element.
+    assert bool(jnp.all(jnp.abs(deq - x) <= scale[:, :, None] * 0.5 + 1e-6))
+
+
+@pytest.mark.parametrize("n_rows", [1, 2, 5, 6])
+@pytest.mark.parametrize("v", [7, 16, 33])  # odd V must round-trip exactly
+def test_int4_pack_unpack_round_trip(n_rows, v):
+    key = jax.random.PRNGKey(n_rows * 100 + v)
+    q = jax.random.randint(key, (n_rows, 3, v), -7, 8).astype(jnp.int8)
+    packed = pack_int4_rows(q)
+    assert packed.shape == ((n_rows + 1) // 2, 3, v)
+    assert packed.dtype == jnp.int8
+    out = unpack_int4_rows(packed, n_rows)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+
+
+def test_quantize_counts_int4_values_in_range():
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 4, 32)) * 10
+    q, scale = quantize_symmetric(x, bits=4, axis=-1)
+    assert int(jnp.max(q)) <= 7 and int(jnp.min(q)) >= -7
+    store, scale2 = quantize_counts(x, "int4")
+    assert store.shape == (3, 4, 32)      # rows packed pairwise, odd L pads
+    np.testing.assert_array_equal(np.asarray(scale), np.asarray(scale2))
+
+
+# ------------------------------------------------- kernel parity grids
+
+@pytest.mark.parametrize("quant", ["int8", "int4"])
+@pytest.mark.parametrize("l,r,v", [(5, 5, 130), (6, 12, 100), (16, 8, 256)])
+def test_sketch_head_quant_pallas_vs_ref(quant, l, r, v):
+    key = jax.random.PRNGKey(l * r + v)
+    sketch = jax.random.normal(key, (l, r, v)) * 3
+    idx = jax.random.randint(key, (4, l), 0, r)
+    store, scale = quantize_counts(sketch, quant)
+    ref = sketch_head_logits(store, idx, scale=scale, quant=quant,
+                             backend="ref")
+    pal = sketch_head_logits(store, idx, scale=scale, quant=quant,
+                             backend="pallas", block_v=64)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("quant", ["int8", "int4"])
+@pytest.mark.parametrize("l,r,v", [(5, 5, 130), (6, 12, 100)])
+def test_fused_decode_quant_pallas_vs_ref(dtype, quant, l, r, v):
+    key = jax.random.PRNGKey(l + r + v)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d, dp, kk = 16, 8, 2
+    hidden = jax.random.normal(k1, (3, d)).astype(dtype)
+    proj = jax.random.normal(k2, (d, dp))
+    w = jax.random.normal(k3, (l, kk, dp))
+    b = jax.random.uniform(k4, (l, kk)) * 2.0
+    sketch = jax.random.normal(k5, (l, r, v)) * 3
+    store, scale = quantize_counts(sketch, quant)
+    kw = dict(bandwidth=2.0, n_buckets=r, scale=scale, quant=quant)
+    ref = fused_decode_logits(hidden, proj, w, b, store, backend="ref", **kw)
+    pal = fused_decode_logits(hidden, proj, w, b, store, backend="pallas",
+                              block_v=64, **kw)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quant_close_to_f32_head():
+    # int8 per-row quantization error on the logits is tiny next to the
+    # counts' own magnitude; int4 is coarser but still bounded.
+    l, r, v = 8, 6, 200
+    key = jax.random.PRNGKey(3)
+    sketch = jax.random.normal(key, (l, r, v)) * 3
+    idx = jax.random.randint(key, (16, l), 0, r)
+    f32 = sketch_head_logits(sketch, idx, backend="ref")
+    scale_mag = float(jnp.abs(sketch).max())
+    for quant, qmax in (("int8", 127.0), ("int4", 7.0)):
+        store, scale = quantize_counts(sketch, quant)
+        out = sketch_head_logits(store, idx, scale=scale, quant=quant,
+                                 backend="ref")
+        # Mean of L independent roundings, each |err| <= scale/2.
+        assert float(jnp.abs(out - f32).max()) <= scale_mag / qmax
+
+
+# ------------------------------------------------- apply_head plumbing
+
+@pytest.fixture(scope="module")
+def small_head():
+    cfg = SketchHeadConfig(n_rows=6, n_buckets=5, k=2, proj_dim=8,
+                           bandwidth=2.0)
+    head = _head(jax.random.PRNGKey(5), 16, 130, cfg)
+    hidden = jax.random.normal(jax.random.PRNGKey(6), (4, 16))
+    return head, cfg, hidden
+
+
+def test_apply_head_ref_pallas_conflict_raises(small_head):
+    head, cfg, hidden = small_head
+    # Regression: backend="ref" used to silently overwrite the caller's
+    # kernel_backend="pallas" with "ref".
+    with pytest.raises(ValueError, match="kernel_backend"):
+        apply_head(head, hidden, cfg, backend="ref",
+                   kernel_backend="pallas")
+    # The non-conflicting spellings still work.
+    a = apply_head(head, hidden, cfg, backend="ref")
+    b = apply_head(head, hidden, cfg, backend="ref", kernel_backend="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_apply_head_quant_scale_consistency(small_head):
+    head, cfg, hidden = small_head
+    with pytest.raises(ValueError, match="scale"):
+        apply_head(head, hidden, cfg, quant="int8")     # no scale leaf
+    qhead = quantize_head(head, "int8")
+    with pytest.raises(ValueError, match="scale"):
+        apply_head(qhead, hidden, cfg)                  # scale but no quant
+    with pytest.raises(ValueError, match="quant"):
+        apply_head(head, hidden, cfg, quant="int16")
+
+
+@pytest.mark.parametrize("quant", ["int8", "int4"])
+@pytest.mark.parametrize("backend", ["fused", "two_kernel", "ref"])
+def test_apply_head_quant_backends_agree(small_head, quant, backend):
+    head, cfg, hidden = small_head
+    qhead = quantize_head(head, quant)
+    ref = apply_head(qhead, hidden, cfg, backend="ref", quant=quant)
+    out = apply_head(qhead, hidden, cfg, backend=backend, quant=quant)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantize_dequantize_head_round_trip(small_head):
+    head, cfg, _ = small_head
+    for quant in ("int8", "int4"):
+        qhead = quantize_head(head, quant)
+        assert qhead["scale"].shape == (cfg.n_rows, cfg.n_buckets)
+        back = dequantize_head(qhead, quant)
+        assert back["array"].shape == head["array"].shape
+        # Dequant is within one rounding step per count.
+        err = jnp.abs(back["array"] - head["array"])
+        assert bool(jnp.all(err <= qhead["scale"][:, :, None] * 0.5 + 1e-6))
+    with pytest.raises(ValueError, match="already quantized"):
+        quantize_head(quantize_head(head, "int8"), "int8")
+
+
+# ------------------------------------------------- save/load format
+
+def test_save_load_v2_round_trip(tmp_path, small_head):
+    head, cfg, _ = small_head
+    for quant in (None, "int8", "int4"):
+        qhead = quantize_head(head, quant)
+        p = tmp_path / f"h_{quant}.npz"
+        save_head(p, qhead, cfg, backend="two_kernel", quant=quant)
+        h2, cfg2, meta = load_head_full(p)
+        assert cfg2 == cfg
+        assert meta["format_version"] == HEAD_FORMAT_VERSION
+        assert meta["backend"] == "two_kernel"
+        assert meta["quant"] == quant
+        assert load_head_meta(p) == meta
+        for k in qhead:
+            np.testing.assert_array_equal(np.asarray(h2[k]),
+                                          np.asarray(qhead[k]))
+        assert h2["array"].dtype == qhead["array"].dtype
+
+
+def test_save_head_writes_compressed(tmp_path, small_head):
+    head, cfg, _ = small_head
+    p = tmp_path / "h.npz"
+    save_head(p, head, cfg)
+    with zipfile.ZipFile(p) as zf:
+        assert all(i.compress_type == zipfile.ZIP_DEFLATED
+                   for i in zf.infolist())
+        assert "meta_format_version.npy" in zf.namelist()
+
+
+def test_save_head_quant_mismatch_raises(tmp_path, small_head):
+    head, cfg, _ = small_head
+    with pytest.raises(ValueError, match="quant"):
+        save_head(tmp_path / "bad.npz", head, cfg, quant="int8")
+
+
+def test_legacy_v1_archive_loads_unchanged():
+    # Checked-in archive written by the pre-version save_head (plain
+    # np.savez, no meta_format_version / meta_quant / scale).
+    p = DATA / "legacy_head_v1.npz"
+    head, cfg, meta = load_head_full(p)
+    assert meta == {"format_version": 1, "kind": "sketch",
+                    "backend": "two_kernel", "quant": None}
+    assert cfg == SketchHeadConfig(n_rows=4, n_buckets=3, k=2, proj_dim=6,
+                                   bandwidth=2.5)
+    assert set(head) == {"proj", "w", "b", "array"}
+    assert head["array"].shape == (4, 3, 11)
+    # A v1 head must still serve.
+    hidden = jax.random.normal(jax.random.PRNGKey(0), (2, 8))
+    out = apply_head(head, hidden, cfg, backend="ref")
+    assert out.shape == (2, 11)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ------------------------------------------------- config coercion
+
+def test_sketch_config_coercion_all_fields(tmp_path, small_head):
+    head, _, _ = small_head
+    # Exercise every SketchHeadConfig field with non-default values.
+    cfg = SketchHeadConfig(n_rows=6, n_buckets=5, k=3, proj_dim=9,
+                           bandwidth=1.25)
+    p = tmp_path / "h.npz"
+    save_head(p, head, cfg)
+    _, cfg2, _ = load_head_full(p)
+    assert cfg2 == cfg
+    for f in dataclasses.fields(SketchHeadConfig):
+        got, want = getattr(cfg2, f.name), getattr(cfg, f.name)
+        assert type(got) is type(want), f.name
+
+
+def test_coerce_config_mixed_types():
+    # The old coercion — (float if "float" in str(typ) else int) — broke on
+    # any non-numeric field; the per-field version must handle str, bool,
+    # and Optional, from the 0-d arrays an .npz round trip produces.
+    @dataclasses.dataclass(frozen=True)
+    class Syn:
+        count: int = 1
+        rate: float = 2.0
+        label: str = "x"
+        flag: bool = False
+        maybe: Optional[int] = None
+        maybe_s: Optional[str] = None
+
+    raw = {"count": np.asarray(7), "rate": np.asarray(1.5),
+           "label": np.asarray("hey"), "flag": np.asarray(True),
+           "maybe": np.asarray(3)}
+    got = coerce_config(Syn, raw)
+    assert got == Syn(7, 1.5, "hey", True, 3, None)
+    assert type(got.count) is int and type(got.flag) is bool
+    assert type(got.label) is str and type(got.maybe) is int
+    # Missing fields (maybe_s) fall back to defaults — forward compat.
+    assert got.maybe_s is None
+
+
+# ------------------------------------------------- head_costs bytes
+
+def test_head_costs_bytes_ratio():
+    cfg = SketchHeadConfig()  # L=64, R=16, k=2, d'=64
+    f32 = head_costs(cfg, 1024, 32768)
+    i8 = head_costs(cfg, 1024, 32768, quant="int8")
+    i4 = head_costs(cfg, 1024, 32768, quant="int4")
+    # Count-based fields are quant-invariant (the bug the bytes fields fix).
+    assert f32["sketch_params"] == i8["sketch_params"] == i4["sketch_params"]
+    assert f32["dense_bytes"] == 4 * f32["dense_params"]
+    # The acceptance floors of the paper's storage claim at bench scale.
+    assert f32["bytes_ratio"] < 1.1
+    assert i8["bytes_ratio"] >= 3.9
+    assert i4["bytes_ratio"] >= 7.8
+    # int4 halves the count bytes vs int8 (same scales/aux).
+    assert i4["sketch_bytes"] < i8["sketch_bytes"]
+
+
+def test_head_costs_odd_rows_int4():
+    cfg = SketchHeadConfig(n_rows=5, n_buckets=4, k=1, proj_dim=8)
+    c = head_costs(cfg, 64, 128, quant="int4")
+    # ⌈5/2⌉ = 3 packed byte-rows.
+    assert c["sketch_bytes"] >= 3 * 4 * 128

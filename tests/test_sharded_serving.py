@@ -27,6 +27,7 @@ on-mesh engine-vs-static parity are the deterministic invariants.
 """
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -206,6 +207,68 @@ def test_count_arrays_sharded_over_model(served, mesh):
                              cfg.vocab_size)}
     for name in ("proj", "w", "b"):
         assert lm.head.params[name].sharding.is_fully_replicated
+
+
+@pytest.mark.parametrize("quant", ["int8", "int4"])
+@pytest.mark.parametrize("backend", ["two_kernel", "fused"])
+def test_apply_head_quantized_sharded_logits_close(served, mesh, backend,
+                                                   quant):
+    """Quantized heads shard too (DESIGN.md §12): int8 rows and int4 packed
+    row-pairs partition over ``model`` with their (L, R) scales, and the
+    sharded logits match the single-device quantized path.  L=32 with
+    model=2 keeps int4 shard boundaries byte-aligned (DESIGN.md §12)."""
+    from repro.core.sketch_lm_head import quantize_head
+
+    cfg, params, head_params = served
+    qhead = quantize_head(head_params, quant)
+    hidden = jax.random.normal(jax.random.PRNGKey(11), (4, cfg.d_model))
+    base = np.asarray(apply_head(qhead, hidden, _HEAD_CFG,
+                                 backend=backend, quant=quant))
+    sharded = np.asarray(apply_head(qhead, hidden, _HEAD_CFG,
+                                    backend=backend, quant=quant, mesh=mesh))
+    np.testing.assert_allclose(sharded, base, rtol=1e-5, atol=1e-5)
+    # And the quantized head agrees with the f32 head up to rounding noise.
+    f32 = np.asarray(apply_head(head_params, hidden, _HEAD_CFG,
+                                backend=backend, mesh=mesh))
+    assert np.abs(sharded - f32).max() < float(qhead["scale"].max())
+
+
+def test_quantized_head_scales_sharded_over_model(served, mesh):
+    """On the placed LM, the int8 store keeps the f32 head's row partition
+    and the per-row scales partition with it (rules.py sketch/scale)."""
+    cfg, params, head_params = served
+    head = SketchHead(cfg=_HEAD_CFG, backend="fused",
+                      params=head_params).quantized("int8")
+    lm = LM(params, cfg, head).with_mesh(mesh)
+    assert lm.head.params["array"].dtype == jnp.int8
+    assert tuple(lm.head.params["array"].sharding.spec) == \
+        ("model", None, None)
+    assert tuple(lm.head.params["scale"].sharding.spec) == ("model", None)
+    l = _HEAD_CFG.n_rows
+    shard_shapes = {s.data.shape for s in
+                    lm.head.params["scale"].addressable_shards}
+    assert shard_shapes == {(l // 2, _HEAD_CFG.n_buckets)}
+
+
+@pytest.mark.parametrize("quant", ["int8", "int4"])
+def test_quantized_generate_on_mesh(served, mesh, quant):
+    """End-to-end: a quantized head serves on the mesh, deterministic and
+    engine-vs-static bitwise (same invariants as the f32 head)."""
+    cfg, params, head_params = served
+    head = SketchHead(cfg=_HEAD_CFG, backend="fused",
+                      params=head_params).quantized(quant)
+    lm = LM(params, cfg, head).with_mesh(mesh)
+    b, p, g = 4, 6, 5
+    prompts = jax.random.randint(jax.random.PRNGKey(13), (b, p), 0,
+                                 cfg.vocab_size)
+    static = np.asarray(lm.generate(prompts, g))
+    again = np.asarray(lm.generate(prompts, g))
+    np.testing.assert_array_equal(again, static)
+    finished = lm.serve([(np.asarray(prompts[i]), g) for i in range(b)],
+                        n_slots=b)
+    for i in range(b):
+        np.testing.assert_array_equal(np.asarray(finished[i]),
+                                      static[i, p:])
 
 
 def test_model_params_sharded(served, mesh):
