@@ -1,30 +1,40 @@
-"""Static batching vs the continuous-batching engine on a skewed request mix.
+"""Static batching vs the continuous-batching engine on a heavy-tail trace.
 
-Serves the same request stream two ways —
+Every request stream here comes from one generator, ``_heavy_tail_trace``:
+a small base-prompt set reused with Zipf weights (production prompt
+traffic — a few hot system prompts, a long tail of cold ones), power-law
+skewed generation lengths, and bursty Poisson arrivals.  The benchmark
+serves it three ways —
 
-  static   FIFO chunks of ``n_slots`` through ``generate()``: every chunk
-           decodes until its *slowest* member finishes, finished requests
-           pad the batch (the pre-engine serving model)
-  engine   repro.launch.engine: retire-on-finish, slots recycled mid-decode
-           from the queue
+  static      FIFO chunks of ``n_slots`` through ``generate()``: every
+              chunk decodes until its *slowest* member finishes, finished
+              requests pad the batch (the pre-engine serving model)
+  engine      repro.launch.engine: retire-on-finish, slots recycled
+              mid-decode from the queue
+  heavy_tail  the full-scale trace (1k+ requests, variable prompt lengths,
+              arrivals honored) through the contiguous AND the paged engine
+              (launch/paging.py, DESIGN.md §13): same bitwise outputs,
+              p50/p99 latency, tokens/s/slot, prefix-cache hit rate and
+              pages-in-use reported side by side
 
-— with a skewed generation-length mix (alternating short/long, the
-workload where padding hurts most), then sweeps the engine's decode
-megastep size (``decode_chunk`` ∈ ``--chunks``; launch/decode_loop.py,
-DESIGN.md §10) over the same stream, then the speculative self-decode
-draft length (``--spec-decode`` Ks; DESIGN.md §11) with a *distilled*
-sketch head drafting and the dense head verifying — against a
-``dense_megastep`` baseline (DenseHead, ``decode_chunk=K``) at the same
-Ks — and emits ``BENCH_engine.json`` (schema v4: spec runs carry
-``acceptance_rate`` and ``accepted_tokens_per_verify``) at the repo root.
-Decode uses the fused sketch head (the serving hot path; the
-relative static/engine numbers are head-agnostic since both modes share
-``serve_step``).  The spec sweep distills its head in-process (a random
-head accepts ~1/V of drafts, measuring nothing); the static/engine/
-megastep rows keep the cheap random head — they never sample from its
-logits' argmax quality, only its cost.  Both modes are warmed up first so
-the timed runs measure steady-state steps, not compile; the jitted steps
-are shared via ``jitted_serve_fns`` so they dispatch the same executables.
+— then sweeps the engine's decode megastep size (``decode_chunk`` ∈
+``--chunks``; launch/decode_loop.py, DESIGN.md §10) over the same stream,
+then the speculative self-decode draft length (``--spec-decode`` Ks;
+DESIGN.md §11) with a *distilled* sketch head drafting and the dense head
+verifying — against a ``dense_megastep`` baseline (DenseHead,
+``decode_chunk=K``) at the same Ks — and emits ``BENCH_engine.json``
+(schema v6: the ``heavy_tail`` section carries the p50/p99 latency and
+paging fields) at the repo root.  The static/engine/megastep/spec sweeps
+pin the trace's prompt length (static batching must stack prompts) and
+ignore arrivals (throughput protocol); the heavy_tail section is the
+latency protocol.  Decode uses the fused sketch head (the serving hot
+path; the relative static/engine numbers are head-agnostic since both
+modes share ``serve_step``).  The spec sweep distills its head in-process
+(a random head accepts ~1/V of drafts, measuring nothing); the other rows
+keep the cheap random head — they never sample from its logits' argmax
+quality, only its cost.  Both modes are warmed up first so the timed runs
+measure steady-state steps, not compile; the jitted steps are shared via
+``jitted_serve_fns`` so they dispatch the same executables.
 """
 
 from __future__ import annotations
@@ -109,13 +119,40 @@ def _distill_spec_head(params, cfg, reqs, gen_long, backend,
                                          head_cfg))
 
 
-def _requests(n_requests, prompt_len, gen_short, gen_long, vocab, seed=0):
+def _heavy_tail_trace(n_requests, vocab, *, seed=0, n_base=12, zipf_a=1.1,
+                      plen_range=(4, 16), gen_range=(2, 10), burst_lam=0.6):
+    """Heavy-tail production-style trace → ``[(prompt, gen, arrival), …]``.
+
+    * **Zipf prompt reuse** — ``n_base`` base prompts drawn once, then each
+      request picks one with weight ∝ 1/rank^``zipf_a``: a few hot prompts
+      dominate (the shared-system-prompt pattern the prefix cache exists
+      for), the tail stays cold.
+    * **Heavy-tail lengths** — prompt lengths are power-skewed inside
+      ``plen_range`` (quadratic toward short) and generation lengths inside
+      ``gen_range`` (cubic toward short): most requests are small, a few
+      run long — the mix where fixed-shape slots strand the most memory.
+    * **Bursty Poisson arrivals** — inter-arrival gaps are
+      ``Poisson(burst_lam)`` ticks, so most gaps are 0 (same-tick bursts
+      that pile onto one admission round) with occasional lulls.
+
+    Deterministic per seed, so the contiguous and paged engines replay the
+    identical trace.
+    """
     rng = np.random.default_rng(seed)
-    return [
-        (rng.integers(0, vocab, prompt_len, dtype=np.int32),
-         gen_long if i % 2 else gen_short)
-        for i in range(n_requests)
-    ]
+    plo, phi = plen_range
+    base = [rng.integers(0, vocab, plo + int((phi - plo) * rng.random() ** 2),
+                         dtype=np.int32) for _ in range(n_base)]
+    weights = 1.0 / np.arange(1, n_base + 1) ** zipf_a
+    weights /= weights.sum()
+    glo, ghi = gen_range
+    now = 0
+    trace = []
+    for _ in range(n_requests):
+        prompt = base[int(rng.choice(n_base, p=weights))]
+        gen = glo + int((ghi - glo) * rng.random() ** 3)
+        now += int(rng.poisson(burst_lam))
+        trace.append((prompt, gen, now))
+    return trace
 
 
 def _run_static(params, cfg, reqs, n_slots, head, mesh=None):
@@ -171,10 +208,113 @@ def _run_engine(params, cfg, reqs, n_slots, max_seq, head, mesh=None,
     return out
 
 
+def _run_traced(params, cfg, trace, n_slots, max_seq, head, mesh=None,
+                paged=False, page_size=16):
+    """One engine pass over an arrival-stamped trace, recording per-request
+    completion ticks for latency percentiles.
+
+    Mirrors ``ServeEngine.run()``'s tick loop (including the idle jump to
+    the next arrival) but diffs ``engine.finished`` after every step so each
+    request's latency — finish tick minus arrival tick — is known.  Tick
+    latencies convert to seconds via the run's mean wall-clock per tick.
+    """
+    engine = make_engine(params, cfg, n_slots=n_slots, max_seq=max_seq,
+                         head=head, mesh=mesh, paged=paged,
+                         page_size=page_size)
+    arrivals = {}
+    for prompt, gen, arrival in trace:
+        rid = engine.submit(prompt, gen, arrival=arrival)
+        arrivals[rid] = arrival
+    finish = {}
+    t0 = time.perf_counter()
+    while engine.queue or engine.sched.n_active:
+        if (not engine.sched.n_active
+                and engine.queue.peek().arrival > engine.now):
+            engine.now = engine.queue.peek().arrival
+        done_before = len(engine.finished)
+        engine.step()
+        if len(engine.finished) > done_before:
+            for rid in engine.finished.keys() - finish.keys():
+                finish[rid] = engine.now
+    dur = time.perf_counter() - t0
+    lat = np.asarray([finish[r] - arrivals[r] for r in sorted(finish)],
+                     float)
+    sec_per_tick = dur / max(1, engine.now)
+    tokens = sum(len(v) for v in engine.finished.values())
+    rec = {
+        "seconds": dur, "tokens": tokens, "tok_s": tokens / dur,
+        "tokens_per_s_per_slot": tokens / dur / n_slots,
+        "decode_steps": engine.stats["decode_steps"],
+        "prefill_batches": engine.stats["prefill_batches"],
+        "dedup_saved": engine.stats["dedup_saved"],
+        "latency_ticks_p50": float(np.percentile(lat, 50)),
+        "latency_ticks_p99": float(np.percentile(lat, 99)),
+        "latency_s_p50": float(np.percentile(lat, 50) * sec_per_tick),
+        "latency_s_p99": float(np.percentile(lat, 99) * sec_per_tick),
+    }
+    if paged:
+        s = engine.stats
+        rec.update({
+            "prefix_hit_rate": (s["prefix_hits"] / s["prefix_queries"]
+                                if s["prefix_queries"] else 0.0),
+            "prefix_hits": s["prefix_hits"],
+            "prefix_queries": s["prefix_queries"],
+            "pages_in_use_peak": s["pages_in_use_peak"],
+            "page_allocs": s["page_allocs"],
+            "cow_copies": s["cow_copies"],
+        })
+    return rec, engine.finished
+
+
+def _run_heavy_tail(params, cfg, trace, n_slots, max_seq, head, mesh=None,
+                    page_size=16):
+    """The full heavy-tail trace through the contiguous engine and the
+    paged engine (launch/paging.py, DESIGN.md §13), asserting the paged run
+    reproduced the contiguous token streams bitwise and prefilled less."""
+    # Warm both paths on one request per distinct prompt length first:
+    # prefill executables specialize on prompt length, and without this the
+    # first run (contiguous) would eat every compile inside its timed
+    # region while the second (paged) reused them all.
+    warm = {len(p): (p, 2, 0) for p, _, _ in trace}
+    _run_traced(params, cfg, list(warm.values()), n_slots, max_seq, head,
+                mesh)
+    _run_traced(params, cfg, list(warm.values()), n_slots, max_seq, head,
+                mesh, paged=True, page_size=page_size)
+    contiguous, out_c = _run_traced(params, cfg, trace, n_slots, max_seq,
+                                    head, mesh)
+    paged, out_p = _run_traced(params, cfg, trace, n_slots, max_seq, head,
+                               mesh, paged=True, page_size=page_size)
+    outputs_match = out_c == out_p
+    assert outputs_match, (
+        "paged engine diverged from the contiguous engine on the same "
+        "trace: " + str([r for r in out_c if out_c[r] != out_p[r]][:4]))
+    assert paged["prefill_batches"] <= contiguous["prefill_batches"]
+    if paged["prefix_hits"]:
+        assert paged["prefill_batches"] < contiguous["prefill_batches"], (
+            "prefix hits recorded but the paged run prefilled as often as "
+            "the contiguous one")
+    return {
+        "requests": len(trace), "page_size": page_size,
+        "contiguous": contiguous, "paged": paged,
+        "outputs_match": outputs_match,
+        "prefix_hit_rate": paged["prefix_hit_rate"],
+        "pages_in_use_peak": paged["pages_in_use_peak"],
+        "prefill_batches": paged["prefill_batches"],
+        "prefill_batches_contiguous": contiguous["prefill_batches"],
+        "tok_s": paged["tok_s"],
+        "tokens_per_s_per_slot": paged["tokens_per_s_per_slot"],
+        "latency_ticks_p50": paged["latency_ticks_p50"],
+        "latency_ticks_p99": paged["latency_ticks_p99"],
+        "latency_s_p50": paged["latency_s_p50"],
+        "latency_s_p99": paged["latency_s_p99"],
+    }
+
+
 def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
         prompt_len: int = 8, gen_short: int = 4, gen_long: int = 64,
         reps: int = 3, backend: str = "fused", mesh=None,
-        chunks=(1, 4, 16), spec_ks=(1, 4, 16), distill_steps: int = 300):
+        chunks=(1, 4, 16), spec_ks=(1, 4, 16), distill_steps: int = 300,
+        ht_requests: int = 1000, page_size: int = 16):
     from benchmarks.schema import SCHEMA_VERSION, mesh_record
     from repro.launch.mesh import parse_mesh
 
@@ -189,8 +329,13 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
         from repro.launch.mesh import place_serving_state
         params, head = place_serving_state(params, head, mesh)
     max_seq = prompt_len + gen_long
-    reqs = _requests(n_requests, prompt_len, gen_short, gen_long,
-                     cfg.vocab_size)
+    # Sweep stream: the heavy-tail generator with the prompt length pinned
+    # (static batching stacks its chunk into one (B, P) array) and arrivals
+    # dropped (all three comparison modes see the full backlog at t=0 — the
+    # throughput protocol; the heavy_tail section below honors arrivals).
+    reqs = [(p, g) for p, g, _ in _heavy_tail_trace(
+        n_requests, cfg.vocab_size, plen_range=(prompt_len, prompt_len),
+        gen_range=(gen_short, gen_long))]
 
     # Warm both paths (compile) on a tiny slice, then time the full stream
     # rep-by-rep interleaved (machine-load drift hits both modes equally)
@@ -264,6 +409,16 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
             dbest = d if dbest is None or d["seconds"] < dbest["seconds"] else dbest
         dense_sweep[str(k)] = dbest
 
+    # Heavy-tail latency protocol: the full variable-prompt-length trace
+    # with arrivals honored, contiguous vs paged engine (DESIGN.md §13).
+    # The paged run is warmed implicitly — it reuses the decode executable
+    # the sweeps above compiled (merged view == contiguous cache structure);
+    # only the gather/commit/insert page ops compile fresh, once.
+    ht_trace = _heavy_tail_trace(ht_requests, cfg.vocab_size)
+    ht_max_seq = max(len(p) + g for p, g, _ in ht_trace)
+    heavy_tail = _run_heavy_tail(params, cfg, ht_trace, n_slots, ht_max_seq,
+                                 head, mesh, page_size=page_size)
+
     result = {
         "schema_version": SCHEMA_VERSION,
         "mesh": mesh_record(mesh),
@@ -271,6 +426,7 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
         "arch": cfg.name, "n_slots": n_slots, "n_requests": n_requests,
         "prompt_len": prompt_len, "gen_short": gen_short,
         "gen_long": gen_long,
+        "heavy_tail": heavy_tail,
         "head": {"kind": head.kind, "backend": head.backend},
         "static": static, "engine": engine,
         "megastep": megastep,
@@ -302,7 +458,13 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
                 " agreement) and commits are lockstep (min over slots), so"
                 " spec tok/s trails the dense megastep here; the §11 win"
                 " condition is the paper-scale L ≪ d regime with"
-                " near-full acceptance.",
+                " near-full acceptance.  heavy_tail (schema v6) replays a"
+                " Zipf-reuse / bursty-arrival / variable-length trace"
+                " through the contiguous and the paged engine (DESIGN.md"
+                " §13): outputs verified bitwise equal, latency percentiles"
+                " are ticks-since-arrival (seconds via mean tick time), and"
+                " the paged run's prefill_batches drop is the prefix cache"
+                " skipping repeated prompts' prefills.",
     }
     print(f"  static:  {static['tok_s']:8.1f} tok/s  "
           f"({static['decode_steps']} decode steps, "
@@ -322,6 +484,17 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
               f"(acceptance {s['acceptance_rate']:.2f}, "
               f"{s['accepted_tokens_per_verify']:.2f} acc tok/verify) "
               f"vs dense megastep {d['tok_s']:8.1f} tok/s")
+    ht = heavy_tail
+    for mode in ("contiguous", "paged"):
+        m = ht[mode]
+        print(f"  heavy-tail {mode:>10}: {m['tok_s']:8.1f} tok/s "
+              f"({m['tokens_per_s_per_slot']:.1f}/slot), latency p50/p99 "
+              f"{m['latency_ticks_p50']:.0f}/{m['latency_ticks_p99']:.0f} "
+              f"ticks, {m['prefill_batches']} prefill batches")
+    print(f"  heavy-tail paged: prefix hit rate "
+          f"{ht['prefix_hit_rate']:.2f}, pages in use peak "
+          f"{ht['pages_in_use_peak']}, outputs bitwise equal: "
+          f"{ht['outputs_match']}")
     BENCH_JSON.write_text(json.dumps(result, indent=1))
     print(f"  wrote {BENCH_JSON}")
     return result
@@ -350,6 +523,16 @@ def main() -> None:
     ap.add_argument("--distill-steps", type=int, default=300,
                     help="in-process distillation budget for the spec "
                          "sweep's sketch head")
+    ap.add_argument("--ht-requests", type=int, default=1000,
+                    help="heavy-tail trace length (contiguous-vs-paged "
+                         "latency section; DESIGN.md §13)")
+    ap.add_argument("--paged", action="store_true",
+                    help="no-op marker: the heavy-tail section always runs "
+                         "both the contiguous and the paged engine (shrink "
+                         "it with --ht-requests)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per cache page for the heavy-tail paged "
+                         "run")
     args = ap.parse_args()
     run(arch=args.arch, n_slots=args.n_slots, n_requests=args.requests,
         prompt_len=args.prompt_len, gen_short=args.gen_short,
@@ -357,7 +540,8 @@ def main() -> None:
         mesh=args.mesh,
         chunks=tuple(int(c) for c in args.chunks.split(",")),
         spec_ks=tuple(int(c) for c in args.spec_decode.split(",")),
-        distill_steps=args.distill_steps)
+        distill_steps=args.distill_steps, ht_requests=args.ht_requests,
+        page_size=args.page_size)
 
 
 if __name__ == "__main__":

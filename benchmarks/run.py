@@ -112,6 +112,19 @@ def main() -> None:
                              f"dispatches={m['megasteps']};"
                              f"host_syncs_per_tok="
                              f"{m['host_syncs_per_token']:.2f}"))
+        ht = r["heavy_tail"]
+        for mode in ("contiguous", "paged"):
+            m = ht[mode]
+            csv_rows.append((f"engine/heavy_tail_{mode}", 0.0,
+                             f"tok_s={m['tok_s']:.1f};"
+                             f"tok_s_slot={m['tokens_per_s_per_slot']:.1f};"
+                             f"p50={m['latency_ticks_p50']:.0f};"
+                             f"p99={m['latency_ticks_p99']:.0f};"
+                             f"prefills={m['prefill_batches']}"))
+        csv_rows.append(("engine/heavy_tail_paging", 0.0,
+                         f"hit_rate={ht['prefix_hit_rate']:.2f};"
+                         f"pages_peak={ht['pages_in_use_peak']};"
+                         f"outputs_match={ht['outputs_match']}"))
         print()
 
     if want("kernels"):

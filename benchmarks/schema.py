@@ -34,6 +34,15 @@ Version history:
                  the dtype-aware ``dense_bytes`` / ``sketch_bytes`` /
                  ``bytes_ratio`` cost fields; head records may carry
                  ``quant`` (null / "int8" / "int4")
+  6            — paged decode-cache pool + prefix caching (DESIGN.md §13):
+                 BENCH_engine.json gains the ``heavy_tail`` section — a
+                 Zipf-reuse / bursty-arrival trace served by the contiguous
+                 AND the paged engine, with p50/p99 latency (ticks and
+                 seconds), ``tokens_per_s_per_slot``, ``prefix_hit_rate``,
+                 ``pages_in_use_peak``, ``prefill_batches`` (paged) vs
+                 ``prefill_batches_contiguous``, and ``outputs_match``
+                 (bitwise parity of the two engines' token streams);
+                 BENCH_sketch_serve.json is unchanged structurally
 
 ``validate_engine_record`` / ``validate_serve_record`` are the structural
 checks the CI bench-smoke job runs on freshly emitted artifacts.  The CLI
@@ -46,7 +55,7 @@ any):
 
 from __future__ import annotations
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 #: Count-array storage modes of the serve record's ``quant_curve`` (v5).
 _QUANT_CURVE_MODES = ("f32", "int8", "int4")
@@ -58,6 +67,14 @@ _ENGINE_RUN_FIELDS = _RUN_FIELDS + ("megasteps", "host_syncs_per_token")
 #: Extra fields a speculative-decode run record must carry (schema v4).
 _SPEC_RUN_FIELDS = _ENGINE_RUN_FIELDS + (
     "spec_decode", "acceptance_rate", "accepted_tokens_per_verify")
+#: Fields the heavy-tail section must carry (schema v6) — the latency
+#: percentiles, the serving-density number, and the paging counters.
+_HEAVY_TAIL_FIELDS = (
+    "requests", "page_size", "contiguous", "paged", "outputs_match",
+    "prefix_hit_rate", "pages_in_use_peak", "prefill_batches",
+    "prefill_batches_contiguous", "tok_s", "tokens_per_s_per_slot",
+    "latency_ticks_p50", "latency_ticks_p99", "latency_s_p50",
+    "latency_s_p99")
 
 
 def mesh_record(mesh=None) -> dict:
@@ -98,17 +115,33 @@ def _validate_spec_run(run: dict, where: str) -> None:
 
 
 def validate_engine_record(record: dict) -> None:
-    """Structural check for a BENCH_engine.json record (schema v4).
+    """Structural check for a BENCH_engine.json record (schema v6).
 
     Raises ``ValueError`` naming the first missing/mismatched field; used
-    by the CI bench-smoke job on freshly emitted artifacts.
+    by the CI bench-smoke and paged-smoke jobs on freshly emitted
+    artifacts.
     """
     name = "BENCH_engine"
     _validate_common(record, name)
     _require(record, ("decode_chunk", "static", "engine", "megastep",
-                      "spec_decode", "dense_megastep"), name)
+                      "spec_decode", "dense_megastep", "heavy_tail"), name)
     _require(record["static"], _RUN_FIELDS, f"{name}.static")
     _require(record["engine"], _ENGINE_RUN_FIELDS, f"{name}.engine")
+    ht = record["heavy_tail"]
+    _require(ht, _HEAVY_TAIL_FIELDS, f"{name}.heavy_tail")
+    if not 0.0 <= ht["prefix_hit_rate"] <= 1.0:
+        raise ValueError(f"{name}.heavy_tail: prefix_hit_rate "
+                         f"{ht['prefix_hit_rate']} outside [0, 1]")
+    if ht["outputs_match"] is not True:
+        raise ValueError(f"{name}.heavy_tail: outputs_match is not true — "
+                         f"the paged engine diverged from the contiguous "
+                         f"engine")
+    if ht["prefill_batches"] > ht["prefill_batches_contiguous"]:
+        raise ValueError(f"{name}.heavy_tail: paged prefill_batches "
+                         f"{ht['prefill_batches']} exceeds contiguous "
+                         f"{ht['prefill_batches_contiguous']}")
+    if ht["latency_ticks_p99"] < ht["latency_ticks_p50"]:
+        raise ValueError(f"{name}.heavy_tail: p99 latency below p50")
     if not record["megastep"]:
         raise ValueError(f"{name}.megastep: empty sweep")
     for k, run in record["megastep"].items():
@@ -134,7 +167,8 @@ def validate_engine_record(record: dict) -> None:
 
 
 def validate_serve_record(record: dict) -> None:
-    """Structural check for a BENCH_sketch_serve.json record (schema v5)."""
+    """Structural check for a BENCH_sketch_serve.json record (schema v6;
+    serve records are structurally unchanged since v5)."""
     name = "BENCH_sketch_serve"
     _validate_common(record, name)
     _require(record, ("decode_chunk", "us_dense", "us_sketch",

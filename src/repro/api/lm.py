@@ -195,7 +195,8 @@ class LM:
     def engine(self, n_slots: int, max_seq: int, *,
                sampler: Optional[Sampler] = None,
                eos_id: Optional[int] = None, decode_chunk: int = 1,
-               spec_decode: int = 0):
+               spec_decode: int = 0, paged: bool = False,
+               page_size: int = 16, num_pages: Optional[int] = None):
         """A fresh continuous-batching ServeEngine over this (model, head).
 
         Args:
@@ -211,6 +212,14 @@ class LM:
             drafts K tokens through this LM's ``head`` and dense-verifies
             them (DESIGN.md §11); mutually exclusive with
             ``decode_chunk > 1``.
+          paged: allocate the attention/MLA decode caches as a shared page
+            pool with per-slot page tables and an exact-prompt prefix cache
+            (DESIGN.md §13) instead of contiguous per-slot rows.  Bitwise
+            identical outputs; repeated prompts prefill once.  Mutually
+            exclusive with ``decode_chunk > 1`` and ``spec_decode``.
+          page_size: tokens per page along the sequence axis (paged only).
+          num_pages: page-pool capacity override (paged only; sized from
+            ``n_slots``/``max_seq`` when omitted).
 
         Returns:
           A ``repro.launch.engine.ServeEngine`` (mesh-aware when this LM
@@ -222,13 +231,15 @@ class LM:
                            max_seq=max_seq, head=self.head,
                            sampler=sampler, eos_id=eos_id, mesh=self.mesh,
                            decode_chunk=decode_chunk,
-                           spec_decode=spec_decode)
+                           spec_decode=spec_decode, paged=paged,
+                           page_size=page_size, num_pages=num_pages)
 
     def serve(self, requests: Iterable[RequestLike], *, n_slots: int = 4,
               max_seq: Optional[int] = None,
               sampler: Optional[Sampler] = None,
               eos_id: Optional[int] = None, decode_chunk: int = 1,
-              spec_decode: int = 0) -> Dict[int, List[int]]:
+              spec_decode: int = 0, paged: bool = False,
+              page_size: int = 16) -> Dict[int, List[int]]:
         """Serve a request stream through the engine.
 
         Args:
@@ -240,6 +251,8 @@ class LM:
           eos_id: optional early-retirement token.
           decode_chunk: engine megastep size (see :meth:`engine`).
           spec_decode: speculative draft length (see :meth:`engine`).
+          paged: paged cache pool + prefix cache (see :meth:`engine`).
+          page_size: tokens per page when ``paged`` (see :meth:`engine`).
 
         Returns:
           Per request id (submission order), the generated tokens (prompt
@@ -256,7 +269,8 @@ class LM:
             max_seq = max(len(p) + g for p, g, _ in reqs)
         engine = self.engine(n_slots, max_seq, sampler=sampler, eos_id=eos_id,
                              decode_chunk=decode_chunk,
-                             spec_decode=spec_decode)
+                             spec_decode=spec_decode, paged=paged,
+                             page_size=page_size)
         for prompt, max_new, arrival in reqs:
             engine.submit(prompt, max_new, arrival=arrival)
         return engine.run()

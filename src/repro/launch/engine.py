@@ -216,6 +216,93 @@ class EngineBackend:
             active=jnp.asarray(active))
         return np.asarray(logits), pool
 
+    # -- paged pool (DESIGN.md §13) ----------------------------------------
+
+    def _paged_fns(self, max_seq: int, page_size: int):
+        return jitted_serve_fns(self.cfg, self.head.without_params(),
+                                mesh=self.mesh, paged=True,
+                                page_size=page_size, max_seq=max_seq).paged_ops
+
+    def paged_geometries(self, max_seq: int):
+        """Distinct (size, ring) sequence-axis geometries across this
+        model's paged layer families — what the engine's write-page logic
+        iterates to find the page each family writes at a position."""
+        from repro.models.blocks import paged_geometry
+        kinds = set(self.cfg.pattern)
+        geoms = {paged_geometry(self.cfg, k, max_seq) for k in kinds}
+        return sorted(g for g in geoms if g is not None)
+
+    def init_paged(self, n_slots: int, max_seq: int, page_size: int,
+                   num_pages: int):
+        """Device state for the paged engine: the (pages, state) tree pair."""
+        from repro.models.model import init_paged_cache, init_paged_state
+        pages = init_paged_cache(self.cfg, num_pages, page_size)
+        state = init_paged_state(self.cfg, n_slots)
+        if self.mesh is not None:
+            from repro.sharding.rules import page_pool_shardings
+            pages = jax.device_put(pages,
+                                   page_pool_shardings(pages, self.mesh))
+            state = self._place_cache(state)
+        return pages, state
+
+    def paged_decode(self, pages, state, table: np.ndarray,
+                     tokens: np.ndarray, pos: np.ndarray, active: np.ndarray,
+                     *, max_seq: int, page_size: int):
+        """One paged decode tick: gather per-slot views through the page
+        table, splice in the recurrent state, run the *same* compiled decode
+        step the contiguous engine uses (that identity is the bitwise-parity
+        argument), then commit the written position back to the arenas and
+        re-extract the state.  ``pages``/``state`` are consumed (the view —
+        and with it the spliced-in state buffers — is donated to decode, and
+        commit donates the arena); rebind to the returned pair."""
+        from repro.models.model import extract_paged_state, merge_paged_view
+        fns = self._paged_fns(max_seq, page_size)
+        pt = jnp.asarray(table, jnp.int32)
+        posj = jnp.asarray(pos, jnp.int32)
+        view = fns.gather(pages, pt)
+        full = merge_paged_view(self.cfg, view, state)
+        logits, new_full = self._decode(
+            self.params, full, jnp.asarray(tokens[:, None], jnp.int32),
+            posj, head_params=self.head.params, active=jnp.asarray(active))
+        new_pages = fns.commit(pages, new_full, pt, posj)
+        new_state = extract_paged_state(self.cfg, new_full)
+        return np.asarray(logits), new_pages, new_state
+
+    def paged_insert(self, pages, filled, pt_rows: np.ndarray, *,
+                     max_seq: int, page_size: int):
+        """Scatter freshly prefilled rows into newly mapped pages (``pages``
+        donated; ``filled`` is also read by the state insert — not donated)."""
+        fns = self._paged_fns(max_seq, page_size)
+        return fns.insert(pages, filled, jnp.asarray(pt_rows, jnp.int32))
+
+    def page_copy(self, pages, src_ids: np.ndarray, dst_ids: np.ndarray, *,
+                  max_seq: int, page_size: int):
+        """COW fork: copy pages ``src_ids → dst_ids`` in every arena."""
+        fns = self._paged_fns(max_seq, page_size)
+        return fns.page_copy(pages, jnp.asarray(src_ids, jnp.int32),
+                             jnp.asarray(dst_ids, jnp.int32))
+
+    def state_rows(self, filled, row: int):
+        """One request's recurrent-state rows as a host numpy tree — what a
+        prefix-cache entry stores (constant-size; no pages involved).
+        ``None`` for archs with no recurrent layers."""
+        from repro.models.model import extract_state_rows
+        rows = extract_state_rows(self.cfg, filled, row)
+        if not jax.tree_util.tree_leaves(rows):
+            return None
+        return jax.tree.map(lambda x: np.asarray(x), rows)
+
+    def state_restore(self, state, entry_state, slot: int):
+        """Insert a prefix entry's stored recurrent rows into one slot."""
+        src = jax.tree.map(jnp.asarray, entry_state)
+        return self._insert(state, src, jnp.asarray([slot], jnp.int32))
+
+    def expand_rows(self, filled, inv: np.ndarray):
+        """Expand a deduped prefill — (G_unique, …) rows → (G, …) via the
+        inverse index — so slot inserts stay one-row-per-request."""
+        from repro.launch.steps import expand_rows_fn
+        return expand_rows_fn(self.cfg)(filled, jnp.asarray(inv, jnp.int32))
+
     def megastep(self, pool, tokens: np.ndarray, pos: np.ndarray,
                  active: np.ndarray, key, k: int, sampler: Sampler,
                  eos_id: Optional[int]):
@@ -270,7 +357,9 @@ class ServeEngine:
     def __init__(self, backend, n_slots: int, max_seq: int, *,
                  eos_id: Optional[int] = None,
                  sampler: Optional[Sampler] = None, decode_chunk: int = 1,
-                 spec_decode: int = 0, greedy=None, seed=None):
+                 spec_decode: int = 0, paged: bool = False,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 greedy=None, seed=None):
         _, sampler = resolve_legacy_serving_kwargs(
             None, sampler, None, None, None, greedy, seed, "ServeEngine")
         if decode_chunk < 1:
@@ -285,6 +374,19 @@ class ServeEngine:
             raise ValueError("spec_decode needs a backend with a "
                              "spec_megastep (the fused draft/verify "
                              "dispatch); this backend has none")
+        if paged:
+            if decode_chunk > 1:
+                raise ValueError("paged=True runs the host decode loop; "
+                                 "decode_chunk > 1 is not supported yet")
+            if spec_decode:
+                raise ValueError("paged=True and spec_decode are mutually "
+                                 "exclusive")
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if not hasattr(backend, "init_paged"):
+                raise ValueError("paged=True needs a backend with the paged "
+                                 "pool ops (init_paged/paged_decode/…); "
+                                 "this backend has none")
         self.backend = backend
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -292,7 +394,24 @@ class ServeEngine:
         self.sampler = sampler or Sampler()
         self.decode_chunk = decode_chunk
         self.spec_decode = spec_decode
-        self.pool = backend.init_pool(n_slots, max_seq)
+        self.paged = paged
+        self.page_size = page_size
+        if paged:
+            from repro.launch.paging import PagePool, PrefixCache
+            npp = -(-max_seq // page_size)          # page-table width
+            if num_pages is None:
+                # Enough for every slot's full budget plus a prefix-cache
+                # working set; LRU eviction absorbs the heavy tail beyond.
+                num_pages = 1 + (n_slots + 8) * (npp + 1)
+            self.pages, self.state = backend.init_paged(
+                n_slots, max_seq, page_size, num_pages)
+            self.page_pool = PagePool(num_pages, n_slots, npp)
+            self.prefix = PrefixCache(self.page_pool)
+            self._geoms = backend.paged_geometries(max_seq)
+            self._has_state = bool(jax.tree_util.tree_leaves(self.state))
+            self.pool = None
+        else:
+            self.pool = backend.init_pool(n_slots, max_seq)
         self.sched = SlotScheduler(n_slots)
         self.pos = np.zeros(n_slots, np.int32)         # tokens cached per slot
         self.last_tok = np.zeros(n_slots, np.int32)    # sampled, not yet cached
@@ -308,7 +427,11 @@ class ServeEngine:
         self.stats = {"decode_steps": 0, "active_slot_steps": 0,
                       "admitted": 0, "retired": 0, "prefill_batches": 0,
                       "megasteps": 0, "host_syncs": 0, "verify_calls": 0,
-                      "draft_tokens": 0, "accepted_draft_tokens": 0}
+                      "draft_tokens": 0, "accepted_draft_tokens": 0,
+                      "dedup_saved": 0, "prefix_hits": 0,
+                      "prefix_queries": 0, "page_allocs": 0,
+                      "cow_copies": 0, "pages_in_use": 0,
+                      "pages_in_use_peak": 0}
 
     # -- request intake ----------------------------------------------------
 
@@ -340,21 +463,64 @@ class ServeEngine:
         self.stats["host_syncs"] += 1
         return np.asarray(toks, np.int32)
 
-    def _admit(self) -> None:
-        """FIFO head-of-line admission into free slots; equal-length prompts
-        arriving together prefill as one batch (the bulk-prefill path)."""
+    def _pop_admission_batch(self) -> List[Request]:
         batch: List[Request] = []
         while (self.queue and self.queue.peek().arrival <= self.now
                and self.sched.n_free > len(batch)):
             batch.append(self.queue.pop())
-        if not batch:
-            return
+        return batch
+
+    @staticmethod
+    def _by_len(batch: List[Request]) -> Dict[int, List[Request]]:
         by_len: Dict[int, List[Request]] = {}
         for r in batch:
             by_len.setdefault(len(r.prompt), []).append(r)
-        for plen, group in by_len.items():
-            prompts = jnp.asarray(np.stack([r.prompt for r in group]))
+        return by_len
+
+    def _finish_admit(self, group: List[Request], slots: np.ndarray,
+                      first: np.ndarray, plen: int) -> None:
+        """Shared per-request admission bookkeeping (both pool layouts)."""
+        self.stats["admitted"] += len(group)
+        for i, r in enumerate(group):
+            s = int(slots[i])
+            self.pos[s] = plen
+            self.last_tok[s] = first[i]
+            self.remaining[s] = r.max_new_tokens - 1
+            self.outputs[r.rid] = [int(first[i])]
+            if (self.remaining[s] == 0
+                    or (self.eos_id is not None
+                        and int(first[i]) == self.eos_id)):
+                self._retire(s)
+
+    def _admit(self) -> None:
+        """FIFO head-of-line admission into free slots; equal-length prompts
+        arriving together prefill as one batch (the bulk-prefill path), and
+        *identical* prompts in that batch prefill once (deduped — their
+        logits/cache rows are expanded back to one per request)."""
+        if self.paged:
+            return self._admit_paged()
+        batch = self._pop_admission_batch()
+        for plen, group in self._by_len(batch).items():
+            uniq: Dict[bytes, int] = {}
+            rows: List[np.ndarray] = []
+            inv: List[int] = []
+            for r in group:
+                key = r.prompt.tobytes()
+                if key not in uniq:
+                    uniq[key] = len(rows)
+                    rows.append(r.prompt)
+                inv.append(uniq[key])
+            prompts = jnp.asarray(np.stack(rows))
             logits, filled = self.backend.prefill(prompts, self.max_seq)
+            if len(rows) < len(group):
+                inv_arr = np.asarray(inv)
+                logits = logits[inv_arr]
+                filled = (self.backend.expand_rows(filled, inv_arr)
+                          if hasattr(self.backend, "expand_rows")
+                          else jax.tree.map(lambda x: x[inv_arr], filled))
+                self.stats["dedup_saved"] += len(group) - len(rows)
+            # ONE sample over the full (G, V) group — the sampler splits its
+            # key once per call, so deduping must not change the call count.
             first = self._sample(logits)
             slots = np.asarray([self.sched.admit(r.rid) for r in group])
             # A slot freed by an immediate retirement earlier in this same
@@ -365,17 +531,136 @@ class ServeEngine:
                                    if s not in slots]
             self.pool = self.backend.insert(self.pool, filled, slots)
             self.stats["prefill_batches"] += 1
-            self.stats["admitted"] += len(group)
-            for i, r in enumerate(group):
-                s = int(slots[i])
-                self.pos[s] = plen
-                self.last_tok[s] = first[i]
-                self.remaining[s] = r.max_new_tokens - 1
-                self.outputs[r.rid] = [int(first[i])]
-                if (self.remaining[s] == 0
-                        or (self.eos_id is not None
-                            and int(first[i]) == self.eos_id)):
-                    self._retire(s)
+            self._finish_admit(group, slots, first, plen)
+
+    def _admit_paged(self) -> None:
+        """Paged admission: exact-prompt prefix-cache hits map the entry's
+        shared pages copy-free (COW via refcounts) and restore its stored
+        recurrent state + first-token logits; misses bulk-prefill once per
+        unique prompt, scatter into freshly allocated pages, and register a
+        new entry.  The sampler still sees exactly one (G, V) call per
+        prompt-length group, in the same group order as the contiguous
+        engine — that keeps the seeded key chain aligned across layouts."""
+        batch = self._pop_admission_batch()
+        for plen, group in self._by_len(batch).items():
+            # Classify in arrival order: hit / dup-of-miss / unique miss.
+            plans = []                     # (request, kind, key, ref)
+            miss_rows: List[np.ndarray] = []
+            seen_miss: Dict[bytes, int] = {}
+            for r in group:
+                key = r.prompt.tobytes()
+                entry = self.prefix.get(key)
+                if entry is not None:
+                    plans.append((r, "hit", key, entry))
+                elif key in seen_miss:
+                    plans.append((r, "dup", key, seen_miss[key]))
+                    self.stats["dedup_saved"] += 1
+                else:
+                    seen_miss[key] = len(miss_rows)
+                    miss_rows.append(r.prompt)
+                    plans.append((r, "miss", key, seen_miss[key]))
+            logits_u = filled = None
+            if miss_rows:
+                prompts = jnp.asarray(np.stack(miss_rows))
+                logits_u, filled = self.backend.prefill(prompts, self.max_seq)
+                self.stats["prefill_batches"] += 1
+            # ONE sample per group over rows assembled in arrival order
+            # (stored-entry logits for hits, fresh prefill rows otherwise).
+            first = self._sample(np.stack(
+                [p[3].logits if p[1] == "hit" else logits_u[p[3]]
+                 for p in plans]))
+            slots = np.asarray([self.sched.admit(r.rid) for r in group])
+            self._pending_reset = [s for s in self._pending_reset
+                                   if s not in slots]
+            # Wire pages + state.  Misses first: allocate/map fresh pages,
+            # one scatter for all their rows, then register prefix entries.
+            n_alloc = -(-plen // self.page_size)
+            miss_slots, miss_pt = [], []
+            for p, slot in zip(plans, slots):
+                if p[1] != "miss":
+                    continue
+                ids = self._alloc_pages(n_alloc)
+                self.page_pool.map_slot(int(slot), ids, owned=True)
+                miss_slots.append(int(slot))
+                miss_pt.append(self.page_pool.table[int(slot)].copy())
+            if miss_slots:
+                self.pages = self.backend.paged_insert(
+                    self.pages, filled, np.stack(miss_pt),
+                    max_seq=self.max_seq, page_size=self.page_size)
+                if self._has_state:
+                    self.state = self.backend.insert(
+                        self.state, filled, np.asarray(miss_slots))
+                for p, slot in zip(plans, slots):
+                    if p[1] == "miss":
+                        self.prefix.register(
+                            p[2], self.page_pool.slot_pages(int(slot)),
+                            self.backend.state_rows(filled, p[3]),
+                            logits_u[p[3]], plen)
+            # Hits and dups share the entry's pages (refcounted → COW on
+            # first divergent decode write) and restore its state rows.
+            for p, slot in zip(plans, slots):
+                if p[1] == "miss":
+                    continue
+                entry = (p[3] if p[1] == "hit"
+                         else self.prefix.peek(p[2]))
+                self.page_pool.map_slot(int(slot), entry.page_ids,
+                                        owned=False)
+                if entry.state is not None:
+                    self.state = self.backend.state_restore(
+                        self.state, entry.state, int(slot))
+            self._finish_admit(group, slots, first, plen)
+        self._sync_page_stats()
+
+    def _alloc_pages(self, n: int) -> List[int]:
+        """Allocate ``n`` pages, evicting LRU prefix entries until they fit."""
+        while True:
+            ids = self.page_pool.alloc(n)
+            if ids is not None:
+                return ids
+            if not self.prefix.evict_lru():
+                raise RuntimeError(
+                    f"page pool exhausted: {n} pages requested, "
+                    f"{self.page_pool.n_free} free and nothing left to "
+                    f"evict — raise num_pages or lower n_slots/max_seq")
+
+    def _ensure_write_pages(self, active_slots: List[int]) -> None:
+        """Before a decode tick, make every active slot's write page private
+        and mapped: unmapped → allocate; shared (refcount > 1, i.e. a prefix
+        entry or sibling slot also references it) → copy-on-write fork.
+        The COW here is what makes prefix sharing *correct*, not just fast —
+        without it the first divergent token would corrupt siblings."""
+        copies = []                         # (src, dst) page-id pairs
+        for s in active_slots:
+            pos = int(self.pos[s])
+            idxs = {(pos % size if ring else pos) // self.page_size
+                    for size, ring in self._geoms}
+            for j in sorted(idxs):
+                pid = int(self.page_pool.table[s, j])
+                if pid == 0:
+                    (new,) = self._alloc_pages(1)
+                    self.page_pool.map_index(s, j, new)
+                elif self.page_pool.refcount[pid] > 1:
+                    (new,) = self._alloc_pages(1)
+                    self.page_pool.remap(s, j, new)
+                    copies.append((pid, new))
+                    self.stats["cow_copies"] += 1
+        if copies:
+            # One fixed-shape scatter for all forks this tick, padded with
+            # (0, 0) — copying the zero page onto itself is a no-op.
+            cap = self.n_slots * max(1, len(self._geoms))
+            assert len(copies) <= cap
+            pairs = copies + [(0, 0)] * (cap - len(copies))
+            self.pages = self.backend.page_copy(
+                self.pages, np.asarray([p[0] for p in pairs], np.int32),
+                np.asarray([p[1] for p in pairs], np.int32),
+                max_seq=self.max_seq, page_size=self.page_size)
+
+    def _sync_page_stats(self) -> None:
+        self.stats["page_allocs"] = self.page_pool.page_allocs
+        self.stats["pages_in_use"] = self.page_pool.pages_in_use
+        self.stats["pages_in_use_peak"] = self.page_pool.peak_in_use
+        self.stats["prefix_hits"] = self.prefix.hits
+        self.stats["prefix_queries"] = self.prefix.queries
 
     def _retire(self, slot: int) -> None:
         rid = self.sched.retire(slot)
@@ -384,6 +669,10 @@ class ServeEngine:
         # this step) — a freed row is never read while inactive, and
         # ``slot_insert`` fully overwrites it on re-admission.
         self._pending_reset.append(slot)
+        if self.paged:
+            # Unmap the slot's pages (prefix entries keep shared ones alive;
+            # exclusively owned ones return to the free list).
+            self.page_pool.clear_slot(slot)
         self.stats["retired"] += 1
 
     # -- the engine tick ---------------------------------------------------
@@ -496,8 +785,15 @@ class ServeEngine:
         elif active_slots:
             active = np.zeros(self.n_slots, bool)
             active[active_slots] = True
-            logits, self.pool = self.backend.decode(
-                self.pool, self.last_tok, self.pos, active)
+            if self.paged:
+                self._ensure_write_pages(active_slots)
+                logits, self.pages, self.state = self.backend.paged_decode(
+                    self.pages, self.state, self.page_pool.table,
+                    self.last_tok, self.pos, active,
+                    max_seq=self.max_seq, page_size=self.page_size)
+            else:
+                logits, self.pool = self.backend.decode(
+                    self.pool, self.last_tok, self.pos, active)
             nxt = self._sample(logits)
             self.stats["decode_steps"] += 1
             self.stats["megasteps"] += 1
@@ -517,8 +813,18 @@ class ServeEngine:
             # the first slot is a no-op.
             slots = self._pending_reset + [self._pending_reset[0]] * (
                 self.n_slots - len(self._pending_reset))
-            self.pool = self.backend.reset(self.pool, np.asarray(slots))
+            if self.paged:
+                # Pages were unmapped at retirement (the arena needs no
+                # zeroing — unmapped gathers read the reserved zero page);
+                # only the recurrent state rows are zeroed.
+                if self._has_state:
+                    self.state = self.backend.reset(self.state,
+                                                    np.asarray(slots))
+            else:
+                self.pool = self.backend.reset(self.pool, np.asarray(slots))
             self._pending_reset.clear()
+        if self.paged:
+            self._sync_page_stats()
         self.now += advanced
 
     def run(self) -> Dict[int, List[int]]:
@@ -542,6 +848,8 @@ def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
                 sampler: Optional[Sampler] = None,
                 eos_id: Optional[int] = None, mesh=None,
                 decode_chunk: int = 1, spec_decode: int = 0,
+                paged: bool = False, page_size: int = 16,
+                num_pages: Optional[int] = None,
                 sketch_head=None, sketch_cfg: Optional[SketchHeadConfig] = None,
                 fused=None, greedy=None, seed=None) -> ServeEngine:
     """Engine over a real model: the serving entry point (see launch.serve
@@ -555,7 +863,13 @@ def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
     engine.  ``spec_decode=K`` makes every tick a speculative two-head
     megastep instead: the engine's ``head`` drafts K tokens and one batched
     dense pass verifies them, emitting the dense stream bitwise (DESIGN.md
-    §11; mutually exclusive with ``decode_chunk > 1``).  The pre-redesign
+    §11; mutually exclusive with ``decode_chunk > 1``).  ``paged=True``
+    swaps the fixed per-slot pool for the paged arena + prefix cache
+    (DESIGN.md §13): slots map ``page_size``-token pages through a
+    refcounted page table, identical prompts hit the prefix cache instead
+    of re-prefilling, and shared pages fork copy-on-write on the first
+    divergent decode write — token streams stay bitwise identical to the
+    contiguous engine.  The pre-redesign
     ``sketch_head=/sketch_cfg=/fused=/greedy=/seed=`` kwargs keep working
     behind a DeprecationWarning."""
     head, sampler = resolve_legacy_serving_kwargs(
@@ -564,4 +878,5 @@ def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
     backend = EngineBackend(params, cfg, head=head, mesh=mesh)
     return ServeEngine(backend, n_slots, max_seq, eos_id=eos_id,
                        sampler=sampler, decode_chunk=decode_chunk,
-                       spec_decode=spec_decode)
+                       spec_decode=spec_decode, paged=paged,
+                       page_size=page_size, num_pages=num_pages)

@@ -10,7 +10,10 @@ Two serving modes over a (smoke-scale on CPU) model, both routed through the
   DESIGN.md §7): a pool of ``--batch`` cache slots served from a FIFO queue
   with staggered arrivals and skewed per-request generation lengths;
   finished sequences retire individually and their slots are recycled
-  mid-decode.
+  mid-decode.  ``--paged --page-size N`` swaps the contiguous slot pool for
+  the paged pool + exact-prompt prefix cache (DESIGN.md §13): bitwise the
+  same streams, repeated prompts prefill once.  ``--stats-json`` appends
+  the engine stats dict as one parseable ``STATS_JSON {…}`` line.
 
 ``--sketch-head`` swaps the dense logit matmul for the Representer-Sketch
 head (the paper's technique as a first-class serving feature — DESIGN.md §4)
@@ -249,16 +252,26 @@ def build_or_load_head(params, cfg, head_path: str | None,
 
 def run_engine(lm, args, sampler: Sampler) -> None:
     """Serve a synthetic request stream through the continuous-batching
-    engine: staggered arrivals, skewed generation lengths, recycled slots."""
+    engine: staggered arrivals, skewed generation lengths, recycled slots.
+    With ``--paged``, repeated prompts in the stream hit the prefix cache
+    and skip their prefill entirely."""
     n_requests = args.requests or 2 * args.batch
     max_seq = args.prompt_len + args.gen
     engine = lm.engine(n_slots=args.batch, max_seq=max_seq, sampler=sampler,
                        decode_chunk=args.decode_chunk,
-                       spec_decode=args.spec_decode)
+                       spec_decode=args.spec_decode, paged=args.paged,
+                       page_size=args.page_size)
     rng = np.random.default_rng(args.seed)
+    # A quarter of the prompt stream repeats a shared prompt so --paged has
+    # prefix-cache traffic to show; the rest are unique.
+    shared = rng.integers(0, lm.cfg.vocab_size, args.prompt_len,
+                          dtype=np.int32)
     for i in range(n_requests):
-        prompt = rng.integers(0, lm.cfg.vocab_size, args.prompt_len,
-                              dtype=np.int32)
+        if i % 4 == 3:
+            prompt = shared
+        else:
+            prompt = rng.integers(0, lm.cfg.vocab_size, args.prompt_len,
+                                  dtype=np.int32)
         # Skewed length mix: even requests are short, odd run the full --gen.
         gen = args.gen if i % 2 else max(1, args.gen // 4)
         engine.submit(prompt, gen, arrival=i * args.arrival_every)
@@ -282,8 +295,27 @@ def run_engine(lm, args, sampler: Sampler) -> None:
               f"{engine.stats['verify_calls']} verify calls, "
               f"acceptance {accepted}/{drafted} "
               f"({accepted / max(1, drafted):.2f})")
+    if engine.paged:
+        s = engine.stats
+        print(f"paged: page_size={engine.page_size}, prefix hits "
+              f"{s['prefix_hits']}/{s['prefix_queries']} "
+              f"(rate {s['prefix_hits'] / max(1, s['prefix_queries']):.2f}), "
+              f"{s['prefill_batches']} prefill batches, "
+              f"{s['cow_copies']} COW copies, "
+              f"pages in use peak {s['pages_in_use_peak']}")
     first = finished[min(finished)]
     print("sample token ids:", np.asarray(first[:24]))
+    if args.stats_json:
+        # One parseable line: the engine stats dict plus run metadata, for
+        # scripts/CI that scrape serving numbers without parsing prose.
+        import json
+        record = {"arch": lm.cfg.name, "head": lm.head.describe(),
+                  "n_slots": args.batch, "requests": len(finished),
+                  "tokens": n_generated, "seconds": round(dur, 3),
+                  "paged": engine.paged,
+                  "page_size": engine.page_size if engine.paged else None}
+        record.update({k: int(v) for k, v in engine.stats.items()})
+        print("STATS_JSON " + json.dumps(record, sort_keys=True))
 
 
 def main() -> None:
@@ -332,6 +364,18 @@ def main() -> None:
                          "verifies (DESIGN.md §11; output is bitwise the "
                          "dense stream; mutually exclusive with "
                          "--decode-chunk > 1)")
+    ap.add_argument("--paged", action="store_true",
+                    help="engine mode: paged decode-cache pool + exact-"
+                         "prompt prefix cache (DESIGN.md §13) — bitwise the "
+                         "contiguous stream, repeated prompts prefill once; "
+                         "mutually exclusive with --decode-chunk > 1 and "
+                         "--spec-decode")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per cache page with --paged (smaller pages "
+                         "waste less tail memory but deepen the page table)")
+    ap.add_argument("--stats-json", action="store_true",
+                    help="engine mode: print the engine stats dict as one "
+                         "parseable 'STATS_JSON {…}' line after the run")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -346,6 +390,8 @@ def main() -> None:
     if args.no_fused and args.backend is not None:
         ap.error("--no-fused is a deprecated alias for --backend two_kernel; "
                  "pass only --backend")
+    if (args.paged or args.stats_json) and not args.engine:
+        ap.error("--paged/--stats-json apply to engine mode; add --engine")
     backend = "two_kernel" if args.no_fused else args.backend
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -240,6 +240,23 @@ def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
     return logits, new_cache
 
 
+class PagedServeFns(tuple):
+    """Jitted paged-pool ops for one (cfg, mesh, max_seq, page_size) spec
+    (DESIGN.md §13).  ``gather(pages, pt)`` materializes per-slot views;
+    ``commit(pages, view, pt, pos)`` scatters the decode-written position
+    back; ``insert(pages, src, pt_rows)`` lands freshly prefilled rows;
+    ``page_copy(pages, src_ids, dst_ids)`` forks COW pages.  Everything but
+    ``gather`` **donates** the arena — rebind to the returned tree.
+    """
+
+    def __new__(cls, gather, commit, insert, page_copy, page_size, max_seq):
+        self = super().__new__(cls, (gather, commit, insert, page_copy))
+        self.gather, self.commit = gather, commit
+        self.insert, self.page_copy = insert, page_copy
+        self.page_size, self.max_seq = page_size, max_seq
+        return self
+
+
 class ServeFns(tuple):
     """The jitted serving callables for one (cfg, head, mesh, chunk) spec.
 
@@ -247,26 +264,31 @@ class ServeFns(tuple):
     the on-device K-step decode loop is the extra ``megastep`` attribute
     (``None`` at ``decode_chunk=1`` — the bitwise-parity host-loop default)
     and the speculative two-head megastep is ``spec_megastep`` (``None``
-    unless requested via ``spec_decode=K``).  ``decode`` / ``insert`` /
-    ``reset`` / ``megastep`` / ``spec_megastep`` **donate** their cache/pool
-    argument: the passed-in cache is consumed and callers must rebind to
-    the returned one (launch/decode_loop.py).
+    unless requested via ``spec_decode=K``).  With ``paged=True`` the
+    ``paged_ops`` attribute carries the :class:`PagedServeFns` arena ops —
+    the core decode itself stays the *same* compiled executable, fed the
+    gathered view (that identity is the bitwise-parity argument).
+    ``decode`` / ``insert`` / ``reset`` / ``megastep`` / ``spec_megastep``
+    **donate** their cache/pool argument: the passed-in cache is consumed
+    and callers must rebind to the returned one (launch/decode_loop.py).
     """
 
     def __new__(cls, prefill, decode, insert, reset, megastep=None,
-                spec_megastep=None):
+                spec_megastep=None, paged_ops=None):
         self = super().__new__(cls, (prefill, decode, insert, reset))
         self.prefill, self.decode = prefill, decode
         self.insert, self.reset = insert, reset
         self.megastep = megastep
         self.spec_megastep = spec_megastep
+        self.paged_ops = paged_ops
         return self
 
 
 def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
                      fused=None, *, mesh=None, sampler=None,
                      decode_chunk: int = 1, spec_decode: int = 0,
-                     eos_id: Optional[int] = None):
+                     eos_id: Optional[int] = None, paged: bool = False,
+                     page_size: int = 16, max_seq: Optional[int] = None):
     """Jitted (prefill, decode, slot_insert, slot_reset[, megastep]) for one
     serving config.  Memoized on ``(cfg, head spec, mesh, sampler,
     decode_chunk, eos_id)`` — all hashable — so every ``generate()`` call
@@ -297,6 +319,12 @@ def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
     across insert/reset instead of letting rows gather to one device —
     donation aliases buffers shard-for-shard under the same constraints.
 
+    With ``paged=True`` (needs ``max_seq``; host decode loop only, so
+    mutually exclusive with ``decode_chunk > 1`` and ``spec_decode``), the
+    returned struct's ``paged_ops`` carries the jitted page-arena ops
+    (:class:`PagedServeFns`); the core four fns are unchanged — the paged
+    engine feeds the *same* compiled decode the gathered view.
+
     Accepts the pre-redesign ``(cfg, sketch_cfg, fused)`` calling convention
     behind a DeprecationWarning.
     """
@@ -323,11 +351,28 @@ def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
     if spec_decode and sampler is None:
         raise ValueError("spec_decode fuses sampling into the draft/verify "
                          "scan; pass sampler=repro.api.Sampler(...)")
+    if paged:
+        if decode_chunk > 1:
+            raise ValueError("paged serving gathers/commits pages around "
+                             "each host decode step; decode_chunk > 1 (the "
+                             "on-device megastep) is not supported yet")
+        if spec_decode:
+            raise ValueError("paged serving and spec_decode are mutually "
+                             "exclusive: the draft/verify megastep manages "
+                             "its own contiguous pool")
+        if max_seq is None:
+            raise ValueError("paged=True needs max_seq= to size the "
+                             "per-slot page tables")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
     # The four core fns don't depend on (sampler, decode_chunk, eos_id), so
     # they memoize on (cfg, head, mesh) alone — a new sampler spec must not
     # recompile the model steps.  The megasteps have their own memo caches in
     # decode_loop.py keyed on the full spec.
     fns = _jitted_serve_fns(cfg, head, mesh)
+    if paged:
+        return ServeFns(*fns, None, None,
+                        _paged_serve_fns(cfg, mesh, max_seq, page_size))
     if decode_chunk == 1 and not spec_decode:
         return fns   # the memoized instance itself (stable identity)
     if spec_decode:
@@ -359,6 +404,58 @@ def _jitted_serve_fns(cfg: ModelConfig, head: LogitHead, mesh=None):
     insert = slot_op(cache_slot_insert)
     reset = slot_op(cache_slot_reset)
     return ServeFns(prefill, decode, insert, reset)
+
+
+@functools.lru_cache(maxsize=None)
+def _paged_serve_fns(cfg: ModelConfig, mesh, max_seq: int, page_size: int):
+    """Jitted page-arena ops, memoized per (cfg, mesh, max_seq, page_size).
+
+    Head-independent: the arena never meets the logit head, so every head
+    spec over the same backbone shares one compile cache.  ``gather`` is the
+    only non-donating op (the arena must survive it — the view is a copy);
+    ``commit`` / ``insert`` / ``page_copy`` donate the arena and the caller
+    rebinds.  Under a mesh, views are constrained to the contiguous cache
+    shardings (so the shared decode executable sees identical layouts) and
+    arenas to ``page_pool_shardings``.
+    """
+    from repro.models.model import (paged_commit_cache, paged_copy_pages,
+                                    paged_gather_cache, paged_insert_cache)
+
+    def constrain_pages(pages):
+        if mesh is None:
+            return pages
+        from repro.sharding.rules import page_pool_shardings
+        return jax.lax.with_sharding_constraint(
+            pages, page_pool_shardings(pages, mesh))
+
+    def gather(pages, pt):
+        view = paged_gather_cache(cfg, pages, pt, max_seq)
+        return view if mesh is None else _constrain_cache(view, mesh)
+
+    def commit(pages, view, pt, pos):
+        return constrain_pages(
+            paged_commit_cache(cfg, pages, view, pt, pos, max_seq))
+
+    def insert(pages, src, pt_rows):
+        return constrain_pages(paged_insert_cache(cfg, pages, src, pt_rows))
+
+    def page_copy(pages, src_ids, dst_ids):
+        return constrain_pages(paged_copy_pages(cfg, pages, src_ids, dst_ids))
+
+    return PagedServeFns(
+        jax.jit(gather),
+        jax.jit(commit, donate_argnums=(0,)),
+        jax.jit(insert, donate_argnums=(0,)),
+        jax.jit(page_copy, donate_argnums=(0,)),
+        page_size, max_seq)
+
+
+@functools.lru_cache(maxsize=None)
+def expand_rows_fn(cfg: ModelConfig):
+    """Jitted ``model.cache_expand_rows`` for one config (admission dedupe:
+    expand a deduped prefill's cache rows back to one per request)."""
+    from repro.models.model import cache_expand_rows
+    return jax.jit(functools.partial(cache_expand_rows, cfg))
 
 
 # --------------------------------------------------------------------------

@@ -71,6 +71,80 @@ def slot_reset(cache: KVCache, slots: jnp.ndarray) -> KVCache:
     return KVCache(cache.k.at[slots].set(0), cache.v.at[slots].set(0))
 
 
+# -- paged variants (DESIGN.md §13) ----------------------------------------
+#
+# The paged pool replaces the per-slot ``(B, size, …)`` rows with a shared
+# ``(num_pages, page_size, …)`` arena addressed through a host-side page
+# table.  Page 0 is reserved all-zero, so gathering an unmapped table entry
+# reproduces a fresh ``init_cache`` row bitwise — the gathered view feeds
+# the *same* compiled decode step as the contiguous engine.
+
+
+def init_paged_cache(num_pages: int, page_size: int, cfg: AttentionConfig,
+                     dtype=jnp.bfloat16) -> KVCache:
+    shape = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def paged_view(cache: KVCache, pt: jnp.ndarray, size: int) -> KVCache:
+    """Gather per-slot contiguous rows from the page arena.
+
+    ``pt`` is the (B, npp_max) page table; this family reads its first
+    ``ceil(size / page_size)`` entries.  Unmapped (0) entries gather the
+    reserved zero page, so the result is byte-equal to a contiguous pool
+    row at the same decode position.
+    """
+    ps = cache.k.shape[1]
+    npp = -(-size // ps)
+
+    def g(pages):
+        v = pages[pt[:, :npp]]                       # (B, npp, ps, kv, dh)
+        return v.reshape(pt.shape[0], npp * ps, *pages.shape[2:])[:, :size]
+
+    return KVCache(g(cache.k), g(cache.v))
+
+
+def paged_commit(cache: KVCache, view: KVCache, pt: jnp.ndarray,
+                 wpos: jnp.ndarray) -> KVCache:
+    """Scatter the one position decode wrote back into the arena.
+
+    ``wpos`` (B,) is the ring-adjusted write index the decode step used
+    (``pos % size`` for rolling SWA, ``pos`` otherwise) — computed by the
+    dispatch layer, which knows this family's ring geometry.  Slots whose
+    write page is unmapped (retired/inactive — masked decode reverted their
+    update) scatter gathered zeros onto the zero page: a no-op.
+    """
+    ps = cache.k.shape[1]
+    bi = jnp.arange(pt.shape[0])
+    phys = pt[bi, wpos // ps]
+    off = wpos % ps
+    return KVCache(
+        cache.k.at[phys, off].set(view.k[bi, wpos].astype(cache.k.dtype)),
+        cache.v.at[phys, off].set(view.v[bi, wpos].astype(cache.v.dtype)))
+
+
+def paged_insert(cache: KVCache, src: KVCache, pt_rows: jnp.ndarray) -> KVCache:
+    """Scatter freshly prefilled rows into newly mapped pages.
+
+    ``src`` is the same fresh contiguous cache ``slot_insert`` takes, one
+    row per admitted request; ``pt_rows`` are those requests' page-table
+    rows.  Rows past the prompt are still zero after prefill (ring rebuild
+    included), so unmapped trailing entries scatter zeros onto page 0.
+    """
+    ps = cache.k.shape[1]
+    size = src.k.shape[1]
+    npp = -(-size // ps)
+
+    def s(pages, rows):
+        pad = npp * ps - size
+        if pad:
+            rows = jnp.pad(rows, ((0, 0), (0, pad)) + ((0, 0),) * (rows.ndim - 2))
+        rows = rows.reshape(rows.shape[0], npp, ps, *rows.shape[2:])
+        return pages.at[pt_rows[:, :npp]].set(rows.astype(pages.dtype))
+
+    return KVCache(s(cache.k, src.k), s(cache.v, src.v))
+
+
 def _scores_mask(scores: jnp.ndarray, q_pos: jnp.ndarray, k_pos: jnp.ndarray,
                  window: Optional[int]) -> jnp.ndarray:
     """Apply causal (+ optional sliding-window) mask to (..., Sq, Sk) scores.

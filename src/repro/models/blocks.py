@@ -139,6 +139,98 @@ def slot_reset_cache(kind: str, cache, slots):
     raise ValueError(kind)
 
 
+# -- paged cache dispatch (DESIGN.md §13) ----------------------------------
+#
+# The paged pool splits per family: attention/MLA caches have a sequence
+# axis and live as (num_pages, page_size, …) arenas addressed through a
+# page table; mamba/RWKV state is constant-size per slot and stays in a
+# plain (n_slots, …) *state* tree under the ordinary slot ops.  A layer
+# contributes to exactly one of the two trees (None in the other), which is
+# what lets ``model._map_layer_caches`` walk both with the same machinery.
+
+
+def paged_geometry(cfg: ModelConfig, kind: str, max_seq: int):
+    """Sequence-axis geometry of one layer's paged cache.
+
+    Returns ``(size, ring)`` — the per-slot cache length and whether decode
+    writes roll (``pos % size``) — or None for kinds with nothing to page
+    (cacheless xattn, constant-size mamba/RWKV state).
+    """
+    if kind == "xattn" or kind in ("mamba", "rwkv"):
+        return None
+    if kind in ATTN_KINDS:
+        a = _attn_cfg(cfg, kind)
+        size = min(max_seq, a.window) if a.window else max_seq
+        return size, bool(a.window) and a.window <= size
+    if kind == "mla":
+        return max_seq, False
+    raise ValueError(kind)
+
+
+def init_paged_layer_cache(cfg: ModelConfig, kind: str, num_pages: int,
+                           page_size: int):
+    """Page-arena leaf for one layer (None for unpaged kinds)."""
+    if kind == "xattn" or kind in ("mamba", "rwkv"):
+        return None
+    if kind in ATTN_KINDS:
+        return attn_mod.init_paged_cache(num_pages, page_size,
+                                         _attn_cfg(cfg, kind))
+    return mla_mod.init_paged_cache(num_pages, page_size, cfg.mla)
+
+
+def init_paged_state_cache(cfg: ModelConfig, kind: str, n_slots: int):
+    """Recurrent-state leaf for one layer (None for paged/cacheless kinds)."""
+    if kind == "mamba":
+        return mamba_mod.init_mamba_cache(n_slots, cfg.d_model, cfg.mamba)
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_cache(n_slots, cfg.d_model)
+    return None
+
+
+def _wpos(cfg: ModelConfig, kind: str, pos, max_seq: int):
+    """Ring-adjusted per-slot write index (mirrors the decode-step branch)."""
+    size, ring = paged_geometry(cfg, kind, max_seq)
+    return pos % size if ring else pos
+
+
+def paged_view_cache(cfg: ModelConfig, kind: str, cache, pt, max_seq: int):
+    """Gather one layer's per-slot contiguous view from its page arena."""
+    if cache is None:
+        return None
+    size, _ = paged_geometry(cfg, kind, max_seq)
+    if kind in ATTN_KINDS:
+        return attn_mod.paged_view(cache, pt, size)
+    return mla_mod.paged_view(cache, pt, size)
+
+
+def paged_commit_cache(cfg: ModelConfig, kind: str, cache, view, pt, pos,
+                       max_seq: int):
+    """Scatter the decode-written position of ``view`` back into the arena."""
+    if cache is None:
+        return None
+    wpos = _wpos(cfg, kind, pos, max_seq)
+    if kind in ATTN_KINDS:
+        return attn_mod.paged_commit(cache, view, pt, wpos)
+    return mla_mod.paged_commit(cache, view, pt, wpos)
+
+
+def paged_insert_cache(kind: str, cache, src, pt_rows):
+    """Scatter freshly prefilled rows into newly mapped pages."""
+    if cache is None:
+        return None
+    if kind in ATTN_KINDS:
+        return attn_mod.paged_insert(cache, src, pt_rows)
+    return mla_mod.paged_insert(cache, src, pt_rows)
+
+
+def paged_copy_pages(kind: str, cache, src_ids, dst_ids):
+    """Copy whole pages ``src_ids → dst_ids`` (COW fork; (0,0) pads no-op)."""
+    if cache is None:
+        return None
+    return type(cache)(*(leaf.at[dst_ids].set(leaf[src_ids])
+                         for leaf in cache))
+
+
 def apply_layer(
     params: dict,
     x: jnp.ndarray,

@@ -81,6 +81,14 @@ def slot_reset(cache: MambaCache, slots: jnp.ndarray) -> MambaCache:
     return MambaCache(cache.conv.at[slots].set(0), cache.ssm.at[slots].set(0))
 
 
+# Paged serving (DESIGN.md §13): mamba state has no sequence axis — one
+# constant-size row per slot — so there is nothing to page.  The recurrent
+# families ride the *state* half of the split paged pool with the ordinary
+# slot ops; they join prefix caching via state-row extraction instead.
+paged_slot_insert = slot_insert
+paged_slot_reset = slot_reset
+
+
 def _selective_params(params: dict, x_conv: jnp.ndarray, d_state: int, r: int):
     """Project conv output → (Δ, B_t, C_t) selective parameters (f32)."""
     proj = jnp.einsum("...i,ie->...e", x_conv, params["x_proj"]).astype(jnp.float32)

@@ -61,6 +61,64 @@ def slot_reset(cache: MLACache, slots: jnp.ndarray) -> MLACache:
     return MLACache(cache.c_kv.at[slots].set(0), cache.k_rope.at[slots].set(0))
 
 
+# -- paged variants (DESIGN.md §13) ----------------------------------------
+# Same arena/page-table scheme as attention.paged_*; the latent cache has no
+# head axis, just (num_pages, page_size, rank) leaves.  MLA never rolls a
+# ring, so the commit write index is always the raw position counter.
+
+
+def init_paged_cache(num_pages: int, page_size: int, cfg: MLAConfig,
+                     dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
+        jnp.zeros((num_pages, page_size, cfg.qk_rope_head_dim), dtype))
+
+
+def paged_view(cache: MLACache, pt: jnp.ndarray, size: int) -> MLACache:
+    """Gather per-slot contiguous latent rows from the page arena (unmapped
+    table entries read the reserved zero page → fresh-cache bytes)."""
+    ps = cache.c_kv.shape[1]
+    npp = -(-size // ps)
+
+    def g(pages):
+        v = pages[pt[:, :npp]]                       # (B, npp, ps, r)
+        return v.reshape(pt.shape[0], npp * ps, *pages.shape[2:])[:, :size]
+
+    return MLACache(g(cache.c_kv), g(cache.k_rope))
+
+
+def paged_commit(cache: MLACache, view: MLACache, pt: jnp.ndarray,
+                 wpos: jnp.ndarray) -> MLACache:
+    """Scatter the decode-written position back into the arena (``wpos`` is
+    the per-slot position counter — MLA caches never ring)."""
+    ps = cache.c_kv.shape[1]
+    bi = jnp.arange(pt.shape[0])
+    phys = pt[bi, wpos // ps]
+    off = wpos % ps
+    return MLACache(
+        cache.c_kv.at[phys, off].set(
+            view.c_kv[bi, wpos].astype(cache.c_kv.dtype)),
+        cache.k_rope.at[phys, off].set(
+            view.k_rope[bi, wpos].astype(cache.k_rope.dtype)))
+
+
+def paged_insert(cache: MLACache, src: MLACache,
+                 pt_rows: jnp.ndarray) -> MLACache:
+    """Scatter freshly prefilled latent rows into newly mapped pages."""
+    ps = cache.c_kv.shape[1]
+    size = src.c_kv.shape[1]
+    npp = -(-size // ps)
+
+    def s(pages, rows):
+        pad = npp * ps - size
+        if pad:
+            rows = jnp.pad(rows, ((0, 0), (0, pad)) + ((0, 0),) * (rows.ndim - 2))
+        rows = rows.reshape(rows.shape[0], npp, ps, *rows.shape[2:])
+        return pages.at[pt_rows[:, :npp]].set(rows.astype(pages.dtype))
+
+    return MLACache(s(cache.c_kv, src.c_kv), s(cache.k_rope, src.k_rope))
+
+
 _NEG_INF = -1e30
 
 

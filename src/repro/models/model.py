@@ -116,10 +116,182 @@ def cache_slot_insert(cfg: ModelConfig, pool: dict, src: dict,
         pool, src)
 
 
+def cache_expand_rows(cfg: ModelConfig, cache: dict, inv: jnp.ndarray) -> dict:
+    """Gather batch rows ``inv`` of every layer cache — (G_unique, …) →
+    (G, …).  Used by the admission dedupe: a group's unique prompts prefill
+    once and the filled rows are expanded back to one per request.  Goes
+    through ``_map_layer_caches`` because the batch axis sits behind the
+    scanned ``n_periods`` axis on period leaves."""
+    return _map_layer_caches(
+        cfg,
+        lambda kind, c: (None if c is None
+                         else jax.tree.map(lambda x: x[inv], c)),
+        cache)
+
+
 def cache_slot_reset(cfg: ModelConfig, pool: dict, slots: jnp.ndarray) -> dict:
     """Zero pool ``slots`` — bitwise identical to freshly initialized rows."""
     return _map_layer_caches(
         cfg, lambda kind, c: blocks.slot_reset_cache(kind, c, slots), pool)
+
+
+# --------------------------------------------------------------------------
+# paged decode cache (DESIGN.md §13)
+#
+# The paged pool is a *split* pair of trees with the same layer structure as
+# ``init_decode_cache``:
+#
+# * ``pages``  — (num_pages, page_size, …) arenas for layers whose cache has
+#   a sequence axis (attention/MLA); None at recurrent/cacheless positions.
+# * ``state``  — plain (n_slots, …) rows for recurrent layers (mamba/RWKV);
+#   None at paged/cacheless positions.
+#
+# A decode tick gathers per-slot views from ``pages`` through the page
+# table, merges in ``state`` (pure host-side structure surgery — no copies),
+# runs the SAME compiled decode step as the contiguous engine on the merged
+# tree, then commits the written position back to ``pages`` and re-extracts
+# ``state``.  The split exists because decode donates its cache argument:
+# recurrent leaves passed through a gather jit unchanged would alias the
+# pool's buffers, and donation would free them under it.
+# --------------------------------------------------------------------------
+
+_RECURRENT_KINDS = ("mamba", "rwkv")
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> dict:
+    """Page-arena tree: one (num_pages, page_size, …) arena per paged layer
+    (scanned periods carry the usual leading ``n_periods`` axis); a single
+    page id addresses the same physical page in every arena."""
+    cache: dict = {}
+    if cfg.n_dense_prologue:
+        cache["prologue"] = [
+            blocks.init_paged_layer_cache(cfg, cfg.pattern[0], num_pages,
+                                          page_size)
+            for _ in range(cfg.n_dense_prologue)
+        ]
+    periods = {}
+    for j, kind in enumerate(cfg.pattern):
+        one = blocks.init_paged_layer_cache(cfg, kind, num_pages, page_size)
+        periods[f"pos{j}"] = (
+            None if one is None
+            else jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_periods, *x.shape)).copy(), one)
+        )
+    cache["periods"] = periods
+    return cache
+
+
+def init_paged_state(cfg: ModelConfig, n_slots: int) -> dict:
+    """Recurrent-state tree: (n_slots, …) rows for mamba/RWKV layers only."""
+    cache: dict = {}
+    if cfg.n_dense_prologue:
+        cache["prologue"] = [
+            blocks.init_paged_state_cache(cfg, cfg.pattern[0], n_slots)
+            for _ in range(cfg.n_dense_prologue)
+        ]
+    periods = {}
+    for j, kind in enumerate(cfg.pattern):
+        one = blocks.init_paged_state_cache(cfg, kind, n_slots)
+        periods[f"pos{j}"] = (
+            None if one is None
+            else jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_periods, *x.shape)).copy(), one)
+        )
+    cache["periods"] = periods
+    return cache
+
+
+def paged_gather_cache(cfg: ModelConfig, pages: dict, pt: jnp.ndarray,
+                       max_seq: int) -> dict:
+    """Gather per-slot contiguous views from every page arena (unmapped
+    table entries read the reserved zero page → fresh-cache bytes)."""
+    return _map_layer_caches(
+        cfg,
+        lambda kind, c: blocks.paged_view_cache(cfg, kind, c, pt, max_seq),
+        pages)
+
+
+def paged_commit_cache(cfg: ModelConfig, pages: dict, view: dict,
+                       pt: jnp.ndarray, pos: jnp.ndarray,
+                       max_seq: int) -> dict:
+    """Scatter the position each active slot just wrote in ``view`` back
+    into the arenas (ring-adjusted per layer family)."""
+    return _map_layer_caches(
+        cfg,
+        lambda kind, c, v: blocks.paged_commit_cache(cfg, kind, c, v, pt,
+                                                     pos, max_seq),
+        pages, view)
+
+
+def paged_insert_cache(cfg: ModelConfig, pages: dict, src: dict,
+                       pt_rows: jnp.ndarray) -> dict:
+    """Scatter freshly prefilled cache rows into newly mapped pages
+    (``src`` is the same tree ``cache_slot_insert`` takes)."""
+    return _map_layer_caches(
+        cfg,
+        lambda kind, c, s: blocks.paged_insert_cache(kind, c, s, pt_rows),
+        pages, src)
+
+
+def paged_copy_pages(cfg: ModelConfig, pages: dict, src_ids: jnp.ndarray,
+                     dst_ids: jnp.ndarray) -> dict:
+    """Copy whole pages across every arena (COW fork).  Padding the id
+    vectors with (0, 0) makes the batch shape static — copying the zero
+    page onto itself is a no-op."""
+    return _map_layer_caches(
+        cfg,
+        lambda kind, c: blocks.paged_copy_pages(kind, c, src_ids, dst_ids),
+        pages)
+
+
+def merge_paged_view(cfg: ModelConfig, view: dict, state: dict) -> dict:
+    """Splice gathered paged views and recurrent state rows into one full
+    cache tree (host-side structure surgery — the merged tree references
+    the same buffers, byte-equal to the contiguous engine's pool)."""
+    out: dict = {}
+    if "prologue" in view:
+        out["prologue"] = [
+            v if v is not None else s
+            for v, s in zip(view["prologue"], state["prologue"])
+        ]
+    out["periods"] = {
+        key: (v if v is not None else state["periods"][key])
+        for key, v in view["periods"].items()
+    }
+    return out
+
+
+def extract_paged_state(cfg: ModelConfig, cache: dict) -> dict:
+    """Select the recurrent-state half of a full cache tree (pure structural
+    selection — no copies; the leaves stay the decode step's outputs)."""
+    out: dict = {}
+    if "prologue" in cache:
+        keep = cfg.pattern[0] in _RECURRENT_KINDS
+        out["prologue"] = [c if keep else None for c in cache["prologue"]]
+    out["periods"] = {
+        f"pos{j}": (cache["periods"][f"pos{j}"]
+                    if kind in _RECURRENT_KINDS else None)
+        for j, kind in enumerate(cfg.pattern)
+    }
+    return out
+
+
+def extract_state_rows(cfg: ModelConfig, cache: dict, row: int) -> dict:
+    """Slice one batch row of the recurrent leaves of a freshly prefilled
+    cache — the constant-size state a prefix-cache entry stores."""
+    state = extract_paged_state(cfg, cache)
+    out: dict = {}
+    if "prologue" in state:
+        out["prologue"] = [
+            None if c is None else jax.tree.map(lambda x: x[row:row + 1], c)
+            for c in state["prologue"]
+        ]
+    out["periods"] = {
+        key: (None if c is None
+              else jax.tree.map(lambda x: x[:, row:row + 1], c))
+        for key, c in state["periods"].items()
+    }
+    return out
 
 
 def mask_cache_update(cfg: ModelConfig, old: dict, new: dict,

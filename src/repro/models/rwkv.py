@@ -87,6 +87,14 @@ def slot_reset(cache: RWKVCache, slots: jnp.ndarray) -> RWKVCache:
                      cache.state.at[slots].set(0))
 
 
+# Paged serving (DESIGN.md §13): RWKV state is per-slot constant-size (no
+# sequence axis), so it is never paged — it stays in the *state* half of
+# the split paged pool under the ordinary slot ops and joins prefix caching
+# through state-row extraction.
+paged_slot_insert = slot_insert
+paged_slot_reset = slot_reset
+
+
 def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
     """Shift sequence right by one; position 0 sees ``prev`` (or zeros)."""
     first = (prev[:, None, :] if prev is not None

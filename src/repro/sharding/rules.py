@@ -426,3 +426,60 @@ def cache_shardings(cache, mesh: Mesh, batch_size: Optional[int] = None):
         return leaf_spec("other", node.shape, scanned)
 
     return rec(cache, False)
+
+
+def page_pool_shardings(pages, mesh: Mesh):
+    """Sharding for the paged-cache arena tree (DESIGN.md §13).
+
+    Args:
+      pages: a page-arena pytree (``models.model.init_paged_cache`` or an
+        abstract ``eval_shape`` of one) — attention/MLA leaves shaped
+        ``(num_pages, page_size, …)``, None at recurrent/cacheless layers.
+      mesh: target mesh.
+
+    Returns:
+      A pytree of ``NamedSharding`` mirroring ``pages`` (None preserved).
+
+    Feature dims shard over ``model`` exactly as the contiguous
+    ``cache_shardings`` leaves do (kv heads / head_dim, latent rank), so the
+    gathered per-slot view lands in the same layout the decode step
+    constrains its cache to.  The page and in-page axes are replicated: page
+    ids are host-chosen and non-contiguous, so a sharded page axis would
+    turn every gather/commit into cross-device traffic.  Scanned periods
+    carry the usual leading ``n_periods`` axis (skipped).
+    """
+    from repro.models.attention import KVCache
+    from repro.models.mla import MLACache
+
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = axes.get("model", 1)
+
+    def leaf_spec(kind_field, shape, scanned):
+        dims = shape[1:] if scanned else shape
+        if kind_field == "kv":          # (N, ps, kv, dh)
+            if dims[2] % msize == 0:
+                spec = P(None, None, "model", None)
+            else:
+                spec = P(None, None, None, "model")
+        else:                           # mla: (N, ps, r)
+            spec = P(None, None, "model")
+        if scanned:
+            spec = P(None, *spec)
+        return NamedSharding(mesh, _fit_spec(spec, shape, mesh))
+
+    def rec(node, scanned):
+        if node is None:
+            return None
+        if isinstance(node, KVCache):
+            return KVCache(leaf_spec("kv", node.k.shape, scanned),
+                           leaf_spec("kv", node.v.shape, scanned))
+        if isinstance(node, MLACache):
+            return MLACache(leaf_spec("mla", node.c_kv.shape, scanned),
+                            leaf_spec("mla", node.k_rope.shape, scanned))
+        if isinstance(node, dict):
+            return {k: rec(v, scanned or k == "periods") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v, scanned) for v in node)
+        raise TypeError(f"unexpected paged-arena leaf {type(node)}")
+
+    return rec(pages, False)

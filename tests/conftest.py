@@ -9,3 +9,16 @@ jax.config.update("jax_platform_name", "cpu")
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_compile_cache():
+    """Free compiled executables at module boundaries.
+
+    The suite compiles hundreds of distinct serving executables in one
+    process; letting them all accumulate can segfault the CPU backend's
+    JIT inside a late `backend_compile`.  Memoized callables
+    (`jitted_serve_fns` etc.) stay valid — they just recompile on next
+    use."""
+    yield
+    jax.clear_caches()

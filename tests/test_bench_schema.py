@@ -23,11 +23,50 @@ _SERVE = _ROOT / "BENCH_sketch_serve.json"
 
 
 def test_committed_artifacts_validate(capsys):
-    """The checked-in artifacts match the current schema (v5: quant_curve
-    accuracy-vs-bits section + dtype-aware bytes fields)."""
+    """The checked-in artifacts match the current schema (v6: heavy_tail
+    paged-vs-contiguous section with latency percentiles + paging
+    counters)."""
     assert main([str(_ENGINE), str(_SERVE)]) == 0
     out = capsys.readouterr().out
     assert out.count(f"valid (schema v{SCHEMA_VERSION})") == 2
+
+
+def test_engine_artifact_heavy_tail_is_real_measurement():
+    """The committed heavy-tail section demonstrates the paging win, not a
+    placeholder: Zipf reuse drove the hit rate past 0.5, the paged run
+    prefilled strictly less than the contiguous one at equal (bitwise)
+    output, and the latency percentiles are ordered."""
+    ht = json.loads(_ENGINE.read_text())["heavy_tail"]
+    assert ht["requests"] >= 1000
+    assert ht["outputs_match"] is True
+    assert ht["prefix_hit_rate"] > 0.5
+    assert ht["prefill_batches"] < ht["prefill_batches_contiguous"]
+    assert ht["pages_in_use_peak"] > 0
+    assert 0 < ht["latency_ticks_p50"] <= ht["latency_ticks_p99"]
+    for mode in ("contiguous", "paged"):
+        assert ht[mode]["tokens_per_s_per_slot"] > 0
+
+
+def test_heavy_tail_validation_catches_divergence_and_regression(tmp_path):
+    """Schema v6 gates: a heavy_tail section claiming diverged outputs or
+    more paged prefills than contiguous is rejected."""
+    record = json.loads(_ENGINE.read_text())
+    record["heavy_tail"]["outputs_match"] = False
+    with pytest.raises(ValueError, match="outputs_match"):
+        validate_engine_record(record)
+    record = json.loads(_ENGINE.read_text())
+    record["heavy_tail"]["prefill_batches"] = (
+        record["heavy_tail"]["prefill_batches_contiguous"] + 1)
+    with pytest.raises(ValueError, match="prefill_batches"):
+        validate_engine_record(record)
+    record = json.loads(_ENGINE.read_text())
+    record["heavy_tail"]["prefix_hit_rate"] = 1.2
+    with pytest.raises(ValueError, match="prefix_hit_rate"):
+        validate_engine_record(record)
+    record = json.loads(_ENGINE.read_text())
+    del record["heavy_tail"]
+    with pytest.raises(ValueError, match="heavy_tail"):
+        validate_engine_record(record)
 
 
 def test_engine_artifact_has_nonzero_acceptance():

@@ -1,0 +1,250 @@
+"""Paged decode-cache pool + prefix cache: bitwise parity and page hygiene.
+
+The acceptance bar of the paging subsystem (launch/paging.py, DESIGN.md
+§13): the paged engine — page-table gather → the *same* compiled decode
+step as the contiguous engine → page commit — must emit token streams
+bitwise identical to the contiguous slot pool on the same trace, across
+cache families (SWA ring + global attention, mamba hybrid, rwkv), heads
+(dense and fused sketch), and sampling (greedy and seeded), while the
+prefix cache actually skips repeated prompts' prefills and COW actually
+forks shared pages on first divergent write.  Page hygiene is pinned at
+the device level: the reserved zero page reads zero after arbitrary
+traffic, and inserting one slot's pages leaves every other page bitwise
+frozen.  Host-side allocator/refcount invariants live in
+tests/test_paging_properties.py (hypothesis).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Sampler, SketchHead, SketchHeadConfig
+from repro.configs import get_config
+from repro.core.sketch_lm_head import freeze_head
+from repro.launch.engine import make_engine
+from repro.models.model import (init_decode_cache, init_model,
+                                init_paged_cache, paged_gather_cache,
+                                paged_insert_cache)
+
+_ARCHS = ["gemma2-27b", "jamba-v0.1-52b", "rwkv6-1.6b"]
+
+_HEAD_CFG = SketchHeadConfig(n_rows=32, n_buckets=8, k=1, proj_dim=16,
+                             bandwidth=2.0)
+
+
+@pytest.fixture(scope="module", params=_ARCHS)
+def served(request):
+    cfg = get_config(request.param, smoke=True)
+    return cfg, init_model(jax.random.PRNGKey(0), cfg)
+
+
+def _sketch_head(cfg):
+    kp, ka, kj, kf = jax.random.split(jax.random.PRNGKey(42), 4)
+    kparams = {
+        "points": jax.random.normal(kp, (128, _HEAD_CFG.proj_dim)),
+        "alphas": jax.random.normal(ka, (128, cfg.vocab_size)) * 0.01,
+        "proj": jax.random.normal(kj, (cfg.d_model, _HEAD_CFG.proj_dim))
+        / np.sqrt(cfg.d_model),
+    }
+    return SketchHead(cfg=_HEAD_CFG, backend="fused",
+                      params=freeze_head(kf, kparams, _HEAD_CFG))
+
+
+def _serve_both(params, cfg, reqs, *, head=None, sampler=None, n_slots=4,
+                max_seq=32, page_size=4):
+    """The same trace through the contiguous and the paged engine; returns
+    ``(outputs_contiguous, outputs_paged, engine_paged)``."""
+    outs = []
+    engines = []
+    for paged in (False, True):
+        engine = make_engine(params, cfg, n_slots=n_slots, max_seq=max_seq,
+                             head=head, sampler=sampler, paged=paged,
+                             page_size=page_size)
+        for rid, (prompt, gen, arrival) in enumerate(reqs):
+            engine.submit(prompt, gen, arrival=arrival, rid=rid)
+        outs.append(engine.run())
+        engines.append(engine)
+    return outs[0], outs[1], engines[1]
+
+
+def _unique_reqs(cfg, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, cfg.vocab_size, rng.integers(4, 12),
+                          dtype=np.int32),
+             int(rng.integers(2, 7)), i // 2) for i in range(n)]
+
+
+def _zipf_reqs(cfg, n=12, seed=1):
+    """Repeated-prompt mix: 4 base prompts reused across the stream."""
+    rng = np.random.default_rng(seed)
+    base = [rng.integers(1, cfg.vocab_size, plen, dtype=np.int32)
+            for plen in (5, 9, 5, 13)]
+    return [(base[int(rng.integers(0, len(base)))],
+             int(rng.integers(2, 7)), i // 3) for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# bitwise parity
+# --------------------------------------------------------------------------
+
+def test_paged_matches_contiguous_seeded_unique_prompts(served):
+    """Unique prompts (no prefix hits), seeded sampling: the gathered page
+    view must be byte-identical to the contiguous cache, so the streams
+    and the key chain replay bitwise."""
+    cfg, params = served
+    contiguous, paged, engine = _serve_both(
+        params, cfg, _unique_reqs(cfg),
+        sampler=Sampler(temperature=1.0, top_k=8, seed=7))
+    assert contiguous == paged
+    assert engine.stats["prefix_hits"] == 0
+
+
+def test_paged_matches_contiguous_seeded_repeated_prompts(served):
+    """Zipf-style repeats, seeded: prefix hits replay the stored first
+    logits and shared pages; the streams still match the contiguous
+    engine's bitwise, and prefills actually drop."""
+    cfg, params = served
+    contiguous, paged, engine = _serve_both(
+        params, cfg, _zipf_reqs(cfg),
+        sampler=Sampler(temperature=1.0, seed=3))
+    assert contiguous == paged
+    assert engine.stats["prefix_hits"] > 0
+
+
+def test_paged_prefix_cache_skips_prefills_greedy(served):
+    """Greedy on the repeated-prompt mix: hit rate is real, the paged run
+    prefills strictly less, and (for attention families) first divergent
+    decode writes triggered COW page copies."""
+    cfg, params = served
+    reqs = _zipf_reqs(cfg)
+    outs = {}
+    stats = {}
+    for paged in (False, True):
+        engine = make_engine(params, cfg, n_slots=4, max_seq=32,
+                             paged=paged, page_size=4)
+        for rid, (p, g, a) in enumerate(reqs):
+            engine.submit(p, g, arrival=a, rid=rid)
+        outs[paged] = engine.run()
+        stats[paged] = dict(engine.stats)
+    assert outs[False] == outs[True]
+    assert stats[True]["prefix_hits"] > 0
+    assert stats[True]["prefill_batches"] < stats[False]["prefill_batches"]
+    if any(k not in ("mamba", "rwkv", "xattn") for k in cfg.pattern):
+        # Shared prefix pages must be copied before the first divergent
+        # decode write lands (recurrent-only archs have no paged arena).
+        assert stats[True]["cow_copies"] > 0
+
+
+def test_paged_matches_contiguous_sketch_fused_head():
+    cfg = get_config("gemma2-27b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    contiguous, paged, engine = _serve_both(
+        params, cfg, _zipf_reqs(cfg), head=_sketch_head(cfg),
+        sampler=Sampler(temperature=1.0, seed=11))
+    assert contiguous == paged
+    assert engine.stats["prefix_hits"] > 0
+
+
+def test_dedupe_identical_prompts_in_one_admission_batch(served):
+    """Same-batch duplicate prompts bulk-prefill once on the *non-paged*
+    path too, and every copy still gets the right stream (greedy: all
+    duplicates emit identical tokens)."""
+    cfg, params = served
+    rng = np.random.default_rng(5)
+    shared = rng.integers(1, cfg.vocab_size, 6, dtype=np.int32)
+    other = rng.integers(1, cfg.vocab_size, 6, dtype=np.int32)
+    engine = make_engine(params, cfg, n_slots=4, max_seq=16)
+    rids = [engine.submit(p, 4, arrival=0)
+            for p in (shared, shared, other, shared)]
+    out = engine.run()
+    assert engine.stats["dedup_saved"] == 2
+    assert engine.stats["prefill_batches"] == 1
+    assert out[rids[0]] == out[rids[1]] == out[rids[3]]
+    solo = make_engine(params, cfg, n_slots=4, max_seq=16)
+    rid = solo.submit(shared, 4)
+    assert solo.run()[rid] == out[rids[0]]
+
+
+# --------------------------------------------------------------------------
+# page hygiene (device level)
+# --------------------------------------------------------------------------
+
+def test_zero_page_reads_zero_after_traffic():
+    """After a full serving run — allocs, COW copies, recycled dirty pages
+    — a gather through an all-zero (unmapped) page table still reads
+    exactly zeros: the reserved page 0 was never written."""
+    cfg = get_config("gemma2-27b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    engine = make_engine(params, cfg, n_slots=4, max_seq=32, paged=True,
+                         page_size=4)
+    for rid, (p, g, a) in enumerate(_zipf_reqs(cfg)):
+        engine.submit(p, g, arrival=a, rid=rid)
+    engine.run()
+    unmapped = jnp.zeros_like(jnp.asarray(engine.page_pool.table))
+    view = paged_gather_cache(cfg, engine.pages, unmapped, engine.max_seq)
+    for leaf in jax.tree_util.tree_leaves(view):
+        assert not np.asarray(leaf).any()
+
+
+def test_paged_insert_freezes_unrelated_pages():
+    """Inserting one slot's prefilled rows touches exactly that slot's
+    pages: every other page of the arena stays bitwise frozen."""
+    cfg = get_config("gemma2-27b", smoke=True)
+    page_size, num_pages, size = 4, 9, 8
+    pages = init_paged_cache(cfg, num_pages, page_size)
+    # Pre-stamp the whole arena with noise so "frozen" is a real check.
+    pages = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(1), x.shape,
+                                    x.dtype), pages)
+    src = init_decode_cache(cfg, 1, size)
+    src = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(2), x.shape,
+                                    x.dtype), src)
+    npp = size // page_size
+    pt_rows = jnp.asarray([[1, 2]], jnp.int32)       # slot maps pages 1, 2
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), pages)
+    after = paged_insert_cache(cfg, pages, src, pt_rows)
+    changed = {1, 2}
+    for b, a in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(after)):
+        b, a = np.asarray(b), np.asarray(a)
+        # Page axis is 0 for prologue leaves, 1 for scanned-period leaves
+        # (leading n_periods axis); both shapes carry num_pages there.
+        axis = 0 if b.shape[0] == num_pages else 1
+        for pid in range(num_pages):
+            sl = (pid,) if axis == 0 else (slice(None), pid)
+            if pid in changed:
+                continue
+            np.testing.assert_array_equal(a[sl], b[sl],
+                                          err_msg=f"page {pid} mutated")
+
+
+# --------------------------------------------------------------------------
+# configuration errors + pool exhaustion
+# --------------------------------------------------------------------------
+
+def test_paged_excludes_megastep_and_spec_decode():
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="paged"):
+        make_engine(params, cfg, n_slots=2, max_seq=16, paged=True,
+                    decode_chunk=4)
+    with pytest.raises(ValueError, match="paged"):
+        make_engine(params, cfg, n_slots=2, max_seq=16, paged=True,
+                    spec_decode=2)
+
+
+def test_page_pool_exhaustion_raises():
+    """A pool sized below the working set fails loudly (after LRU eviction
+    cannot reclaim anything) instead of corrupting shared pages."""
+    cfg = get_config("gemma2-27b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    engine = make_engine(params, cfg, n_slots=2, max_seq=16, paged=True,
+                        page_size=4, num_pages=3)
+    rng = np.random.default_rng(9)
+    for i in range(2):
+        engine.submit(rng.integers(1, cfg.vocab_size, 8, dtype=np.int32),
+                      4, rid=i)
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        engine.run()

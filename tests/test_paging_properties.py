@@ -1,0 +1,221 @@
+"""Property-based invariants for the paged-pool host bookkeeping.
+
+``PagePool``/``PrefixCache`` (launch/paging.py) are pure numpy/stdlib, so
+random operation sequences — admit-with-miss (alloc + register), admit-
+with-hit (shared mapping), COW remap, retire, LRU eviction — drive them at
+hypothesis speed with no device state.  Invariants after every step:
+
+* refcounts equal live references (page-table entries + prefix-cache entry
+  references), checked exhaustively by ``check_invariants``;
+* a page returns to the free list exactly when its refcount hits 0, and is
+  handed out again only from there (no use-after-free, no double-free —
+  ``decref`` of a free page asserts);
+* the zero page is never allocated, never freed, never remapped;
+* allocation order is deterministic: replaying the same op sequence yields
+  the same page ids;
+* writes through one slot's table (simulated on a numpy arena the way the
+  device commit indexes pages) leave every page referenced by *other* slots
+  or prefix entries bitwise frozen — the COW discipline's contract.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: property tests are skipped without hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.launch.paging import ZERO_PAGE, PagePool, PrefixCache
+
+_SMALL = settings(max_examples=60, deadline=None)
+
+
+class _Harness:
+    """Random-op driver with a shadow model + numpy arena.
+
+    The arena stands in for the device page buffers: page 0 stays zero,
+    every write goes through a slot's table exactly like the device commit
+    (``pages[table[slot, j]]``), and COW runs the engine's discipline —
+    copy the page when its refcount exceeds 1, then write the copy.
+    """
+
+    def __init__(self, num_pages, n_slots, pages_per_slot, page_size=4):
+        self.pool = PagePool(num_pages, n_slots, pages_per_slot)
+        self.prefix = PrefixCache(self.pool)
+        self.arena = np.zeros((num_pages, page_size), np.int64)
+        self.live = {}          # slot -> key it serves (miss slots: None)
+        self.n_slots = n_slots
+        self.npp = pages_per_slot
+        self.alloc_log = []
+        self.stamp = 0
+
+    def _alloc(self, n):
+        ids = self.pool.alloc(n)
+        while ids is None and self.prefix.evict_lru():
+            ids = self.pool.alloc(n)
+        if ids is not None:
+            self.alloc_log.extend(ids)
+        return ids
+
+    def admit_miss(self, slot, n_pages, key, register):
+        ids = self._alloc(n_pages)
+        if ids is None:
+            return
+        self.pool.map_slot(slot, ids, owned=True)
+        self.stamp += 1
+        for pid in ids:
+            self.arena[pid] = self.stamp      # "prefill" content
+        if register and key not in self.prefix:
+            self.prefix.register(key, ids, None, np.zeros(3), n_pages)
+        self.live[slot] = key
+
+    def admit_hit(self, slot, key):
+        entry = self.prefix.get(key)
+        if entry is None:
+            return
+        self.pool.map_slot(slot, entry.page_ids, owned=False)
+        self.live[slot] = key
+
+    def write(self, slot, j):
+        """Decode write through the table at index ``j``, COW first."""
+        pid = int(self.pool.table[slot, j])
+        if pid == ZERO_PAGE:
+            ids = self._alloc(1)
+            if ids is None:
+                return
+            self.pool.map_index(slot, j, ids[0])
+            pid = ids[0]
+        elif self.pool.refcount[pid] > 1:
+            ids = self._alloc(1)
+            if ids is None:
+                return
+            self.arena[ids[0]] = self.arena[pid]
+            self.pool.remap(slot, j, ids[0])
+            pid = ids[0]
+        self.stamp += 1
+        self.arena[pid, self.stamp % self.arena.shape[1]] = self.stamp
+
+    def retire(self, slot):
+        self.pool.clear_slot(slot)
+        self.live.pop(slot, None)
+
+    def check(self):
+        self.pool.check_invariants(self.prefix.external_refs())
+        assert (self.arena[ZERO_PAGE] == 0).all(), "zero page written"
+        # Every refcount-0 page is on the free list and vice versa is part
+        # of check_invariants; here: no table row maps a freed page.
+        for pid in self.pool.table.ravel():
+            if pid != ZERO_PAGE:
+                assert self.pool.refcount[pid] > 0
+
+
+def _run_ops(ops, num_pages, n_slots, npp):
+    h = _Harness(num_pages, n_slots, npp)
+    for kind, a, b, c in ops:
+        slot = a % n_slots
+        if kind == 0:
+            if slot not in h.live and not h.pool.table[slot].any():
+                h.admit_miss(slot, 1 + b % npp, bytes([c % 5]), c % 2 == 0)
+        elif kind == 1:
+            if slot not in h.live and not h.pool.table[slot].any():
+                h.admit_hit(slot, bytes([c % 5]))
+        elif kind == 2:
+            if slot in h.live:
+                h.write(slot, b % npp)
+        elif kind == 3:
+            if slot in h.live:
+                h.retire(slot)
+        elif kind == 4:
+            h.prefix.evict_lru()
+        h.check()
+    return h
+
+
+_OPS = st.lists(
+    st.tuples(st.integers(0, 4), st.integers(0, 7), st.integers(0, 7),
+              st.integers(0, 9)),
+    min_size=1, max_size=60)
+
+
+@_SMALL
+@given(ops=_OPS)
+def test_refcounts_track_live_references(ops):
+    """After every op: refcount == table refs + entry refs, free list holds
+    exactly the refcount-0 pages, zero page untouched (checked in-loop)."""
+    h = _run_ops(ops, num_pages=24, n_slots=4, npp=4)
+    # Drain everything: all pages must come home.
+    for slot in list(h.live):
+        h.retire(slot)
+    while h.prefix.evict_lru():
+        pass
+    h.check()
+    assert h.pool.pages_in_use == 0
+    assert h.pool.n_free == h.pool.num_pages - 1
+
+
+@_SMALL
+@given(ops=_OPS)
+def test_allocation_is_deterministic(ops):
+    """The same op sequence replays to the same page ids — serving runs
+    are bitwise reproducible at the allocator level."""
+    a = _run_ops(ops, num_pages=24, n_slots=4, npp=4)
+    b = _run_ops(ops, num_pages=24, n_slots=4, npp=4)
+    assert a.alloc_log == b.alloc_log
+    assert (a.pool.table == b.pool.table).all()
+    assert (a.arena == b.arena).all()
+
+
+@_SMALL
+@given(ops=_OPS, victim=st.integers(0, 3))
+def test_slot_ops_freeze_other_slots_pages(ops, victim):
+    """Writing through / retiring one slot never mutates a page that other
+    slots or prefix entries still reference (the COW contract)."""
+    h = _run_ops(ops, num_pages=32, n_slots=4, npp=4)
+    others = {}
+    for slot in range(h.n_slots):
+        if slot == victim:
+            continue
+        for pid in h.pool.slot_pages(slot):
+            others[pid] = h.arena[pid].copy()
+    for entry in h.prefix._entries.values():
+        for pid in entry.page_ids:
+            others[pid] = h.arena[pid].copy()
+    if victim in h.live:
+        for j in range(h.npp):
+            h.write(victim, j)
+        h.check()
+        h.retire(victim)
+        h.check()
+    # Pages the victim shared were COW'd before its writes landed; pages it
+    # owned outright are not in `others`.  Shared + entry pages: frozen.
+    for pid, before in others.items():
+        assert (h.arena[pid] == before).all(), f"page {pid} mutated"
+
+
+def test_double_free_asserts():
+    pool = PagePool(8, 2, 2)
+    (pid,) = pool.alloc(1)
+    pool.decref(pid)
+    with pytest.raises(AssertionError, match="double free"):
+        pool.decref(pid)
+
+
+def test_freed_page_reused_only_after_zero_refcount():
+    pool = PagePool(4, 2, 2)          # 3 usable pages
+    ids = pool.alloc(3)
+    assert pool.alloc(1) is None      # pool dry while all referenced
+    pool.incref(ids[0])
+    pool.decref(ids[0])
+    assert pool.alloc(1) is None      # still referenced once
+    pool.decref(ids[0])
+    assert pool.alloc(1) == [ids[0]]  # back only after refcount hit 0
+
+
+def test_zero_page_is_pinned():
+    pool = PagePool(4, 1, 2)
+    with pytest.raises(AssertionError):
+        pool.decref(ZERO_PAGE)
+    with pytest.raises(AssertionError):
+        pool.incref(ZERO_PAGE)
+    assert ZERO_PAGE not in pool._free

@@ -148,6 +148,35 @@ def test_engine_staggered_matches_solo_on_mesh(served, mesh):
                                       solo[0, len(prompt):])
 
 
+@pytest.mark.parametrize("kind", ["dense", "sketch-fused"])
+def test_paged_engine_matches_contiguous_on_mesh(served, mesh, kind):
+    """Paged serving ON the mesh (DESIGN.md §13): the page pool keeps the
+    PR-4 cache sharding constraints (head/latent dims over ``model``, page
+    and in-page axes replicated), so the gathered view feeds the same
+    sharded decode executable and the streams — seeded, with prefix hits
+    and COW traffic — replay the contiguous engine's bitwise."""
+    cfg, params, head_params = served
+    head = _heads(head_params)[kind]
+    lm = (LM(params, cfg) if head is None
+          else LM(params, cfg, head)).with_mesh(mesh)
+    rng = np.random.default_rng(4)
+    base = [rng.integers(0, cfg.vocab_size, plen, dtype=np.int32)
+            for plen in (5, 9, 5, 13)]
+    reqs = [(base[int(rng.integers(0, len(base)))],
+             int(rng.integers(2, 7)), i // 3) for i in range(12)]
+    sampler = Sampler(temperature=1.0, seed=7)
+    outs = {}
+    for paged in (False, True):
+        engine = lm.engine(4, 32, sampler=sampler, paged=paged,
+                           page_size=4)
+        for rid, (prompt, gen, arrival) in enumerate(reqs):
+            engine.submit(prompt, gen, arrival=arrival, rid=rid)
+        outs[paged] = engine.run()
+        if paged:
+            assert engine.stats["prefix_hits"] > 0
+    assert outs[False] == outs[True]
+
+
 @pytest.mark.parametrize("kind", ["sketch-ref", "sketch-fused"])
 def test_spec_decode_matches_dense_on_mesh(served, mesh, kind):
     """Speculative self-decode ON the mesh (DESIGN.md §11): drafts run the
