@@ -22,9 +22,12 @@ serves it three ways —
 then the speculative self-decode draft length (``--spec-decode`` Ks;
 DESIGN.md §11) with a *distilled* sketch head drafting and the dense head
 verifying — against a ``dense_megastep`` baseline (DenseHead,
-``decode_chunk=K``) at the same Ks — and emits ``BENCH_engine.json``
-(schema v6: the ``heavy_tail`` section carries the p50/p99 latency and
-paging fields) at the repo root.  The static/engine/megastep/spec sweeps
+``decode_chunk=K``) at the same Ks — then a per-tenant serving section
+(``--tenants`` tenants, Zipf-weighted, paged through an LRU ``HeadCache``
+smaller than the tenant population; DESIGN.md §14) — and emits
+``BENCH_engine.json`` (schema v7: the ``heavy_tail`` section carries the
+p50/p99 latency and paging fields, the ``tenants`` section the head-cache
+hit/miss/load/eviction counters) at the repo root.  The static/engine/megastep/spec sweeps
 pin the trace's prompt length (static batching must stack prompts) and
 ignore arrivals (throughput protocol); the heavy_tail section is the
 latency protocol.  Decode uses the fused sketch head (the serving hot
@@ -117,6 +120,70 @@ def _distill_spec_head(params, cfg, reqs, gen_long, backend,
     return SketchHead(cfg=head_cfg, backend=backend,
                       params=freeze_head(jax.random.PRNGKey(13), kparams,
                                          head_cfg))
+
+
+def _make_tenant_heads(cfg, n_tenants: int, backend: str = "fused"):
+    """Per-tenant sketch banks sharing one spec (DESIGN.md §14).
+
+    Every tenant freezes the *same* kernel params with its own PRNG key —
+    the production shape (one distilled spec, per-tenant count arrays from
+    per-tenant streams) without paying ``n_tenants`` distillations in a
+    benchmark that only measures serving cost.  Returns the shared spec
+    head plus the ``{tenant_id: params}`` archive the ``HeadCache`` loader
+    pages from.
+    """
+    spec = _make_head(cfg, backend)
+    head_cfg = spec.cfg
+    key = jax.random.PRNGKey(0)
+    kparams = {
+        "points": jax.random.normal(key, (128, head_cfg.proj_dim)),
+        "alphas": jax.random.normal(key, (128, cfg.vocab_size)) * 0.01,
+        "proj": jax.random.normal(key, (cfg.d_model, head_cfg.proj_dim))
+        / np.sqrt(cfg.d_model),
+    }
+    archive = {f"tenant-{t}": freeze_head(jax.random.PRNGKey(100 + t),
+                                          kparams, head_cfg)
+               for t in range(n_tenants)}
+    return spec, archive
+
+
+def _run_tenants(params, cfg, reqs, n_slots, max_seq, n_tenants,
+                 backend="fused", mesh=None, seed=7, zipf_a=1.1):
+    """The request stream fanned across ``n_tenants`` tenants (Zipf mix)
+    through a per-tenant engine whose ``HeadCache`` holds fewer banks than
+    the tenant population — so the run exercises load, hit, LRU eviction
+    AND reload, not just the steady state."""
+    from repro.api import HeadCache
+
+    spec, archive = _make_tenant_heads(cfg, n_tenants, backend)
+    capacity = max(1, min(n_tenants, n_slots))
+    rng = np.random.default_rng(seed)
+    weights = 1.0 / np.arange(1, n_tenants + 1) ** zipf_a
+    weights /= weights.sum()
+    tenants = [f"tenant-{int(rng.choice(n_tenants, p=weights))}"
+               for _ in reqs]
+
+    def _one_pass():
+        cache = HeadCache(archive.__getitem__, capacity=capacity)
+        engine = make_engine(params, cfg, n_slots=n_slots, max_seq=max_seq,
+                             head=spec, mesh=mesh, head_cache=cache)
+        for (prompt, gen), tenant in zip(reqs, tenants):
+            engine.submit(prompt, gen, tenant=tenant)
+        t0 = time.perf_counter()
+        finished = engine.run()
+        dur = time.perf_counter() - t0
+        return cache, dur, sum(len(v) for v in finished.values())
+
+    _one_pass()                                        # warm the compile
+    cache, dur, tokens = _one_pass()
+    stats = dict(cache.stats)
+    queries = stats["hits"] + stats["misses"]
+    return {
+        "requests": len(reqs), "n_tenants": n_tenants,
+        "capacity": capacity, **stats,
+        "hit_rate": stats["hits"] / queries if queries else 0.0,
+        "seconds": dur, "tokens": tokens, "tok_s": tokens / dur,
+    }
 
 
 def _heavy_tail_trace(n_requests, vocab, *, seed=0, n_base=12, zipf_a=1.1,
@@ -314,7 +381,7 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
         prompt_len: int = 8, gen_short: int = 4, gen_long: int = 64,
         reps: int = 3, backend: str = "fused", mesh=None,
         chunks=(1, 4, 16), spec_ks=(1, 4, 16), distill_steps: int = 300,
-        ht_requests: int = 1000, page_size: int = 16):
+        ht_requests: int = 1000, page_size: int = 16, n_tenants: int = 8):
     from benchmarks.schema import SCHEMA_VERSION, mesh_record
     from repro.launch.mesh import parse_mesh
 
@@ -419,6 +486,12 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
     heavy_tail = _run_heavy_tail(params, cfg, ht_trace, n_slots, ht_max_seq,
                                  head, mesh, page_size=page_size)
 
+    # Per-tenant serving (DESIGN.md §14): the same throughput stream fanned
+    # across a Zipf tenant mix, heads paged through an LRU HeadCache with
+    # capacity = min(n_tenants, n_slots) so cold tenants force evictions.
+    tenants = _run_tenants(params, cfg, reqs, n_slots, max_seq, n_tenants,
+                           backend=backend, mesh=mesh)
+
     result = {
         "schema_version": SCHEMA_VERSION,
         "mesh": mesh_record(mesh),
@@ -427,6 +500,7 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
         "prompt_len": prompt_len, "gen_short": gen_short,
         "gen_long": gen_long,
         "heavy_tail": heavy_tail,
+        "tenants": tenants,
         "head": {"kind": head.kind, "backend": head.backend},
         "static": static, "engine": engine,
         "megastep": megastep,
@@ -464,7 +538,12 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
                 " §13): outputs verified bitwise equal, latency percentiles"
                 " are ticks-since-arrival (seconds via mean tick time), and"
                 " the paged run's prefill_batches drop is the prefix cache"
-                " skipping repeated prompts' prefills.",
+                " skipping repeated prompts' prefills.  tenants (schema v7)"
+                " fans the throughput stream across a Zipf tenant mix"
+                " served through per-slot tenant head bindings (DESIGN.md"
+                " §14): banks page through an LRU HeadCache smaller than"
+                " the tenant population, so the counters cover load, hit,"
+                " eviction and reload, not just the resident steady state.",
     }
     print(f"  static:  {static['tok_s']:8.1f} tok/s  "
           f"({static['decode_steps']} decode steps, "
@@ -495,6 +574,11 @@ def run(arch: str = "rwkv6-1.6b", n_slots: int = 4, n_requests: int = 16,
           f"{ht['prefix_hit_rate']:.2f}, pages in use peak "
           f"{ht['pages_in_use_peak']}, outputs bitwise equal: "
           f"{ht['outputs_match']}")
+    tn = tenants
+    print(f"  tenants: {tn['n_tenants']} over HeadCache capacity "
+          f"{tn['capacity']}: {tn['tok_s']:8.1f} tok/s, hit rate "
+          f"{tn['hit_rate']:.2f} ({tn['hits']} hits / {tn['misses']} "
+          f"misses), {tn['loads']} loads, {tn['evictions']} evictions")
     BENCH_JSON.write_text(json.dumps(result, indent=1))
     print(f"  wrote {BENCH_JSON}")
     return result
@@ -533,6 +617,9 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per cache page for the heavy-tail paged "
                          "run")
+    ap.add_argument("--tenants", type=int, default=8,
+                    help="tenant population for the per-tenant HeadCache "
+                         "section (DESIGN.md §14)")
     args = ap.parse_args()
     run(arch=args.arch, n_slots=args.n_slots, n_requests=args.requests,
         prompt_len=args.prompt_len, gen_short=args.gen_short,
@@ -541,7 +628,7 @@ def main() -> None:
         chunks=tuple(int(c) for c in args.chunks.split(",")),
         spec_ks=tuple(int(c) for c in args.spec_decode.split(",")),
         distill_steps=args.distill_steps, ht_requests=args.ht_requests,
-        page_size=args.page_size)
+        page_size=args.page_size, n_tenants=args.tenants)
 
 
 if __name__ == "__main__":

@@ -43,6 +43,14 @@ Version history:
                  ``prefill_batches_contiguous``, and ``outputs_match``
                  (bitwise parity of the two engines' token streams);
                  BENCH_sketch_serve.json is unchanged structurally
+  7            — per-tenant serving (DESIGN.md §14): BENCH_engine.json
+                 gains the ``tenants`` section — a Zipf tenant mix over a
+                 heavy-tail trace served through an LRU ``HeadCache``
+                 smaller than the tenant population, with ``n_tenants``,
+                 ``capacity``, the head-cache counters (``hits`` /
+                 ``misses`` / ``loads`` / ``evictions``), ``hit_rate``,
+                 and the run timing fields; BENCH_sketch_serve.json is
+                 unchanged structurally
 
 ``validate_engine_record`` / ``validate_serve_record`` are the structural
 checks the CI bench-smoke job runs on freshly emitted artifacts.  The CLI
@@ -55,7 +63,7 @@ any):
 
 from __future__ import annotations
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 #: Count-array storage modes of the serve record's ``quant_curve`` (v5).
 _QUANT_CURVE_MODES = ("f32", "int8", "int4")
@@ -75,6 +83,11 @@ _HEAVY_TAIL_FIELDS = (
     "prefill_batches_contiguous", "tok_s", "tokens_per_s_per_slot",
     "latency_ticks_p50", "latency_ticks_p99", "latency_s_p50",
     "latency_s_p99")
+#: Fields the per-tenant section must carry (schema v7) — the tenant
+#: population, the LRU head-cache geometry/counters, and run timing.
+_TENANTS_FIELDS = (
+    "requests", "n_tenants", "capacity", "hits", "misses", "loads",
+    "evictions", "hit_rate", "seconds", "tokens", "tok_s")
 
 
 def mesh_record(mesh=None) -> dict:
@@ -115,7 +128,7 @@ def _validate_spec_run(run: dict, where: str) -> None:
 
 
 def validate_engine_record(record: dict) -> None:
-    """Structural check for a BENCH_engine.json record (schema v6).
+    """Structural check for a BENCH_engine.json record (schema v7).
 
     Raises ``ValueError`` naming the first missing/mismatched field; used
     by the CI bench-smoke and paged-smoke jobs on freshly emitted
@@ -124,7 +137,8 @@ def validate_engine_record(record: dict) -> None:
     name = "BENCH_engine"
     _validate_common(record, name)
     _require(record, ("decode_chunk", "static", "engine", "megastep",
-                      "spec_decode", "dense_megastep", "heavy_tail"), name)
+                      "spec_decode", "dense_megastep", "heavy_tail",
+                      "tenants"), name)
     _require(record["static"], _RUN_FIELDS, f"{name}.static")
     _require(record["engine"], _ENGINE_RUN_FIELDS, f"{name}.engine")
     ht = record["heavy_tail"]
@@ -142,6 +156,18 @@ def validate_engine_record(record: dict) -> None:
                          f"{ht['prefill_batches_contiguous']}")
     if ht["latency_ticks_p99"] < ht["latency_ticks_p50"]:
         raise ValueError(f"{name}.heavy_tail: p99 latency below p50")
+    tn = record["tenants"]
+    _require(tn, _TENANTS_FIELDS, f"{name}.tenants")
+    if tn["n_tenants"] < 1 or tn["capacity"] < 1:
+        raise ValueError(f"{name}.tenants: n_tenants {tn['n_tenants']} / "
+                         f"capacity {tn['capacity']} below 1")
+    if not 0.0 <= tn["hit_rate"] <= 1.0:
+        raise ValueError(f"{name}.tenants: hit_rate {tn['hit_rate']} "
+                         f"outside [0, 1]")
+    if tn["loads"] != tn["misses"]:
+        # Every HeadCache miss triggers exactly one loader call.
+        raise ValueError(f"{name}.tenants: loads {tn['loads']} != "
+                         f"misses {tn['misses']}")
     if not record["megastep"]:
         raise ValueError(f"{name}.megastep: empty sweep")
     for k, run in record["megastep"].items():
@@ -167,7 +193,7 @@ def validate_engine_record(record: dict) -> None:
 
 
 def validate_serve_record(record: dict) -> None:
-    """Structural check for a BENCH_sketch_serve.json record (schema v6;
+    """Structural check for a BENCH_sketch_serve.json record (schema v7;
     serve records are structurally unchanged since v5)."""
     name = "BENCH_sketch_serve"
     _validate_common(record, name)

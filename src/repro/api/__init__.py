@@ -19,8 +19,8 @@ behind this facade:
 """
 
 from repro.api.heads import (HEAD_KINDS, SKETCH_BACKENDS, DenseHead,
-                             LogitHead, SketchHead, get_head_class, load_head,
-                             register_head)
+                             HeadCache, LogitHead, SketchHead,
+                             get_head_class, load_head, register_head)
 from repro.api.lm import LM
 from repro.api.sampler import Sampler
 from repro.core import RepresenterSketch, SketchConfig
@@ -35,6 +35,7 @@ __all__ = [
     "SketchHead",
     "SketchHeadConfig",
     "HEAD_KINDS",
+    "HeadCache",
     "SKETCH_BACKENDS",
     "register_head",
     "get_head_class",

@@ -181,10 +181,22 @@ class SketchHead(LogitHead):
     specs and compile different kernels, so the jit memo caches
     (``launch.steps.jitted_serve_fns``) key on it automatically.
 
+    ``per_tenant`` (also compare — it changes the compiled gather) declares
+    the multi-tenant binding (DESIGN.md §14): runtime ``params`` is a
+    tenant-stacked bank (leading axis T on every array leaf, built by
+    ``core.sketch_lm_head.stack_heads`` / served from a :class:`HeadCache`)
+    plus a ``"tenant_ids"`` (B,) int32 leaf mapping each batch slot to its
+    tenant's bank row.  Decode computes every resident tenant's full-batch
+    logits on the unmodified single-tenant path and row-selects
+    arithmetic-free, so each slot's stream is bitwise what a single-tenant
+    engine bound to that tenant's head emits.
+
     >>> SketchHead(backend="ref").describe()
     'sketch/ref'
     >>> SketchHead(quant="int8").describe()
     'sketch/fused/int8'
+    >>> SketchHead(per_tenant=True).describe()
+    'sketch/fused/tenants'
     >>> SketchHead().with_backend("two_kernel").backend
     'two_kernel'
     >>> SketchHead(backend="nope")
@@ -199,6 +211,7 @@ class SketchHead(LogitHead):
     cfg: SketchHeadConfig = dataclasses.field(default_factory=SketchHeadConfig)
     backend: str = "fused"
     quant: Optional[str] = None
+    per_tenant: bool = False
     params: Optional[dict] = dataclasses.field(
         default=None, compare=False, repr=False)
 
@@ -217,7 +230,9 @@ class SketchHead(LogitHead):
         """Sketched (B, V) logits for (B, d_model) hiddens.
 
         Args:
-          params: the frozen head arrays ({"proj", "w", "b", "array"}).
+          params: the frozen head arrays ({"proj", "w", "b", "array"}); on a
+            ``per_tenant`` spec, the tenant-stacked bank with a
+            ``"tenant_ids"`` (B,) int32 leaf (``HeadCache.bank_params``).
           hidden: (B, d_model) final backbone hidden states.
           mesh: optional serving mesh; with a ``model`` axis the count
             arrays evaluate shard-locally and reduce with one psum.
@@ -226,7 +241,8 @@ class SketchHead(LogitHead):
           (B, V) f32 logits on this spec's ``backend``.
 
         Raises:
-          ValueError: if ``params`` is None (a bare spec cannot serve).
+          ValueError: if ``params`` is None (a bare spec cannot serve), or
+            if a ``per_tenant`` spec's params carry no ``"tenant_ids"``.
         """
         from repro.core.sketch_lm_head import apply_head
         if params is None:
@@ -234,6 +250,15 @@ class SketchHead(LogitHead):
                 "SketchHead.apply needs the frozen head params; build them "
                 "with freeze_head/distill_head or load them with "
                 "SketchHead.load")
+        if self.per_tenant:
+            if "tenant_ids" not in params:
+                raise ValueError(
+                    "per_tenant SketchHead.apply needs a 'tenant_ids' leaf "
+                    "in params — pass HeadCache.bank_params(slot_tenants)")
+            bank = {k: v for k, v in params.items() if k != "tenant_ids"}
+            return apply_head(bank, hidden, self.cfg, backend=self.backend,
+                              quant=self.quant, mesh=mesh,
+                              tenant_ids=params["tenant_ids"])
         return apply_head(params, hidden, self.cfg, backend=self.backend,
                           quant=self.quant, mesh=mesh)
 
@@ -287,9 +312,14 @@ class SketchHead(LogitHead):
         return dataclasses.replace(self, quant=quant, params=params)
 
     def describe(self) -> str:
-        """``"sketch/<backend>[/<quant>]"`` — the registry identity."""
+        """``"sketch/<backend>[/<quant>][/tenants]"`` — the registry
+        identity."""
         base = f"sketch/{self.backend}"
-        return base if self.quant is None else f"{base}/{self.quant}"
+        if self.quant is not None:
+            base = f"{base}/{self.quant}"
+        if self.per_tenant:
+            base = f"{base}/tenants"
+        return base
 
     # -- persistence (round-trips kind + backend, DESIGN.md §8) ------------
 
@@ -309,6 +339,21 @@ class SketchHead(LogitHead):
                   kind=self.kind, backend=self.backend, quant=self.quant)
 
     @classmethod
+    def from_archive(cls, params: dict, cfg: SketchHeadConfig,
+                     meta: dict) -> "SketchHead":
+        """Build a head from already-parsed archive contents.
+
+        Args:
+          params / cfg / meta: the ``load_head_full`` triple.
+
+        Returns:
+          A ready-to-serve ``SketchHead`` on the backend it was saved with
+          (archives predating the metadata load as ``fused``).
+        """
+        return cls(cfg=cfg, backend=meta["backend"], quant=meta["quant"],
+                   params=params)
+
+    @classmethod
     def load(cls, path) -> "SketchHead":
         """Load a head saved by :meth:`save` (kind/backend round-trip).
 
@@ -320,13 +365,17 @@ class SketchHead(LogitHead):
           (archives predating the metadata load as ``fused``).
         """
         from repro.core.sketch_lm_head import load_head_full
-        params, cfg, meta = load_head_full(path)
-        return cls(cfg=cfg, backend=meta["backend"], quant=meta["quant"],
-                   params=params)
+        return cls.from_archive(*load_head_full(path))
 
 
 def load_head(path) -> LogitHead:
     """Load any saved head; dispatches on the stored ``kind`` metadata.
+
+    Opens the archive exactly once: ``load_head_full`` returns params,
+    config, *and* metadata in one read, and the registered class rebuilds
+    from that triple via ``from_archive``.  Classes without ``from_archive``
+    fall back to ``cls.load(path)`` (a second open — acceptable for
+    third-party kinds, never for the built-ins).
 
     Args:
       path: an .npz archive written by a head's ``save``.
@@ -337,11 +386,185 @@ def load_head(path) -> LogitHead:
 
     Raises:
       KeyError: if the stored kind was never registered in this process.
-      TypeError: if the registered class has no ``load``.
+      TypeError: if the registered class has no ``load``/``from_archive``.
     """
-    from repro.core.sketch_lm_head import load_head_meta
-    kind = load_head_meta(path)["kind"]
-    cls = get_head_class(kind)
+    from repro.core.sketch_lm_head import load_head_full
+    params, cfg, meta = load_head_full(path)
+    cls = get_head_class(meta["kind"])
+    if hasattr(cls, "from_archive"):
+        return cls.from_archive(params, cfg, meta)
     if not hasattr(cls, "load"):
-        raise TypeError(f"head kind {kind!r} does not support load()")
+        raise TypeError(
+            f"head kind {meta['kind']!r} does not support load()")
     return cls.load(path)
+
+
+class HeadCache:
+    """LRU pager for per-tenant sketch heads (DESIGN.md §14).
+
+    Holds up to ``capacity`` tenants' frozen head params resident in a
+    tenant-stacked *bank* (one stacked array per head leaf, leading axis =
+    bank slot).  ``acquire`` pages a tenant in on miss via the ``loader``
+    callback and pins it with a refcount — a tenant with live engine slots
+    can never be evicted mid-decode; ``release`` unpins.  Eviction is LRU
+    over unpinned tenants only; freed bank slots are reused
+    lowest-index-first so replays are deterministic.
+
+    ``publish`` overwrites a resident tenant's bank row in place — the
+    double-buffered commit point of ``ServeEngine.refresh``: in-flight
+    dispatches hold the old (immutable) bank arrays, the next tick reads
+    the new ones.
+
+    Not thread-safe; the serving engine drives it from one loop.
+    """
+
+    def __init__(self, loader, capacity: int, mesh=None):
+        """Args:
+          loader: ``loader(tenant) -> dict`` returning the tenant's frozen
+            head params (e.g. ``lambda t: load_head(path_for(t)).params``).
+            Every leaf must match the first-loaded head's shapes/dtypes.
+          capacity: max resident tenants (bank slots); ≥ 1.
+          mesh: optional serving mesh — the bank is placed with
+            ``sharding.rules.head_bank_shardings`` so per-tenant rows
+            shard exactly like a single-tenant head.
+        """
+        if capacity < 1:
+            raise ValueError(f"HeadCache capacity must be >= 1, got "
+                             f"{capacity}")
+        self._loader = loader
+        self.capacity = capacity
+        self.mesh = mesh
+        self._bank: Optional[dict] = None          # leaf -> (cap, …) array
+        self._slot_of: Dict[Any, int] = {}         # tenant -> bank slot
+        self._refs: Dict[Any, int] = {}            # tenant -> live pins
+        self._lru: list = []                       # LRU→MRU among residents
+        self.stats = {"hits": 0, "misses": 0, "loads": 0, "evictions": 0}
+
+    # -- internal ----------------------------------------------------------
+
+    def _init_bank(self, params: dict) -> None:
+        import jax
+
+        def alloc(a):
+            z = jnp.zeros((self.capacity,) + a.shape, a.dtype)
+            return z
+
+        self._bank = jax.tree.map(alloc, dict(params))
+        if self.mesh is not None:
+            from repro.sharding.rules import head_bank_shardings
+            shardings = head_bank_shardings(self._bank, self.mesh)
+            self._bank = {k: jax.device_put(v, shardings[k])
+                          for k, v in self._bank.items()}
+
+    def _write_slot(self, slot: int, params: dict) -> None:
+        for k, v in params.items():
+            if k not in self._bank:
+                raise ValueError(
+                    f"tenant head has unexpected leaf {k!r}; bank leaves "
+                    f"are {sorted(self._bank)} — all tenants must share "
+                    f"one quantization mode and config")
+            self._bank[k] = self._bank[k].at[slot].set(
+                jnp.asarray(v, self._bank[k].dtype))
+        missing = set(self._bank) - set(params)
+        if missing:
+            raise ValueError(
+                f"tenant head is missing leaves {sorted(missing)}; all "
+                f"tenants must share one quantization mode and config")
+
+    def _touch(self, tenant) -> None:
+        if tenant in self._lru:
+            self._lru.remove(tenant)
+        self._lru.append(tenant)
+
+    def _free_slot(self) -> int:
+        used = set(self._slot_of.values())
+        for s in range(self.capacity):
+            if s not in used:
+                return s
+        # Evict the least-recently-used unpinned tenant.
+        for victim in self._lru:
+            if self._refs.get(victim, 0) == 0:
+                slot = self._slot_of.pop(victim)
+                self._lru.remove(victim)
+                self._refs.pop(victim, None)
+                self.stats["evictions"] += 1
+                return slot
+        raise RuntimeError(
+            f"HeadCache: all {self.capacity} resident tenants are pinned "
+            f"by live slots; raise capacity or drain requests")
+
+    # -- public ------------------------------------------------------------
+
+    def acquire(self, tenant) -> int:
+        """Pin ``tenant`` resident (paging it in on miss); returns its slot.
+
+        Each ``acquire`` must be balanced by one :meth:`release` when the
+        tenant's last live engine slot retires.
+        """
+        if tenant in self._slot_of:
+            self.stats["hits"] += 1
+            self._refs[tenant] = self._refs.get(tenant, 0) + 1
+            self._touch(tenant)
+            return self._slot_of[tenant]
+        self.stats["misses"] += 1
+        params = self._loader(tenant)
+        self.stats["loads"] += 1
+        if self._bank is None:
+            self._init_bank(params)
+        slot = self._free_slot()
+        self._write_slot(slot, params)
+        self._slot_of[tenant] = slot
+        self._refs[tenant] = self._refs.get(tenant, 0) + 1
+        self._touch(tenant)
+        return slot
+
+    def release(self, tenant) -> None:
+        """Unpin one reference; the tenant stays resident until evicted."""
+        refs = self._refs.get(tenant, 0)
+        if refs <= 0:
+            raise ValueError(f"release of tenant {tenant!r} with no "
+                             f"outstanding acquire")
+        self._refs[tenant] = refs - 1
+
+    def slot(self, tenant) -> int:
+        """The resident bank slot of ``tenant`` (KeyError if paged out)."""
+        return self._slot_of[tenant]
+
+    def resident(self) -> list:
+        """Resident tenants in LRU→MRU order."""
+        return list(self._lru)
+
+    def tenant_params(self, tenant) -> dict:
+        """The resident tenant's params, sliced back out of the bank."""
+        slot = self._slot_of[tenant]
+        return {k: v[slot] for k, v in self._bank.items()}
+
+    def publish(self, tenant, params: dict) -> None:
+        """Overwrite a resident tenant's bank row — the refresh commit.
+
+        In-flight dispatches keep reading the old bank arrays (JAX arrays
+        are immutable; ``.at[].set`` builds new ones), so a publish between
+        engine ticks never exposes a half-updated head.
+        """
+        if tenant not in self._slot_of:
+            raise KeyError(f"tenant {tenant!r} is not resident; acquire it "
+                           f"before publishing a refresh")
+        self._write_slot(self._slot_of[tenant], params)
+        self._touch(tenant)
+
+    def bank_params(self, tenant_ids) -> dict:
+        """The decode-ready param dict: stacked bank + per-slot tenant ids.
+
+        Args:
+          tenant_ids: (B,) int array of *bank slots* (``self.slot(t)`` per
+            engine slot; free engine slots may carry any valid index).
+
+        Returns:
+          ``dict(**bank, tenant_ids=int32 array)`` — exactly what a
+          ``per_tenant`` :class:`SketchHead` expects as runtime params.
+        """
+        if self._bank is None:
+            raise RuntimeError("HeadCache is empty; acquire a tenant first")
+        out = dict(self._bank)
+        out["tenant_ids"] = jnp.asarray(tenant_ids, jnp.int32)
+        return out

@@ -196,7 +196,8 @@ class LM:
                sampler: Optional[Sampler] = None,
                eos_id: Optional[int] = None, decode_chunk: int = 1,
                spec_decode: int = 0, paged: bool = False,
-               page_size: int = 16, num_pages: Optional[int] = None):
+               page_size: int = 16, num_pages: Optional[int] = None,
+               head_cache=None):
         """A fresh continuous-batching ServeEngine over this (model, head).
 
         Args:
@@ -220,6 +221,11 @@ class LM:
           page_size: tokens per page along the sequence axis (paged only).
           num_pages: page-pool capacity override (paged only; sized from
             ``n_slots``/``max_seq`` when omitted).
+          head_cache: a ``repro.api.HeadCache`` for per-tenant serving
+            (DESIGN.md §14): this LM's head becomes the shared sketch spec
+            while each slot decodes through its request's tenant's arrays;
+            every ``submit`` then needs ``tenant=``.  Mutually exclusive
+            with ``spec_decode``.
 
         Returns:
           A ``repro.launch.engine.ServeEngine`` (mesh-aware when this LM
@@ -232,7 +238,8 @@ class LM:
                            sampler=sampler, eos_id=eos_id, mesh=self.mesh,
                            decode_chunk=decode_chunk,
                            spec_decode=spec_decode, paged=paged,
-                           page_size=page_size, num_pages=num_pages)
+                           page_size=page_size, num_pages=num_pages,
+                           head_cache=head_cache)
 
     def serve(self, requests: Iterable[RequestLike], *, n_slots: int = 4,
               max_seq: Optional[int] = None,

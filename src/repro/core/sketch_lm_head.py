@@ -41,6 +41,7 @@ from repro.core.lsh import L2LSH, LSHConfig
 from repro.kernels.common import pack_int4_rows, unpack_int4_rows
 from repro.kernels.fused_decode.ops import fused_decode_logits
 from repro.kernels.lsh_hash.ops import lsh_hash
+from repro.kernels.race_update.ops import race_update
 from repro.kernels.sketch_head.ops import sketch_head_logits
 from repro.models.config import SketchHeadConfig
 from repro.optim.compress import quantize_symmetric
@@ -162,6 +163,74 @@ def freeze_head(key: jax.Array, kernel_params: dict,
     return quantize_head(head, quant)
 
 
+def stack_heads(heads) -> dict:
+    """Stack per-tenant frozen head dicts into one tenant-indexed bank.
+
+    Every leaf gains a leading tenant axis T — the layout the multi-tenant
+    decode paths gather from by slot tenant-id (DESIGN.md §14).  All heads
+    must share shapes, dtypes, and quantization (the bank is one jit
+    operand; mixed storage would need per-tenant executables).
+    """
+    heads = list(heads)
+    if not heads:
+        raise ValueError("stack_heads needs at least one head")
+    keys = set(heads[0])
+    for h in heads[1:]:
+        if set(h) != keys:
+            raise ValueError(
+                f"cannot stack heads with different leaves: {sorted(keys)} "
+                f"vs {sorted(h)} — mixed quantization across tenants is not "
+                f"supported")
+    return {k: jnp.stack([jnp.asarray(h[k]) for h in heads]) for k in keys}
+
+
+def refresh_head(head: dict, cfg: SketchHeadConfig, hidden: jnp.ndarray,
+                 *, alphas: Optional[jnp.ndarray] = None,
+                 targets: Optional[jnp.ndarray] = None, lr: float = 1.0,
+                 backend: Optional[str] = None) -> dict:
+    """Fold live-traffic (hidden, logit) pairs into the count arrays online.
+
+    The streaming-update path the RACE sketch was designed for
+    (``kernels/race_update``, DESIGN.md §14): hash the (M, d_model) hiddens
+    through the head's own transform + bank, then accumulate the per-point
+    weights into the (L, R, V) counts.  Exactly one of
+
+    * ``alphas`` — (M, V) direct fold: the new points join the anchor set
+      with these representer weights, mathematically identical to
+      :func:`freeze_head` over the augmented set (same einsum, so a
+      refresh-then-publish matches offline re-distillation on the same
+      stream up to f32 summation order);
+    * ``targets`` — (M, V) residual fold for live traffic: the weights are
+      ``lr · (targets − f(hidden))``, a functional-gradient step toward the
+      observed teacher logits.
+
+    ``head`` must be the f32 working copy (refresh accumulates in f32;
+    dequantize a quantized head first and re-quantize on publish — the
+    engine's double-buffered ``refresh``/``publish`` does both).
+    """
+    if "scale" in head:
+        raise ValueError(
+            "refresh_head accumulates in f32; dequantize the head first "
+            "(dequantize_head) and re-quantize on publish — see "
+            "ServeEngine.refresh")
+    if (alphas is None) == (targets is None):
+        raise ValueError("pass exactly one of alphas= (direct fold) / "
+                         "targets= (residual fold)")
+    q = hidden.astype(jnp.float32) @ head["proj"]
+    idx = lsh_hash(q, head["w"], head["b"], bandwidth=cfg.bandwidth,
+                   n_buckets=cfg.n_buckets, backend=backend)       # (M, L)
+    if targets is not None:
+        pred = apply_head(head, hidden, cfg, backend="ref")
+        alphas = lr * (targets.astype(jnp.float32) - pred)
+    # race_update accumulates a (C, L, R) sketch; the head stores (L, R, V).
+    # One class per vocab entry: move V to the class axis and back.
+    sk = jnp.moveaxis(head["array"], -1, 0)                        # (V, L, R)
+    sk = race_update(sk, idx, alphas.astype(jnp.float32), backend=backend)
+    out = dict(head)
+    out["array"] = jnp.moveaxis(sk, 0, -1)
+    return out
+
+
 #: Decode backends of the sketched head (see repro.api.heads.SketchHead).
 HEAD_BACKENDS = ("fused", "two_kernel", "ref")
 
@@ -170,7 +239,8 @@ def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
                *, backend: Optional[str] = None,
                kernel_backend: Optional[str] = None,
                quant: Optional[str] = None,
-               mesh=None, use_pallas=None, fused=None) -> jnp.ndarray:
+               mesh=None, tenant_ids: Optional[jnp.ndarray] = None,
+               use_pallas=None, fused=None) -> jnp.ndarray:
     """Sketched logits for (B, d) final hiddens → (B, V).
 
     ``backend`` selects the decode path:
@@ -191,7 +261,13 @@ def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
     row-sharded shard_map path: count arrays partitioned over ``model`` on
     the repetition axis, scales with their rows, one psum of the (B, V)
     partials per step (DESIGN.md §9) — any ``backend`` composes with it.
-    ``use_pallas=`` / ``fused=`` are deprecated aliases.
+    ``tenant_ids`` ((B,) int32) selects the multi-tenant path (DESIGN.md
+    §14): ``head`` is a tenant-stacked bank (:func:`stack_heads`, leading
+    axis T on every leaf), each resident tenant's logits are computed over
+    the full batch by the identical single-tenant path, and row ``b`` takes
+    tenant ``tenant_ids[b]``'s row arithmetic-free — bitwise what a
+    single-tenant run bound to that head emits.  ``use_pallas=`` /
+    ``fused=`` are deprecated aliases.
     """
     if fused is not None or use_pallas is not None:
         warnings.warn(
@@ -224,10 +300,24 @@ def apply_head(head: dict, hidden: jnp.ndarray, cfg: SketchHeadConfig,
         return fused_decode_logits(
             hidden.astype(jnp.float32), head["proj"], head["w"], head["b"],
             head["array"], bandwidth=cfg.bandwidth, n_buckets=cfg.n_buckets,
-            scale=scale, quant=quant, backend=kernel_backend, mesh=mesh)
+            scale=scale, quant=quant, backend=kernel_backend, mesh=mesh,
+            tenant_ids=tenant_ids)
     if backend != "two_kernel":
         raise ValueError(f"unknown sketch-head backend {backend!r}; "
                          f"expected one of {HEAD_BACKENDS}")
+    if tenant_ids is not None:
+        # Per-tenant transforms and hash banks: each tenant hashes the full
+        # batch through its own (proj, w, b) — lsh_hash itself is unchanged
+        # — and the (T, B, L) index stack feeds the tenant-aware gather.
+        h32 = hidden.astype(jnp.float32)
+        idx = jnp.stack([
+            lsh_hash(h32 @ head["proj"][t], head["w"][t], head["b"][t],
+                     bandwidth=cfg.bandwidth, n_buckets=cfg.n_buckets,
+                     backend=kernel_backend)
+            for t in range(head["w"].shape[0])])
+        return sketch_head_logits(head["array"], idx, scale=scale,
+                                  quant=quant, backend=kernel_backend,
+                                  mesh=mesh, tenant_ids=tenant_ids)
     q = hidden.astype(jnp.float32) @ head["proj"]
     idx = lsh_hash(q, head["w"], head["b"], bandwidth=cfg.bandwidth,
                    n_buckets=cfg.n_buckets, backend=kernel_backend)

@@ -38,6 +38,23 @@ def pad_axis(x: jnp.ndarray, axis: int, multiple: int, value=0) -> jnp.ndarray:
     return jnp.pad(x, pads, constant_values=value)
 
 
+def select_tenant_rows(per_tenant: jnp.ndarray,
+                       tenant_ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot tenant gather: ``out[b] = per_tenant[tenant_ids[b], b]``.
+
+    ``per_tenant`` is a (T, B, …) stack of full-batch outputs, one per
+    resident tenant, each computed by the *unmodified* single-tenant code
+    path; ``tenant_ids`` is the (B,) int32 slot→tenant binding.  The gather
+    is arithmetic-free (``take_along_axis`` moves bits, it never re-reduces),
+    so row ``b`` of the result is bitwise identical to running tenant
+    ``tenant_ids[b]``'s head alone — the per-slot head binding costs no
+    parity (DESIGN.md §14).
+    """
+    idx = tenant_ids.reshape((1, -1) + (1,) * (per_tenant.ndim - 2))
+    idx = idx.astype(jnp.int32)
+    return jnp.take_along_axis(per_tenant, idx, axis=0)[0]
+
+
 def pack_int4_rows(q: jnp.ndarray) -> jnp.ndarray:
     """Pack int4-valued int8 rows pairwise along axis 0: (N, …) → (⌈N/2⌉, …).
 

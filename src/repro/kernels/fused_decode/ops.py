@@ -26,7 +26,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import registry
-from repro.kernels.common import mesh_axis_size
+from repro.kernels.common import mesh_axis_size, select_tenant_rows
 from repro.kernels.fused_decode.kernel import fused_decode_pallas
 from repro.kernels.fused_decode.ref import fused_decode_ref
 
@@ -69,6 +69,7 @@ def fused_decode_logits(
     use_pallas: Optional[bool] = None,
     backend: Optional[str] = None,
     mesh=None,
+    tenant_ids: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Sketched (B, V) logits in one kernel: transform → hash → gather.
 
@@ -88,6 +89,14 @@ def fused_decode_logits(
         resolves through the registry default.
       mesh: a ``jax.sharding.Mesh`` with a ``model`` axis to run the
         row-sharded psum path; ``None`` (default) is the single-device path.
+      tenant_ids: (B,) int32 per-slot tenant indices for the multi-tenant
+        path (DESIGN.md §14).  When set, every head operand carries a
+        leading tenant axis T — proj (T, d, d'), w (T, L, K, d'),
+        b (T, L, K), sketch (T, L, R, V), scale (T, L, R) — each resident
+        tenant's logits are computed over the full batch by this *same*
+        single-tenant path (shard_map psum included), and row ``b`` is
+        selected from tenant ``tenant_ids[b]``'s stack arithmetic-free, so
+        per-slot heads cost no bitwise parity.
 
     Returns:
       (B, V) f32 logit estimates.
@@ -96,6 +105,16 @@ def fused_decode_logits(
         raise ValueError("quant and scale must be passed together "
                          f"(quant={quant!r}, scale is "
                          f"{'None' if scale is None else 'set'})")
+    if tenant_ids is not None:
+        per_tenant = jnp.stack([
+            fused_decode_logits(
+                hidden, proj[t], w[t], b[t], sketch[t],
+                bandwidth=bandwidth, n_buckets=n_buckets,
+                scale=None if scale is None else scale[t], quant=quant,
+                block_b=block_b, block_v=block_v, use_pallas=use_pallas,
+                backend=backend, mesh=mesh)
+            for t in range(w.shape[0])])
+        return select_tenant_rows(per_tenant, tenant_ids)
     impl = registry.resolve("fused_decode", backend, use_pallas)
     kw = dict(bandwidth=bandwidth, n_buckets=n_buckets, quant=quant,
               block_b=block_b, block_v=block_v)

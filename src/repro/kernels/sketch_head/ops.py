@@ -26,7 +26,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import registry
-from repro.kernels.common import mesh_axis_size
+from repro.kernels.common import mesh_axis_size, select_tenant_rows
 from repro.kernels.sketch_head.kernel import sketch_head_pallas
 from repro.kernels.sketch_head.ref import sketch_head_ref
 
@@ -56,6 +56,7 @@ def sketch_head_logits(
     use_pallas: Optional[bool] = None,
     backend: Optional[str] = None,
     mesh=None,
+    tenant_ids: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Estimate (B, V) logits from precomputed bucket indices.
 
@@ -73,6 +74,13 @@ def sketch_head_logits(
         resolves through the registry default.
       mesh: a ``jax.sharding.Mesh`` with a ``model`` axis to run the
         row-sharded psum path; ``None`` (default) is the single-device path.
+      tenant_ids: (B,) int32 per-slot tenant indices for the multi-tenant
+        path (DESIGN.md §14).  When set, ``sketch`` is (T, L, R, V),
+        ``scale`` (T, L, R), and ``idx`` (T, B, L) — each tenant's own hash
+        bank produced the indices, so the stack carries one full-batch
+        index tensor per tenant.  Every tenant evaluates through this same
+        single-tenant path (shard_map psum included) and row ``b`` is
+        selected from tenant ``tenant_ids[b]``'s stack arithmetic-free.
 
     Returns:
       (B, V) f32 logit estimates (the row-mean over L sketch reads).
@@ -81,6 +89,20 @@ def sketch_head_logits(
         raise ValueError("quant and scale must be passed together "
                          f"(quant={quant!r}, scale is "
                          f"{'None' if scale is None else 'set'})")
+    if tenant_ids is not None:
+        if idx.ndim != 3 or idx.shape[0] != sketch.shape[0]:
+            raise ValueError(
+                f"tenant_ids needs a (T, B, L) index stack matching the "
+                f"(T, …) sketch bank; got idx {idx.shape} vs sketch "
+                f"{sketch.shape}")
+        per_tenant = jnp.stack([
+            sketch_head_logits(
+                sketch[t], idx[t],
+                scale=None if scale is None else scale[t], quant=quant,
+                block_b=block_b, block_v=block_v, use_pallas=use_pallas,
+                backend=backend, mesh=mesh)
+            for t in range(sketch.shape[0])])
+        return select_tenant_rows(per_tenant, tenant_ids)
     impl = registry.resolve("sketch_head", backend, use_pallas)
     l = idx.shape[1]
     l_store = sketch.shape[0]

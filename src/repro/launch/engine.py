@@ -58,11 +58,17 @@ from repro.models.model import init_decode_cache
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: prompt tokens + generation budget."""
+    """One serving request: prompt tokens + generation budget.
+
+    ``tenant`` binds the request to a per-tenant sketch head (DESIGN.md
+    §14): on a ``head_cache`` engine every request must name its tenant,
+    and its slot decodes through that tenant's head for its whole lifetime.
+    """
     rid: int
     prompt: np.ndarray          # (P,) int32
     max_new_tokens: int
     arrival: int = 0            # engine tick at which the request is visible
+    tenant: Optional[object] = None
 
 
 class RequestQueue:
@@ -209,10 +215,15 @@ class EngineBackend:
         return self._reset(pool, jnp.asarray(slots, jnp.int32))
 
     def decode(self, pool, tokens: np.ndarray, pos: np.ndarray,
-               active: np.ndarray):
+               active: np.ndarray, head_params=None):
+        """One decode step; ``head_params`` overrides the backend's bound
+        head arrays (the per-tenant engine passes the HeadCache bank +
+        slot binding here each tick)."""
+        if head_params is None:
+            head_params = self.head.params
         logits, pool = self._decode(
             self.params, pool, jnp.asarray(tokens[:, None], jnp.int32),
-            jnp.asarray(pos, jnp.int32), head_params=self.head.params,
+            jnp.asarray(pos, jnp.int32), head_params=head_params,
             active=jnp.asarray(active))
         return np.asarray(logits), pool
 
@@ -247,7 +258,7 @@ class EngineBackend:
 
     def paged_decode(self, pages, state, table: np.ndarray,
                      tokens: np.ndarray, pos: np.ndarray, active: np.ndarray,
-                     *, max_seq: int, page_size: int):
+                     *, max_seq: int, page_size: int, head_params=None):
         """One paged decode tick: gather per-slot views through the page
         table, splice in the recurrent state, run the *same* compiled decode
         step the contiguous engine uses (that identity is the bitwise-parity
@@ -256,6 +267,8 @@ class EngineBackend:
         and with it the spliced-in state buffers — is donated to decode, and
         commit donates the arena); rebind to the returned pair."""
         from repro.models.model import extract_paged_state, merge_paged_view
+        if head_params is None:
+            head_params = self.head.params
         fns = self._paged_fns(max_seq, page_size)
         pt = jnp.asarray(table, jnp.int32)
         posj = jnp.asarray(pos, jnp.int32)
@@ -263,7 +276,7 @@ class EngineBackend:
         full = merge_paged_view(self.cfg, view, state)
         logits, new_full = self._decode(
             self.params, full, jnp.asarray(tokens[:, None], jnp.int32),
-            posj, head_params=self.head.params, active=jnp.asarray(active))
+            posj, head_params=head_params, active=jnp.asarray(active))
         new_pages = fns.commit(pages, new_full, pt, posj)
         new_state = extract_paged_state(self.cfg, new_full)
         return np.asarray(logits), new_pages, new_state
@@ -305,18 +318,20 @@ class EngineBackend:
 
     def megastep(self, pool, tokens: np.ndarray, pos: np.ndarray,
                  active: np.ndarray, key, k: int, sampler: Sampler,
-                 eos_id: Optional[int]):
+                 eos_id: Optional[int], head_params=None):
         """K decode steps + in-scan sampling/EOS retirement in one dispatch
         (launch/decode_loop.py).  ``pool`` is donated; only the (k, B) token
         block and the small carry vectors cross back to host."""
         from repro.launch.decode_loop import jitted_megastep
 
+        if head_params is None:
+            head_params = self.head.params
         fn = jitted_megastep(self.cfg, self.head.without_params(), sampler,
                              k, mesh=self.mesh, eos_id=eos_id, masked=True)
         block, pool, last_tok, pos, active, key = fn(
             self.params, pool, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(pos, jnp.int32), key,
-            head_params=self.head.params, active=jnp.asarray(active))
+            head_params=head_params, active=jnp.asarray(active))
         # np.array (not asarray): the engine mutates pos/last_tok per slot
         # on admission, and zero-copy views of jax arrays are read-only.
         return (np.asarray(block), pool, np.array(last_tok, np.int32),
@@ -359,9 +374,14 @@ class ServeEngine:
                  sampler: Optional[Sampler] = None, decode_chunk: int = 1,
                  spec_decode: int = 0, paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 greedy=None, seed=None):
+                 head_cache=None, greedy=None, seed=None):
         _, sampler = resolve_legacy_serving_kwargs(
             None, sampler, None, None, None, greedy, seed, "ServeEngine")
+        if head_cache is not None and spec_decode:
+            raise ValueError("spec_decode and per-tenant heads are mutually "
+                             "exclusive: the draft/verify megastep re-reads "
+                             "the head inside its scan and cannot re-gather "
+                             "per-slot tenant bindings mid-draft")
         if decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
         if spec_decode < 0:
@@ -412,6 +432,9 @@ class ServeEngine:
             self.pool = None
         else:
             self.pool = backend.init_pool(n_slots, max_seq)
+        self.head_cache = head_cache
+        self.slot_tenant: List[Optional[object]] = [None] * n_slots
+        self._refresh: Dict = {}           # tenant -> f32 working head copy
         self.sched = SlotScheduler(n_slots)
         self.pos = np.zeros(n_slots, np.int32)         # tokens cached per slot
         self.last_tok = np.zeros(n_slots, np.int32)    # sampled, not yet cached
@@ -424,7 +447,8 @@ class ServeEngine:
         self._rids: set[int] = set()                   # every rid ever submitted
         self._pending_reset: List[int] = []            # slots retired this tick
         self._key = self.sampler.init_key()
-        self.stats = {"decode_steps": 0, "active_slot_steps": 0,
+        self.stats = {"refreshes": 0, "publishes": 0,
+                      "decode_steps": 0, "active_slot_steps": 0,
                       "admitted": 0, "retired": 0, "prefill_batches": 0,
                       "megasteps": 0, "host_syncs": 0, "verify_calls": 0,
                       "draft_tokens": 0, "accepted_draft_tokens": 0,
@@ -436,12 +460,18 @@ class ServeEngine:
     # -- request intake ----------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int, *, arrival: int = 0,
-               rid: Optional[int] = None) -> int:
+               rid: Optional[int] = None, tenant=None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) == 0:
             raise ValueError("prompt must be non-empty")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.head_cache is not None and tenant is None:
+            raise ValueError("this engine serves per-tenant heads "
+                             "(head_cache=); every submit needs tenant=")
+        if self.head_cache is None and tenant is not None:
+            raise ValueError("tenant= needs a per-tenant engine — pass "
+                             "head_cache= to make_engine/ServeEngine")
         if len(prompt) + max_new_tokens > self.max_seq + 1:
             # The last sampled token is never written back to the cache.
             raise ValueError(
@@ -453,7 +483,7 @@ class ServeEngine:
             raise ValueError(f"request id {rid} already submitted")
         self._rids.add(rid)
         self._next_rid = max(self._next_rid, rid) + 1
-        self.queue.push(Request(rid, prompt, max_new_tokens, arrival))
+        self.queue.push(Request(rid, prompt, max_new_tokens, arrival, tenant))
         return rid
 
     # -- scheduling --------------------------------------------------------
@@ -476,6 +506,17 @@ class ServeEngine:
         for r in batch:
             by_len.setdefault(len(r.prompt), []).append(r)
         return by_len
+
+    def _bind_tenants(self, group: List[Request], slots: np.ndarray) -> None:
+        """Pin each admitted request's tenant resident in the HeadCache and
+        record the slot→tenant binding.  Runs *before* ``_finish_admit``:
+        a request that retires immediately (budget 1 / first-token EOS)
+        releases its pin inside ``_retire``, so acquire must come first."""
+        if self.head_cache is None:
+            return
+        for r, s in zip(group, slots):
+            self.head_cache.acquire(r.tenant)
+            self.slot_tenant[int(s)] = r.tenant
 
     def _finish_admit(self, group: List[Request], slots: np.ndarray,
                       first: np.ndarray, plen: int) -> None:
@@ -523,6 +564,7 @@ class ServeEngine:
             # key once per call, so deduping must not change the call count.
             first = self._sample(logits)
             slots = np.asarray([self.sched.admit(r.rid) for r in group])
+            self._bind_tenants(group, slots)
             # A slot freed by an immediate retirement earlier in this same
             # admission round may be handed out again here; drop its pending
             # reset — the insert fully overwrites the row, and a deferred
@@ -570,6 +612,7 @@ class ServeEngine:
                 [p[3].logits if p[1] == "hit" else logits_u[p[3]]
                  for p in plans]))
             slots = np.asarray([self.sched.admit(r.rid) for r in group])
+            self._bind_tenants(group, slots)
             self._pending_reset = [s for s in self._pending_reset
                                    if s not in slots]
             # Wire pages + state.  Misses first: allocate/map fresh pages,
@@ -665,6 +708,9 @@ class ServeEngine:
     def _retire(self, slot: int) -> None:
         rid = self.sched.retire(slot)
         self.finished[rid] = self.outputs[rid]
+        if self.head_cache is not None and self.slot_tenant[slot] is not None:
+            self.head_cache.release(self.slot_tenant[slot])
+            self.slot_tenant[slot] = None
         # Resets are batched per tick (one jitted call for all retirements
         # this step) — a freed row is never read while inactive, and
         # ``slot_insert`` fully overwrites it on re-admission.
@@ -674,6 +720,62 @@ class ServeEngine:
             # exclusively owned ones return to the free list).
             self.page_pool.clear_slot(slot)
         self.stats["retired"] += 1
+
+    # -- per-tenant heads (DESIGN.md §14) ----------------------------------
+
+    def _head_params_now(self):
+        """This tick's decode head params: the HeadCache bank plus the
+        slot→bank-row binding (``None`` on single-tenant engines — the
+        backend then serves its own bound ``head.params``).  Free slots
+        point at bank row 0; their logits are masked/ignored anyway."""
+        if self.head_cache is None:
+            return None
+        ids = np.zeros(self.n_slots, np.int32)
+        for s, t in enumerate(self.slot_tenant):
+            if t is not None:
+                ids[s] = self.head_cache.slot(t)
+        return self.head_cache.bank_params(ids)
+
+    def refresh(self, tenant, hidden, *, targets=None, alphas=None,
+                lr: float = 1.0) -> None:
+        """Fold live-traffic (hidden, logit) pairs into ``tenant``'s head
+        online (``kernels/race_update``; DESIGN.md §14).
+
+        Accumulates into a host-held f32 working copy — the *shadow* buffer
+        of the double-buffered scheme; in-flight and subsequent decodes keep
+        reading the published bank row bitwise unchanged until
+        :meth:`publish` commits.  Exactly one of ``alphas`` ((M, V) direct
+        representer weights) or ``targets`` ((M, V) teacher logits for the
+        residual fold, scaled by ``lr``) must be given; the tenant must be
+        resident (acquired at least once).
+        """
+        if self.head_cache is None:
+            raise ValueError("refresh needs a per-tenant engine — pass "
+                             "head_cache= to make_engine/ServeEngine")
+        from repro.core.sketch_lm_head import dequantize_head, refresh_head
+        spec = self.backend.head
+        if tenant not in self._refresh:
+            self._refresh[tenant] = dequantize_head(
+                self.head_cache.tenant_params(tenant), spec.quant)
+        self._refresh[tenant] = refresh_head(
+            self._refresh[tenant], spec.cfg, hidden,
+            targets=targets, alphas=alphas, lr=lr)
+        self.stats["refreshes"] += 1
+
+    def publish(self, tenant) -> None:
+        """Commit ``tenant``'s pending refreshes: re-quantize the f32
+        working copy to the head's storage mode and swap it into the bank
+        between ticks.  Re-quantization happens here, not per refresh —
+        repeated int8/int4 round-trips would compound rounding error, so
+        the shadow stays f32 until the publish."""
+        if tenant not in self._refresh:
+            raise ValueError(f"no pending refresh for tenant {tenant!r}; "
+                             f"call engine.refresh(...) first")
+        from repro.core.sketch_lm_head import quantize_head
+        params = quantize_head(self._refresh.pop(tenant),
+                               self.backend.head.quant)
+        self.head_cache.publish(tenant, params)
+        self.stats["publishes"] += 1
 
     # -- the engine tick ---------------------------------------------------
 
@@ -696,11 +798,13 @@ class ServeEngine:
         block entries are padding and are skipped here)."""
         active = np.zeros(self.n_slots, bool)
         active[active_slots] = True
+        hp = self._head_params_now()
+        kw = {} if hp is None else {"head_params": hp}
         if hasattr(self.backend, "megastep"):
             (block, self.pool, self.last_tok, self.pos, _,
              self._key) = self.backend.megastep(
                 self.pool, self.last_tok, self.pos, active, self._key,
-                chunk, self.sampler, self.eos_id)
+                chunk, self.sampler, self.eos_id, **kw)
             # One block fetch per dispatch; the emulated path below counts
             # its per-token syncs inside _sample instead.
             self.stats["host_syncs"] += 1
@@ -756,10 +860,12 @@ class ServeEngine:
         mask→retire sequence, one backend.decode per token."""
         active = active.copy()
         block = np.zeros((chunk, self.n_slots), np.int32)
+        hp = self._head_params_now()
+        kw = {} if hp is None else {"head_params": hp}
         for i in range(chunk):
             step_active = active.copy()
             logits, self.pool = self.backend.decode(
-                self.pool, self.last_tok, self.pos, step_active)
+                self.pool, self.last_tok, self.pos, step_active, **kw)
             nxt = np.where(step_active, self._sample(logits), 0).astype(
                 np.int32)
             if self.eos_id is not None:
@@ -785,15 +891,17 @@ class ServeEngine:
         elif active_slots:
             active = np.zeros(self.n_slots, bool)
             active[active_slots] = True
+            hp = self._head_params_now()
+            kw = {} if hp is None else {"head_params": hp}
             if self.paged:
                 self._ensure_write_pages(active_slots)
                 logits, self.pages, self.state = self.backend.paged_decode(
                     self.pages, self.state, self.page_pool.table,
                     self.last_tok, self.pos, active,
-                    max_seq=self.max_seq, page_size=self.page_size)
+                    max_seq=self.max_seq, page_size=self.page_size, **kw)
             else:
                 logits, self.pool = self.backend.decode(
-                    self.pool, self.last_tok, self.pos, active)
+                    self.pool, self.last_tok, self.pos, active, **kw)
             nxt = self._sample(logits)
             self.stats["decode_steps"] += 1
             self.stats["megasteps"] += 1
@@ -849,7 +957,7 @@ def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
                 eos_id: Optional[int] = None, mesh=None,
                 decode_chunk: int = 1, spec_decode: int = 0,
                 paged: bool = False, page_size: int = 16,
-                num_pages: Optional[int] = None,
+                num_pages: Optional[int] = None, head_cache=None,
                 sketch_head=None, sketch_cfg: Optional[SketchHeadConfig] = None,
                 fused=None, greedy=None, seed=None) -> ServeEngine:
     """Engine over a real model: the serving entry point (see launch.serve
@@ -869,14 +977,30 @@ def make_engine(params, cfg: ModelConfig, n_slots: int, max_seq: int, *,
     refcounted page table, identical prompts hit the prefix cache instead
     of re-prefilling, and shared pages fork copy-on-write on the first
     divergent decode write — token streams stay bitwise identical to the
-    contiguous engine.  The pre-redesign
+    contiguous engine.  ``head_cache=`` (a ``repro.api.HeadCache``) makes
+    the engine *per-tenant* (DESIGN.md §14): ``head`` becomes the shared
+    sketch spec (config/backend/quant) while each slot decodes through its
+    request's tenant's arrays, paged in/out of the cache on demand; every
+    ``submit`` then needs ``tenant=``, and ``engine.refresh(tenant, ...)``
+    / ``engine.publish(tenant)`` fold live traffic into a tenant's head
+    online.  The pre-redesign
     ``sketch_head=/sketch_cfg=/fused=/greedy=/seed=`` kwargs keep working
     behind a DeprecationWarning."""
     head, sampler = resolve_legacy_serving_kwargs(
         head, sampler, sketch_head, sketch_cfg, fused, greedy, seed,
         "make_engine")
+    if head_cache is not None:
+        from repro.api.heads import SketchHead
+        if not isinstance(head, SketchHead):
+            raise ValueError(
+                "head_cache= (per-tenant serving) needs a SketchHead spec "
+                f"for head=; got {type(head).__name__ if head is not None else None}")
+        head = dataclasses.replace(head.without_params(), per_tenant=True)
+        if head_cache.mesh is None:
+            head_cache.mesh = mesh
     backend = EngineBackend(params, cfg, head=head, mesh=mesh)
     return ServeEngine(backend, n_slots, max_seq, eos_id=eos_id,
                        sampler=sampler, decode_chunk=decode_chunk,
                        spec_decode=spec_decode, paged=paged,
-                       page_size=page_size, num_pages=num_pages)
+                       page_size=page_size, num_pages=num_pages,
+                       head_cache=head_cache)

@@ -250,17 +250,51 @@ def build_or_load_head(params, cfg, head_path: str | None,
                                          head_cfg, quant=quant))
 
 
-def run_engine(lm, args, sampler: Sampler) -> None:
+def build_tenant_heads(params, cfg, n_tenants: int,
+                       backend: str | None = None, quant: str | None = None,
+                       distill_steps: int = 300):
+    """One shared quick distillation, ``n_tenants`` per-tenant freezes.
+
+    Every tenant shares the distilled anchor set (points/alphas/transform)
+    but freezes its own hash bank from a distinct key, so tenants emit
+    genuinely different token streams at identical quality — the shape of
+    a fleet serving one base model with per-customer heads (DESIGN.md §14).
+
+    Returns ``(shared SketchHead spec, {tenant name: frozen params})``.
+    """
+    from repro.core.distill import DistillConfig
+    from repro.core.sketch_lm_head import distill_head, freeze_head
+
+    head_cfg = cfg.sketch_head or SketchHeadConfig(
+        n_rows=128, n_buckets=16, k=1, proj_dim=32, bandwidth=2.0)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    hiddens = jax.random.normal(jax.random.PRNGKey(11), (1024, cfg.d_model))
+    print(f"distilling shared tenant head (L={head_cfg.n_rows}, "
+          f"R={head_cfg.n_buckets}, {distill_steps} steps) …")
+    kparams, metrics = distill_head(
+        jax.random.PRNGKey(12), table, hiddens, head_cfg, n_points=256,
+        distill_cfg=DistillConfig(n_steps=distill_steps, lr=5e-3))
+    print(f"  distill MSE: {metrics['final_mse']:.5f}")
+    spec = SketchHead(cfg=head_cfg, backend=backend or "fused", quant=quant)
+    heads = {f"tenant-{t}": freeze_head(jax.random.PRNGKey(100 + t),
+                                        kparams, head_cfg, quant=quant)
+             for t in range(n_tenants)}
+    return spec, heads
+
+
+def run_engine(lm, args, sampler: Sampler, head_cache=None) -> None:
     """Serve a synthetic request stream through the continuous-batching
     engine: staggered arrivals, skewed generation lengths, recycled slots.
     With ``--paged``, repeated prompts in the stream hit the prefix cache
-    and skip their prefill entirely."""
+    and skip their prefill entirely.  With ``--tenants N`` (``head_cache``
+    set), requests round-robin over N per-tenant heads paged through the
+    LRU HeadCache."""
     n_requests = args.requests or 2 * args.batch
     max_seq = args.prompt_len + args.gen
     engine = lm.engine(n_slots=args.batch, max_seq=max_seq, sampler=sampler,
                        decode_chunk=args.decode_chunk,
                        spec_decode=args.spec_decode, paged=args.paged,
-                       page_size=args.page_size)
+                       page_size=args.page_size, head_cache=head_cache)
     rng = np.random.default_rng(args.seed)
     # A quarter of the prompt stream repeats a shared prompt so --paged has
     # prefix-cache traffic to show; the rest are unique.
@@ -274,7 +308,10 @@ def run_engine(lm, args, sampler: Sampler) -> None:
                                   dtype=np.int32)
         # Skewed length mix: even requests are short, odd run the full --gen.
         gen = args.gen if i % 2 else max(1, args.gen // 4)
-        engine.submit(prompt, gen, arrival=i * args.arrival_every)
+        tenant = (f"tenant-{i % args.tenants}" if head_cache is not None
+                  else None)
+        engine.submit(prompt, gen, arrival=i * args.arrival_every,
+                      tenant=tenant)
 
     t0 = time.time()
     finished = engine.run()
@@ -303,6 +340,12 @@ def run_engine(lm, args, sampler: Sampler) -> None:
               f"{s['prefill_batches']} prefill batches, "
               f"{s['cow_copies']} COW copies, "
               f"pages in use peak {s['pages_in_use_peak']}")
+    if head_cache is not None:
+        hs = head_cache.stats
+        print(f"tenants: {args.tenants} over HeadCache capacity "
+              f"{head_cache.capacity}, hits {hs['hits']}/"
+              f"{hs['hits'] + hs['misses']}, {hs['loads']} loads, "
+              f"{hs['evictions']} evictions")
     first = finished[min(finished)]
     print("sample token ids:", np.asarray(first[:24]))
     if args.stats_json:
@@ -315,6 +358,11 @@ def run_engine(lm, args, sampler: Sampler) -> None:
                   "paged": engine.paged,
                   "page_size": engine.page_size if engine.paged else None}
         record.update({k: int(v) for k, v in engine.stats.items()})
+        if head_cache is not None:
+            record["tenants"] = {
+                "n_tenants": args.tenants,
+                "capacity": head_cache.capacity,
+                **{k: int(v) for k, v in head_cache.stats.items()}}
         print("STATS_JSON " + json.dumps(record, sort_keys=True))
 
 
@@ -373,6 +421,12 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per cache page with --paged (smaller pages "
                          "waste less tail memory but deepen the page table)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="engine mode with --sketch-head: serve N per-tenant "
+                         "heads (one shared distillation, per-tenant hash "
+                         "banks) paged through an LRU HeadCache; requests "
+                         "round-robin over tenants (DESIGN.md §14; mutually "
+                         "exclusive with --spec-decode and --head-path)")
     ap.add_argument("--stats-json", action="store_true",
                     help="engine mode: print the engine stats dict as one "
                          "parseable 'STATS_JSON {…}' line after the run")
@@ -392,6 +446,16 @@ def main() -> None:
                  "pass only --backend")
     if (args.paged or args.stats_json) and not args.engine:
         ap.error("--paged/--stats-json apply to engine mode; add --engine")
+    if args.tenants:
+        if not (args.engine and args.sketch_head):
+            ap.error("--tenants needs --engine and --sketch-head")
+        if args.head_path:
+            ap.error("--tenants distills one shared head in-process; "
+                     "--head-path is not supported")
+        if args.spec_decode:
+            ap.error("--tenants and --spec-decode are mutually exclusive "
+                     "(the draft/verify megastep cannot re-gather per-slot "
+                     "tenant bindings mid-draft)")
     backend = "two_kernel" if args.no_fused else args.backend
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -399,7 +463,16 @@ def main() -> None:
     if args.quant and not args.sketch_head:
         ap.error("--quant only applies to the sketch head; add --sketch-head")
     head = DenseHead()
-    if args.sketch_head:
+    head_cache = None
+    if args.tenants:
+        from repro.api.heads import HeadCache
+        head, tenant_heads = build_tenant_heads(params, cfg, args.tenants,
+                                                backend, quant=args.quant)
+        # Capacity below the tenant count (when traffic allows) so the smoke
+        # run exercises paging in/out, not just residency.
+        head_cache = HeadCache(tenant_heads.__getitem__,
+                               capacity=max(1, min(args.tenants, args.batch)))
+    elif args.sketch_head:
         head = build_or_load_head(params, cfg, args.head_path, backend,
                                   quant=args.quant)
     lm = LM(params, cfg, head)
@@ -410,7 +483,7 @@ def main() -> None:
                       top_p=args.top_p, seed=args.seed)
 
     if args.engine:
-        run_engine(lm, args, sampler)
+        run_engine(lm, args, sampler, head_cache=head_cache)
         return
 
     prompts = jax.random.randint(jax.random.PRNGKey(1),

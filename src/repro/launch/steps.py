@@ -351,6 +351,11 @@ def jitted_serve_fns(cfg: ModelConfig, head: Optional[LogitHead] = None,
     if spec_decode and sampler is None:
         raise ValueError("spec_decode fuses sampling into the draft/verify "
                          "scan; pass sampler=repro.api.Sampler(...)")
+    if spec_decode and getattr(head, "per_tenant", False):
+        raise ValueError("spec_decode and per-tenant heads are mutually "
+                         "exclusive: the draft/verify megastep re-reads the "
+                         "head inside its scan and cannot re-gather per-slot "
+                         "tenant bindings mid-draft")
     if paged:
         if decode_chunk > 1:
             raise ValueError("paged serving gathers/commits pages around "

@@ -274,6 +274,35 @@ def head_param_shardings(head_params, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(one, head_params)
 
 
+def head_bank_shardings(bank, mesh: Mesh):
+    """NamedSharding dict for a tenant-stacked head bank (DESIGN.md §14).
+
+    A ``HeadCache`` bank is a frozen head tree with a leading tenant axis T
+    on every leaf (``(T, L, R, V)`` count arrays, ``(T, L, R)`` scales,
+    ``(T, d, d')`` transforms, …).  The tenant axis is never sharded —
+    decode slices one tenant's row at a time and each slice must be exactly
+    a single-tenant head shard — so every leaf keeps ``head_param_spec`` on
+    its trailing dims with ``None`` prepended.  A ``"tenant_ids"`` leaf
+    (the (B,) slot binding) replicates.
+
+    Args:
+      bank: dict of tenant-stacked head leaves (``HeadCache`` internal bank,
+        optionally including ``"tenant_ids"``).
+      mesh: target mesh.
+
+    Returns:
+      ``{leaf name: NamedSharding}`` mirroring ``bank``.
+    """
+    out = {}
+    for name, leaf in bank.items():
+        if name == "tenant_ids":
+            out[name] = NamedSharding(mesh, P(None))
+            continue
+        inner = head_param_spec(name, leaf.shape[1:], mesh)
+        out[name] = NamedSharding(mesh, P(None, *inner))
+    return out
+
+
 def zero1_shardings(params, mesh: Mesh):
     """Optimizer-state sharding: param spec + `data` on the largest free dim.
 

@@ -1,0 +1,84 @@
+"""Head-archive loading: the single-open contract and identity round-trip.
+
+Regression for the ``load_head`` double-open bug: the registry loader used
+to read the archive once for the metadata (to pick the class) and then a
+second time inside the class's ``load`` — two full decompressions of a
+count array that dominates the artifact.  The fix threads one
+``load_head_full`` read through ``from_archive``, so loading a head opens
+the archive exactly once.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.sketch_lm_head as head_mod
+from repro.api.heads import SketchHead, load_head
+from repro.core.sketch_lm_head import freeze_head, save_head
+from repro.models.config import SketchHeadConfig
+
+_HEAD_CFG = SketchHeadConfig(n_rows=16, n_buckets=8, k=1, proj_dim=8,
+                             bandwidth=2.0)
+
+
+def _saved_head(tmp_path, quant=None, backend="fused"):
+    d_model, vocab = 12, 32
+    kp, ka, kj, kf = jax.random.split(jax.random.PRNGKey(5), 4)
+    kparams = {
+        "points": jax.random.normal(kp, (32, _HEAD_CFG.proj_dim)),
+        "alphas": jax.random.normal(ka, (32, vocab)) * 0.01,
+        "proj": jax.random.normal(kj, (d_model, _HEAD_CFG.proj_dim)),
+    }
+    params = freeze_head(kf, kparams, _HEAD_CFG, quant=quant)
+    path = tmp_path / "head.npz"
+    save_head(path, params, _HEAD_CFG, kind="sketch", backend=backend,
+              quant=quant)
+    return path, params
+
+
+@pytest.mark.parametrize("quant", [None, "int8"])
+def test_load_head_opens_archive_exactly_once(tmp_path, monkeypatch, quant):
+    path, _ = _saved_head(tmp_path, quant=quant)
+    opens = []
+    real_load = np.load
+
+    def counting_load(file, *args, **kwargs):
+        opens.append(file)
+        return real_load(file, *args, **kwargs)
+
+    # Every archive read in the loading stack goes through the
+    # sketch_lm_head module's np binding (load_head_full/load_head_meta).
+    monkeypatch.setattr(head_mod.np, "load", counting_load)
+    head = load_head(path)
+    assert len(opens) == 1, (
+        f"load_head opened the archive {len(opens)} times: {opens}")
+    assert isinstance(head, SketchHead)
+
+
+@pytest.mark.parametrize("quant,backend", [(None, "fused"),
+                                           (None, "two_kernel"),
+                                           ("int8", "ref")])
+def test_load_head_round_trips_identity_and_params(tmp_path, quant, backend):
+    """The loaded head serves on the path it was saved with: kind, backend,
+    quant, config, and every param leaf survive the round trip."""
+    path, params = _saved_head(tmp_path, quant=quant, backend=backend)
+    head = load_head(path)
+    assert isinstance(head, SketchHead)
+    assert head.backend == backend
+    assert head.quant == quant
+    assert head.cfg == _HEAD_CFG
+    assert set(head.params) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(head.params[k]),
+                                      np.asarray(params[k]))
+
+
+def test_sketch_head_class_load_matches_registry_load(tmp_path):
+    """SketchHead.load (the class entry point) and load_head (the registry
+    entry point) produce identical heads."""
+    path, _ = _saved_head(tmp_path)
+    a, b = SketchHead.load(path), load_head(path)
+    assert a.backend == b.backend and a.quant == b.quant and a.cfg == b.cfg
+    for k in a.params:
+        np.testing.assert_array_equal(np.asarray(a.params[k]),
+                                      np.asarray(b.params[k]))

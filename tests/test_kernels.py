@@ -206,3 +206,55 @@ def test_flash_attention_dtypes(dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,d,l,k,r", [(37, 10, 12, 1, 6),    # all non-pow2
+                                       (129, 18, 25, 2, 10),  # b % block != 0
+                                       (64, 24, 18, 3, 12)])  # K-fold rehash
+def test_lsh_hash_pallas_vs_ref_explicit(b, d, l, k, r, dtype):
+    """Explicit backend pin for the hash kernel: the pallas projection +
+    floor + K-fold integer mix against the jnp oracle, both resolved by
+    name — immune to REPRO_KERNEL_BACKEND / default-backend flips.  Bucket
+    indices are discrete, so parity is *exact*: both paths accumulate the
+    projection in f32 (``preferred_element_type``), and the mix is integer
+    arithmetic with one bit-for-bit convention (kernel docstring)."""
+    key = jax.random.PRNGKey(b * 11 + d)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (b, d)).astype(dtype)
+    w = jax.random.normal(kw, (l, k, d))
+    bias = jax.random.uniform(kb, (l, k)) * 1.5
+    got = lsh_hash(x, w, bias, bandwidth=1.5, n_buckets=r, block_b=16,
+                   backend="pallas")
+    want = lsh_hash(x, w, bias, bandwidth=1.5, n_buckets=r, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int32
+    assert bool(jnp.all((got >= 0) & (got < r)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,win,cap,bq,bk", [
+    (96, None, None, 32, 32),     # plain causal, seq % block == 0
+    (200, 64, None, 64, 64),      # non-divisible seq + sliding window
+    (100, None, 50.0, 32, 64),    # softcap + non-pow2 seq, rect tiles
+    (144, 32, 30.0, 48, 48),      # window + softcap, non-pow2 blocks
+])
+def test_flash_attention_pallas_vs_ref_explicit(s, win, cap, bq, bk, dtype):
+    """Explicit backend pin for attention: the pallas online-softmax tiles
+    against the jnp oracle across the window/softcap feature grid and both
+    serving dtypes — f32 at tight tolerance, bf16 at storage precision."""
+    from repro.kernels.flash_attn.ops import flash_attention
+
+    b, h, dh = 2, 2, 16
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(s + bq), 3)
+    q = jax.random.normal(kq, (b, s, h, dh)).astype(dtype)
+    k = jax.random.normal(kk, (b, s, h, dh)).astype(dtype)
+    v = jax.random.normal(kv, (b, s, h, dh)).astype(dtype)
+    got = flash_attention(q, k, v, window=win, softcap=cap, block_q=bq,
+                          block_k=bk, backend="pallas")
+    want = flash_attention(q, k, v, window=win, softcap=cap, backend="ref")
+    assert got.dtype == want.dtype == dtype
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)

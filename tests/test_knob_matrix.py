@@ -1,0 +1,252 @@
+"""Cross-feature knob matrix (DESIGN.md §14 acceptance): every pairwise
+combination of the serving knobs
+
+    paged · spec_decode · decode_chunk>1 · quant · mesh · per-tenant
+
+either composes **bitwise-correctly** or raises the documented
+``ValueError`` — never a silent wrong answer.
+
+Compose contract per pair: the knobs that are bitwise-transparent by
+design (paged, decode_chunk, per-tenant-with-the-same-head; spec_decode
+emits the dense stream) must not change the token stream of the knobs
+that aren't (quant changes logits, mesh changes the partitioning).  So
+each compose test compares the pair's stream against the reference run
+holding only the logit-affecting knob(s) of that pair.  Mesh pairs run
+under the forced-CPU multi-device jobs and skip elsewhere.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import DenseHead, HeadCache, Sampler, SketchHead, \
+    SketchHeadConfig
+from repro.configs import get_config
+from repro.core.sketch_lm_head import freeze_head
+from repro.launch.engine import ServeEngine, make_engine
+from repro.models.model import init_model
+
+_HEAD_CFG = SketchHeadConfig(n_rows=32, n_buckets=8, k=1, proj_dim=16,
+                             bandwidth=2.0)
+_MESH_REASON = "needs XLA_FLAGS=--xla_force_host_platform_device_count=8"
+
+needs_mesh = pytest.mark.skipif(len(jax.devices()) < 8, reason=_MESH_REASON)
+
+
+@pytest.fixture(scope="module")
+def world():
+    """(cfg, params, f32 head params, int8 head params) — one smoke arch;
+    the matrix exercises knob plumbing, not architectures."""
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    kp, ka, kj = jax.random.split(jax.random.PRNGKey(3), 3)
+    kparams = {
+        "points": jax.random.normal(kp, (128, _HEAD_CFG.proj_dim)),
+        "alphas": jax.random.normal(ka, (128, cfg.vocab_size)) * 0.01,
+        "proj": jax.random.normal(kj, (cfg.d_model, _HEAD_CFG.proj_dim))
+        / np.sqrt(cfg.d_model),
+    }
+    f32 = freeze_head(jax.random.PRNGKey(42), kparams, _HEAD_CFG)
+    int8 = freeze_head(jax.random.PRNGKey(42), kparams, _HEAD_CFG,
+                       quant="int8")
+    return cfg, params, f32, int8
+
+
+def _head(world, quant):
+    _, _, f32, int8 = world
+    return (SketchHead(cfg=_HEAD_CFG, backend="fused", quant="int8",
+                       params=int8) if quant
+            else SketchHead(cfg=_HEAD_CFG, backend="fused", params=f32))
+
+
+def _prompts(cfg, n=2, plen=4):
+    return [np.asarray(jax.random.randint(jax.random.PRNGKey(30 + i),
+                                          (plen,), 0, cfg.vocab_size))
+            for i in range(n)]
+
+
+def _serve(world, *, quant=False, tenant=False, mesh=None, gen=4,
+           **engine_kw):
+    """One tiny workload through an engine with the given knobs; returns
+    the per-request streams in submission order."""
+    cfg, params, f32, int8 = world
+    head = _head(world, quant)
+    if mesh is not None:
+        from repro.launch.mesh import place_serving_state
+        params, head = place_serving_state(params, head, mesh)
+    head_cache = None
+    if tenant:
+        # One tenant whose bank holds exactly the reference head's params:
+        # the per-tenant gather must reproduce the plain engine bitwise.
+        archive = {"tenant-0": int8 if quant else f32}
+        head_cache = HeadCache(archive.__getitem__, capacity=1)
+        head = SketchHead(cfg=_HEAD_CFG, backend="fused",
+                          quant="int8" if quant else None)
+    prompts = _prompts(cfg)
+    engine = make_engine(params, cfg, n_slots=len(prompts),
+                         max_seq=len(prompts[0]) + gen, head=head,
+                         mesh=mesh, head_cache=head_cache, **engine_kw)
+    rids = [engine.submit(p, gen, tenant="tenant-0" if tenant else None)
+            for p in prompts]
+    out = engine.run()
+    return [out[r] for r in rids]
+
+
+# ------------------------------------------------------- documented errors
+
+def _spec_engine_kw(k=2):
+    return dict(spec_decode=k, sampler=Sampler(seed=0))
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(spec_decode=2, decode_chunk=2, sampler=Sampler(seed=0)),
+     "spec_decode and decode_chunk > 1 are mutually exclusive"),
+    (dict(paged=True, decode_chunk=2, sampler=Sampler(seed=0)),
+     "decode_chunk > 1 is not supported yet"),
+    (dict(paged=True, spec_decode=2, sampler=Sampler(seed=0)),
+     "spec_decode are mutually exclusive"),
+], ids=["spec+chunk", "paged+chunk", "paged+spec"])
+def test_pair_raises_documented_error(world, kw, msg):
+    cfg, params, f32, _ = world
+    head = SketchHead(cfg=_HEAD_CFG, backend="fused", params=f32)
+    with pytest.raises(ValueError, match=msg):
+        make_engine(params, cfg, n_slots=2, max_seq=16, head=head, **kw)
+
+
+def test_spec_plus_tenant_raises(world):
+    cfg, params, f32, _ = world
+    cache = HeadCache({"tenant-0": f32}.__getitem__, capacity=1)
+    spec = SketchHead(cfg=_HEAD_CFG, backend="fused")
+    with pytest.raises(ValueError,
+                       match="spec_decode and per-tenant heads are mutually "
+                             "exclusive"):
+        make_engine(params, cfg, n_slots=2, max_seq=16, head=spec,
+                    head_cache=cache, **_spec_engine_kw())
+    # The same guard sits in the ServeEngine ctor for hand-built backends.
+    with pytest.raises(ValueError, match="per-tenant heads"):
+        ServeEngine(object(), 2, 16, head_cache=cache, spec_decode=2,
+                    sampler=Sampler(seed=0))
+
+
+def test_tenant_submit_contract(world):
+    cfg, params, f32, _ = world
+    cache = HeadCache({"tenant-0": f32}.__getitem__, capacity=1)
+    spec = SketchHead(cfg=_HEAD_CFG, backend="fused")
+    engine = make_engine(params, cfg, n_slots=1, max_seq=16, head=spec,
+                         head_cache=cache)
+    with pytest.raises(ValueError, match="every submit needs tenant="):
+        engine.submit(_prompts(cfg, 1)[0], 2)
+    plain = make_engine(params, cfg, n_slots=1, max_seq=16,
+                        head=SketchHead(cfg=_HEAD_CFG, backend="fused",
+                                        params=f32))
+    with pytest.raises(ValueError, match="needs a per-tenant engine"):
+        plain.submit(_prompts(cfg, 1)[0], 2, tenant="tenant-0")
+
+
+# ----------------------------------------------------------- compose pairs
+
+@pytest.mark.parametrize("quant", [False, True], ids=["f32", "int8"])
+@pytest.mark.parametrize("knob", ["paged", "chunk", "tenant"],
+                         ids=["paged", "chunk2", "tenant"])
+def test_transparent_knob_composes_with_quant(world, knob, quant):
+    """paged / decode_chunk=2 / per-tenant must leave the (possibly
+    quantized) stream bitwise unchanged — this covers the quant×paged,
+    quant×chunk, quant×tenant pairs and the single-knob rows."""
+    reference = _serve(world, quant=quant)
+    kw = {"paged": dict(paged=True, page_size=4),
+          "chunk": dict(decode_chunk=2, sampler=Sampler(seed=0)),
+          "tenant": dict(tenant=True)}[knob]
+    got = _serve(world, quant=quant, **kw)
+    for a, b in zip(got, reference):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_paged_composes_with_tenant(world):
+    """paged×tenant: the paged pool pages caches, the HeadCache pages
+    heads — together they must still emit the plain engine's stream."""
+    reference = _serve(world)
+    got = _serve(world, tenant=True, paged=True, page_size=4)
+    for a, b in zip(got, reference):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunk_composes_with_tenant(world):
+    """chunk×tenant: the per-slot tenant gather rides inside the K-token
+    megastep scan — stream bitwise equal to the per-token tenant tick."""
+    reference = _serve(world, tenant=True)
+    got = _serve(world, tenant=True, decode_chunk=2,
+                 sampler=Sampler(seed=0))
+    for a, b in zip(got, reference):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spec_composes_with_quant(world):
+    """spec×quant: speculative decode through an int8 draft head still
+    emits the *dense* stream bitwise (acceptance may change, tokens not)."""
+    cfg, params, f32, int8 = world
+    prompts = _prompts(cfg)
+    sampler = Sampler(seed=0)
+    dense = make_engine(params, cfg, n_slots=2, max_seq=16,
+                        head=DenseHead(), sampler=sampler)
+    rids = [dense.submit(p, 4) for p in prompts]
+    want = dense.run()
+    spec = make_engine(params, cfg, n_slots=2, max_seq=16,
+                       head=_head(world, True), sampler=sampler,
+                       spec_decode=2)
+    rids2 = [spec.submit(p, 4) for p in prompts]
+    got = spec.run()
+    for a, b in zip(rids2, rids):
+        np.testing.assert_array_equal(np.asarray(got[a]),
+                                      np.asarray(want[b]))
+
+
+# -------------------------------------------------------------- mesh pairs
+
+@needs_mesh
+@pytest.mark.parametrize("knob", ["paged", "chunk", "tenant", "quant"])
+def test_knob_composes_with_mesh(world, knob):
+    """mesh×{paged, chunk, tenant, quant}: each knob on the 4×2 mesh must
+    reproduce the stream of its own on-mesh reference (the bf16 backbone
+    is not bitwise-stable *across* partitionings, so every comparison
+    stays on the mesh — DESIGN.md §9)."""
+    from repro.launch.mesh import parse_mesh
+
+    mesh = parse_mesh("4x2")
+    if knob == "quant":
+        # quant×mesh: both knobs affect numerics; the invariant is the
+        # engine-vs-engine determinism of the pair itself.
+        a = _serve(world, quant=True, mesh=mesh)
+        b = _serve(world, quant=True, mesh=mesh)
+    else:
+        b = _serve(world, mesh=mesh)
+        kw = {"paged": dict(paged=True, page_size=4),
+              "chunk": dict(decode_chunk=2, sampler=Sampler(seed=0)),
+              "tenant": dict(tenant=True)}[knob]
+        a = _serve(world, mesh=mesh, **kw)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@needs_mesh
+def test_spec_composes_with_mesh(world):
+    """mesh×spec: the on-mesh speculative engine emits the on-mesh dense
+    engine's stream bitwise."""
+    from repro.launch.mesh import parse_mesh, place_serving_state
+
+    cfg, params, f32, _ = world
+    mesh = parse_mesh("4x2")
+    sampler = Sampler(seed=0)
+    head = SketchHead(cfg=_HEAD_CFG, backend="fused", params=f32)
+    placed, head = place_serving_state(params, head, mesh)
+    prompts = _prompts(cfg)
+    dense = make_engine(placed, cfg, n_slots=2, max_seq=16,
+                        head=DenseHead(), sampler=sampler, mesh=mesh)
+    rids = [dense.submit(p, 4) for p in prompts]
+    want = dense.run()
+    spec = make_engine(placed, cfg, n_slots=2, max_seq=16, head=head,
+                       sampler=sampler, spec_decode=2, mesh=mesh)
+    rids2 = [spec.submit(p, 4) for p in prompts]
+    got = spec.run()
+    for a, b in zip(rids2, rids):
+        np.testing.assert_array_equal(np.asarray(got[a]),
+                                      np.asarray(want[b]))

@@ -1,0 +1,337 @@
+"""Per-tenant hot-swappable sketch heads (DESIGN.md §14).
+
+The acceptance bar of the per-tenant redesign:
+
+* **Multi-vs-single-tenant bitwise parity** — a per-tenant engine whose
+  slots are bound to different tenants emits, for every request, exactly
+  the token stream a plain single-tenant engine bound to that request's
+  head emits on the identical workload (same requests, same slots, same
+  sampler PRNG stream) — greedy and seeded, across all three decode
+  backends, and on the forced-CPU 4×2 mesh.
+* **Eviction transparency** — with HeadCache capacity 1 and three tenants
+  interleaved, every bank row is evicted and reloaded mid-stream; the
+  streams still match each tenant's solo run bitwise.
+* **Online refresh** — ``refresh_head`` with ``alphas=`` is the streaming
+  equivalent of ``freeze_head`` over the augmented anchor set (same
+  einsum, so equal up to f32 summation order); ``targets=`` is the
+  residual fold.  The engine's double-buffered ``refresh``/``publish``
+  keeps in-flight decodes bitwise untouched until publish, and a
+  refresh-then-publish on a quantized head matches offline re-freezing
+  the augmented set within quantization tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import HeadCache, Sampler, SketchHead, SketchHeadConfig
+from repro.configs import get_config
+from repro.core.sketch_lm_head import (apply_head, dequantize_head,
+                                       freeze_head, refresh_head)
+from repro.launch.engine import make_engine
+from repro.models.model import init_model
+
+_HEAD_CFG = SketchHeadConfig(n_rows=32, n_buckets=8, k=1, proj_dim=16,
+                             bandwidth=2.0)
+
+
+def _kernel_params(key, d_model, vocab, cfg=_HEAD_CFG, n_points=128):
+    kp, ka, kj = jax.random.split(key, 3)
+    return {
+        "points": jax.random.normal(kp, (n_points, cfg.proj_dim)),
+        "alphas": jax.random.normal(ka, (n_points, vocab)) * 0.01,
+        "proj": jax.random.normal(kj, (d_model, cfg.proj_dim))
+        / np.sqrt(d_model),
+    }
+
+
+def _tenant_archive(cfg, n_tenants, quant=None):
+    """Per-tenant frozen banks sharing one spec (the HeadCache loader's
+    backing store): same kernel params, per-tenant freeze keys — distinct
+    count arrays and hash banks, identical shapes/dtypes."""
+    kparams = _kernel_params(jax.random.PRNGKey(3), cfg.d_model,
+                             cfg.vocab_size)
+    return {f"tenant-{t}": freeze_head(jax.random.PRNGKey(100 + t),
+                                       kparams, _HEAD_CFG, quant=quant)
+            for t in range(n_tenants)}
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params, _tenant_archive(cfg, 3)
+
+
+def _requests(cfg, n, plen=5):
+    return [np.asarray(jax.random.randint(jax.random.PRNGKey(20 + i),
+                                          (plen,), 0, cfg.vocab_size))
+            for i in range(n)]
+
+
+def _run_multi(params, cfg, archive, reqs, tenants, *, backend,
+               sampler=None, capacity=None, n_slots=None, gen=4, mesh=None):
+    spec = SketchHead(cfg=_HEAD_CFG, backend=backend)
+    cache = HeadCache(archive.__getitem__,
+                      capacity=capacity or len(archive))
+    engine = make_engine(params, cfg, n_slots=n_slots or len(reqs),
+                         max_seq=len(reqs[0]) + gen, head=spec,
+                         sampler=sampler, head_cache=cache, mesh=mesh)
+    rids = [engine.submit(p, gen, tenant=t) for p, t in zip(reqs, tenants)]
+    return engine.run(), rids, cache
+
+
+def _run_single(params, cfg, head_params, reqs, *, backend, sampler=None,
+                n_slots=None, gen=4, mesh=None):
+    """The identical workload through a plain engine bound to one head —
+    same requests in the same slots, so the sampler PRNG stream and batch
+    composition match the multi-tenant run exactly."""
+    head = SketchHead(cfg=_HEAD_CFG, backend=backend, params=head_params)
+    engine = make_engine(params, cfg, n_slots=n_slots or len(reqs),
+                         max_seq=len(reqs[0]) + gen, head=head,
+                         sampler=sampler, mesh=mesh)
+    rids = [engine.submit(p, gen) for p in reqs]
+    return engine.run(), rids
+
+
+# ------------------------------------------------- multi-vs-single parity
+
+@pytest.mark.parametrize("backend,sampler_kind", [
+    ("fused", "greedy"), ("two_kernel", "greedy"), ("ref", "greedy"),
+    ("fused", "seeded"),
+])
+def test_multi_tenant_matches_single_tenant(served, backend, sampler_kind):
+    """Each slot decodes through its own tenant's bank: row b of the
+    per-tenant megastep must be bitwise row b of the single-tenant path
+    bound to that tenant — greedy and seeded (the seeded run pins the
+    whole PRNG-threading path: same key splits, same tick count)."""
+    cfg, params, archive = served
+    sampler = (Sampler(temperature=0.8, top_p=0.9, seed=5)
+               if sampler_kind == "seeded" else None)
+    reqs = _requests(cfg, 3)
+    tenants = [f"tenant-{t}" for t in range(3)]
+    multi, rids, cache = _run_multi(params, cfg, archive, reqs, tenants,
+                                    backend=backend, sampler=sampler)
+    assert cache.stats["loads"] == 3 and cache.stats["evictions"] == 0
+    for t, tenant in enumerate(tenants):
+        solo, solo_rids = _run_single(params, cfg, archive[tenant], reqs,
+                                      backend=backend, sampler=sampler)
+        np.testing.assert_array_equal(
+            np.asarray(multi[rids[t]]), np.asarray(solo[solo_rids[t]]),
+            err_msg=f"{backend}/{sampler_kind}: row {t} ({tenant}) diverged "
+                    f"from the single-tenant engine")
+
+
+def test_eviction_and_reload_are_bitwise_transparent(served):
+    """Capacity 1, three tenants interleaved one slot at a time: every
+    request evicts the previous tenant's bank and (re)loads its own, and
+    every stream still matches that tenant's solo engine."""
+    cfg, params, archive = served
+    reqs = _requests(cfg, 6)
+    tenants = [f"tenant-{i % 3}" for i in range(6)]
+    multi, rids, cache = _run_multi(params, cfg, archive, reqs, tenants,
+                                    backend="fused", capacity=1, n_slots=1)
+    assert cache.stats["loads"] == 6           # every admit is a cold miss
+    assert cache.stats["evictions"] == 5
+    for t in range(3):
+        mine = [i for i in range(6) if tenants[i] == f"tenant-{t}"]
+        solo, solo_rids = _run_single(params, cfg, archive[f"tenant-{t}"],
+                                      [reqs[i] for i in mine],
+                                      backend="fused", n_slots=1)
+        for j, i in enumerate(mine):
+            np.testing.assert_array_equal(
+                np.asarray(multi[rids[i]]),
+                np.asarray(solo[solo_rids[j]]),
+                err_msg=f"tenant-{t} request {i} diverged after paging")
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+@pytest.mark.parametrize("backend", ["ref", "fused"])
+def test_multi_tenant_parity_on_mesh(served, backend):
+    """The per-slot tenant gather composes with the 4×2 shard_map head
+    path (count arrays partitioned over ``model``, one psum per step):
+    on-mesh multi-tenant rows == on-mesh single-tenant rows, bitwise."""
+    from repro.launch.mesh import parse_mesh, place_serving_state
+
+    cfg, params, archive = served
+    mesh = parse_mesh("4x2")
+    spec = SketchHead(cfg=_HEAD_CFG, backend=backend,
+                      params=archive["tenant-0"])
+    placed, _ = place_serving_state(params, spec, mesh)
+    reqs = _requests(cfg, 3)
+    tenants = [f"tenant-{t}" for t in range(3)]
+    multi, rids, _ = _run_multi(placed, cfg, archive, reqs, tenants,
+                                backend=backend, mesh=mesh)
+    for t, tenant in enumerate(tenants):
+        _, head_t = place_serving_state(
+            placed, SketchHead(cfg=_HEAD_CFG, backend=backend,
+                               params=archive[tenant]), mesh)
+        solo, solo_rids = _run_single(placed, cfg, head_t.params, reqs,
+                                      backend=backend, mesh=mesh)
+        np.testing.assert_array_equal(
+            np.asarray(multi[rids[t]]), np.asarray(solo[solo_rids[t]]),
+            err_msg=f"mesh/{backend}: row {t} ({tenant}) diverged")
+
+
+# --------------------------------------------------------- online refresh
+
+def test_refresh_alphas_matches_freeze_over_augmented_anchors():
+    """The streaming fold is freeze_head over the augmented anchor set:
+    same hash bank (same key), counts equal up to f32 summation order."""
+    d_model, vocab = 24, 64
+    kparams = _kernel_params(jax.random.PRNGKey(1), d_model, vocab,
+                             n_points=48)
+    head0 = freeze_head(jax.random.PRNGKey(7), kparams, _HEAD_CFG)
+    hidden = jax.random.normal(jax.random.PRNGKey(2), (16, d_model))
+    new_alphas = jax.random.normal(jax.random.PRNGKey(4), (16, vocab)) * 0.05
+    incremental = refresh_head(head0, _HEAD_CFG, hidden, alphas=new_alphas)
+    augmented = freeze_head(jax.random.PRNGKey(7), {
+        "points": jnp.concatenate(
+            [kparams["points"],
+             hidden.astype(jnp.float32) @ kparams["proj"]]),
+        "alphas": jnp.concatenate([kparams["alphas"], new_alphas]),
+        "proj": kparams["proj"],
+    }, _HEAD_CFG)
+    for k in ("proj", "w", "b"):
+        np.testing.assert_array_equal(np.asarray(incremental[k]),
+                                      np.asarray(augmented[k]))
+    np.testing.assert_allclose(np.asarray(incremental["array"]),
+                               np.asarray(augmented["array"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_refresh_targets_is_the_residual_fold():
+    """``targets=`` folds ``lr · (targets − f(hidden))`` — bitwise the
+    ``alphas=`` path fed the residual computed through the ref head."""
+    d_model, vocab = 24, 64
+    kparams = _kernel_params(jax.random.PRNGKey(1), d_model, vocab,
+                             n_points=48)
+    head0 = freeze_head(jax.random.PRNGKey(7), kparams, _HEAD_CFG)
+    hidden = jax.random.normal(jax.random.PRNGKey(2), (8, d_model))
+    targets = jax.random.normal(jax.random.PRNGKey(5), (8, vocab))
+    pred = apply_head(head0, hidden, _HEAD_CFG, backend="ref")
+    via_targets = refresh_head(head0, _HEAD_CFG, hidden, targets=targets,
+                               lr=0.5)
+    via_alphas = refresh_head(head0, _HEAD_CFG, hidden,
+                              alphas=0.5 * (targets - pred))
+    np.testing.assert_array_equal(np.asarray(via_targets["array"]),
+                                  np.asarray(via_alphas["array"]))
+
+
+def test_refresh_rejects_quantized_working_copy():
+    d_model, vocab = 24, 64
+    kparams = _kernel_params(jax.random.PRNGKey(1), d_model, vocab,
+                             n_points=48)
+    head_q = freeze_head(jax.random.PRNGKey(7), kparams, _HEAD_CFG,
+                         quant="int8")
+    hidden = jax.random.normal(jax.random.PRNGKey(2), (4, d_model))
+    alphas = jnp.zeros((4, vocab))
+    with pytest.raises(ValueError, match="dequantize the head first"):
+        refresh_head(head_q, _HEAD_CFG, hidden, alphas=alphas)
+    with pytest.raises(ValueError, match="exactly one of"):
+        refresh_head(dequantize_head(head_q, "int8"), _HEAD_CFG, hidden)
+
+
+def test_inflight_decodes_unchanged_until_publish(served):
+    """Double buffering: refreshes accumulate in the shadow copy; the
+    published bank row — and therefore every decode — stays bitwise
+    unchanged until ``publish`` commits, at which point new decodes serve
+    the folded head exactly as a fresh engine loading it would."""
+    cfg, params, archive = served
+    reqs = _requests(cfg, 1)
+    gen = 8
+    baseline, rids, _ = _run_multi(params, cfg, archive, reqs, ["tenant-0"],
+                                   backend="fused", gen=gen)
+
+    spec = SketchHead(cfg=_HEAD_CFG, backend="fused")
+    cache = HeadCache(archive.__getitem__, capacity=1)
+    engine = make_engine(params, cfg, n_slots=1, max_seq=len(reqs[0]) + gen,
+                         head=spec, head_cache=cache)
+    rid = engine.submit(reqs[0], gen, tenant="tenant-0")
+    engine.step()
+    engine.step()
+    hidden = jax.random.normal(jax.random.PRNGKey(9), (32, cfg.d_model))
+    alphas = jax.random.normal(jax.random.PRNGKey(11), (32, cfg.vocab_size))
+    engine.refresh("tenant-0", hidden, alphas=alphas)
+    out = engine.run()
+    np.testing.assert_array_equal(np.asarray(out[rid]),
+                                  np.asarray(baseline[rids[0]]))
+    np.testing.assert_array_equal(                  # bank row untouched too
+        np.asarray(cache.tenant_params("tenant-0")["array"]),
+        np.asarray(archive["tenant-0"]["array"]))
+
+    engine.publish("tenant-0")
+    published = cache.tenant_params("tenant-0")
+    assert not np.array_equal(np.asarray(published["array"]),
+                              np.asarray(archive["tenant-0"]["array"]))
+    rid2 = engine.submit(reqs[0], gen, tenant="tenant-0")
+    after = engine.run()
+    fresh, fresh_rids, _ = _run_multi(
+        params, cfg, {"tenant-0": published}, reqs, ["tenant-0"],
+        backend="fused", gen=gen)
+    np.testing.assert_array_equal(np.asarray(after[rid2]),
+                                  np.asarray(fresh[fresh_rids[0]]))
+    assert engine.stats["refreshes"] == 1 and engine.stats["publishes"] == 1
+
+
+def test_quantized_refresh_publish_matches_offline_refreeze(served):
+    """On an int8 archive the engine dequantizes into the f32 shadow,
+    folds, and re-quantizes on publish — the published head's logits must
+    track offline re-freezing the augmented anchor set with quant="int8"
+    within quantization tolerance (the base counts round-trip int8 once,
+    so bitwise equality is not available; argmax agreement is)."""
+    cfg, params, _ = served
+    kparams = _kernel_params(jax.random.PRNGKey(3), cfg.d_model,
+                             cfg.vocab_size)
+    archive = {"tenant-0": freeze_head(jax.random.PRNGKey(100), kparams,
+                                       _HEAD_CFG, quant="int8")}
+    spec = SketchHead(cfg=_HEAD_CFG, backend="fused", quant="int8")
+    cache = HeadCache(archive.__getitem__, capacity=1)
+    engine = make_engine(params, cfg, n_slots=1, max_seq=16, head=spec,
+                         head_cache=cache)
+    engine.submit(_requests(cfg, 1)[0], 2, tenant="tenant-0")
+    engine.run()
+
+    hidden = jax.random.normal(jax.random.PRNGKey(9), (24, cfg.d_model))
+    alphas = jax.random.normal(jax.random.PRNGKey(11),
+                               (24, cfg.vocab_size)) * 0.01
+    engine.refresh("tenant-0", hidden, alphas=alphas)
+    engine.publish("tenant-0")
+    published = cache.tenant_params("tenant-0")
+
+    offline = freeze_head(jax.random.PRNGKey(100), {
+        "points": jnp.concatenate(
+            [kparams["points"],
+             hidden.astype(jnp.float32) @ kparams["proj"]]),
+        "alphas": jnp.concatenate([kparams["alphas"], alphas]),
+        "proj": kparams["proj"],
+    }, _HEAD_CFG, quant="int8")
+    probe = jax.random.normal(jax.random.PRNGKey(13), (32, cfg.d_model))
+    got = np.asarray(apply_head(published, probe, _HEAD_CFG, backend="ref",
+                                quant="int8"))
+    want = np.asarray(apply_head(offline, probe, _HEAD_CFG, backend="ref",
+                                 quant="int8"))
+    # One extra int8 round-trip of the base counts bounds the drift at the
+    # quantization step size; argmax agreement is the serving-level bar.
+    assert np.mean(np.abs(got - want)) < 2e-3, np.mean(np.abs(got - want))
+    agree = np.mean(got.argmax(-1) == want.argmax(-1))
+    assert agree >= 0.9, agree
+
+
+def test_refresh_requires_per_tenant_engine(served):
+    cfg, params, archive = served
+    head = SketchHead(cfg=_HEAD_CFG, backend="fused",
+                      params=archive["tenant-0"])
+    engine = make_engine(params, cfg, n_slots=1, max_seq=16, head=head)
+    with pytest.raises(ValueError, match="per-tenant engine"):
+        engine.refresh("tenant-0", jnp.zeros((1, cfg.d_model)),
+                       alphas=jnp.zeros((1, cfg.vocab_size)))
+    with pytest.raises(ValueError, match="no pending refresh"):
+        spec = SketchHead(cfg=_HEAD_CFG, backend="fused")
+        cache = HeadCache(archive.__getitem__, capacity=1)
+        per_tenant = make_engine(params, cfg, n_slots=1, max_seq=16,
+                                 head=spec, head_cache=cache)
+        per_tenant.publish("tenant-0")
